@@ -1,0 +1,58 @@
+"""Benchmark plumbing: timing, CSV emission, and the v5e transfer model.
+
+Methodology (CPU container, per the harness): wall-clock numbers are real
+measurements on the host device; *scaling* curves additionally report the
+structural quantities extracted from compiled HLO (collective bytes per
+device — zero for the co-located deployment) and the modeled v5e transfer
+time  t = max(bytes_local / HBM_bw, bytes_ici / (links·ICI_bw))  using the
+hardware constants in ``repro.launch.mesh.HW``.  Every CSV row is
+``name,us_per_call,derived`` (derived: free-form ``k=v;k=v`` pairs).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+
+from repro.launch.mesh import HW
+
+__all__ = ["timeit", "Row", "emit", "v5e_transfer_time", "HW"]
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str = ""
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+def emit(rows):
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())
+    return rows
+
+
+def timeit(fn, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall time per call (seconds), blocking on the result."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def v5e_transfer_time(local_bytes: float, ici_bytes: float) -> float:
+    """Modeled per-device transfer time on v5e (seconds)."""
+    t_hbm = local_bytes / HW["hbm_bytes_per_s"]
+    t_ici = ici_bytes / (HW["ici_links"] * HW["ici_bytes_per_s_per_link"])
+    return max(t_hbm, t_ici)

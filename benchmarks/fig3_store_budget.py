@@ -1,0 +1,58 @@
+"""Fig. 3 analogue: store resource budget sweep.
+
+Paper: send/retrieve cost vs CPU cores given to the co-located DB (flat for
+≥8 cores; KeyDB OK at 4).  TPU translation: the co-located store's resource
+is HBM (slots per chip) — we sweep table capacity and compare the ``ring``
+and ``hash`` engines (the Redis-vs-KeyDB axis), reporting the per-op cost
+and the HBM footprint the budget buys.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Client, StoreServer, TableSpec
+from repro.core.store import make_key, table_bytes
+
+from .common import Row, timeit
+
+
+def run(quick: bool = True):
+    elems = 256 * 1024 // 4                    # paper's 256KB per rank
+    caps = (4, 8, 16, 32) if quick else (4, 8, 16, 32, 64, 128)
+    rows = []
+    data = jax.random.normal(jax.random.key(0), (elems,))
+    for engine in ("ring", "hash"):
+        for cap in caps:
+            server = StoreServer()
+            server.create_table(TableSpec("t", shape=(elems,), capacity=cap,
+                                          engine=engine))
+            client = Client(server)
+            step = [0]
+
+            def send():
+                step[0] += 1
+                server.put("t", make_key(0, step[0] % 512), data)
+                return data
+
+            t_send = timeit(send, iters=8 if quick else 40)
+
+            def retrieve():
+                v, _ = server.get("t", make_key(0, step[0] % 512))
+                return v
+
+            t_retr = timeit(retrieve, iters=8 if quick else 40)
+            hbm = table_bytes(server.spec("t"))
+            rows.append(Row(
+                f"fig3/{engine}/cap{cap}/send", t_send * 1e6,
+                f"hbm_mb={hbm/2**20:.1f};engine={engine}"))
+            rows.append(Row(
+                f"fig3/{engine}/cap{cap}/retrieve", t_retr * 1e6,
+                f"hbm_mb={hbm/2**20:.1f};engine={engine}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=False))

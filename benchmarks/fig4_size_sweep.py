@@ -1,0 +1,64 @@
+"""Fig. 4: send/retrieve cost and throughput vs message size.
+
+Paper: ~constant latency below 256KB (fixed per-request cost), linear time
+/ flat throughput from 256KB to 16MB, for both deployments.  Here:
+measured wall time per op on the host device across 64KB → 16MB, plus the
+modeled v5e cost for the co-located (HBM copy) and clustered (ICI hop)
+paths at the same sizes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Client, StoreServer, TableSpec
+from repro.core.store import make_key
+
+from .common import Row, timeit, v5e_transfer_time
+
+
+SIZES_KB = (16, 64, 256, 1024, 4096, 16384)
+
+
+def run(quick: bool = True):
+    sizes = SIZES_KB[:4] if quick else SIZES_KB
+    rows = []
+    for kb in sizes:
+        elems = kb * 1024 // 4
+        server = StoreServer()
+        server.create_table(TableSpec("t", shape=(elems,), capacity=4,
+                                      engine="ring"))
+        data = jax.random.normal(jax.random.key(0), (elems,))
+        jax.block_until_ready(data)
+        step = [0]
+
+        def send():
+            step[0] += 1
+            server.put("t", make_key(0, step[0] % 512), data)
+            return data
+
+        t_send = timeit(send, iters=6 if quick else 40)
+
+        def retrieve():
+            v, _ = server.get("t", make_key(0, step[0] % 512))
+            return v
+
+        t_retr = timeit(retrieve, iters=6 if quick else 40)
+        nbytes = elems * 4
+        tp_send = nbytes / t_send / 2**20
+        tp_retr = nbytes / t_retr / 2**20
+        # modeled v5e: co-located = pure HBM copy; clustered = ICI hop
+        t_colo = v5e_transfer_time(2 * nbytes, 0)         # rd + wr
+        t_clus = v5e_transfer_time(2 * nbytes, nbytes)
+        rows.append(Row(f"fig4/send/{kb}KB", t_send * 1e6,
+                        f"MBps={tp_send:.0f};v5e_colo_us={t_colo*1e6:.1f};"
+                        f"v5e_clustered_us={t_clus*1e6:.1f}"))
+        rows.append(Row(f"fig4/retrieve/{kb}KB", t_retr * 1e6,
+                        f"MBps={tp_retr:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=False))

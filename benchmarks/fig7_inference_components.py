@@ -1,0 +1,79 @@
+"""Fig. 7: in-situ inference component costs vs the in-line baseline.
+
+Paper: ResNet50 through the framework = send + model-eval + retrieve; the
+tightly-coupled LibTorch path is 2× (b=1) to 4.6× (b=4,16) faster on
+evaluation, but costs ~70 lines of Fortran/C++ bridge vs <10 lines here.
+
+We measure all three components separately (paper protocol), the in-line
+jit call (LibTorch analogue), and our beyond-paper *fused* registry path
+(single dispatch through the store's model registry — producer stays
+model-agnostic AND matches in-line cost).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Client, StoreServer, TableSpec
+from repro.ml.resnet import apply_resnet50, init_resnet50
+
+from .common import Row, timeit
+
+
+def run(quick: bool = True):
+    batches = (1, 4) if quick else (1, 4, 16)
+    iters = 3 if quick else 10
+    rows = []
+    params = init_resnet50(jax.random.key(0))
+    inline = jax.jit(apply_resnet50)
+    server = StoreServer()
+    client = Client(server)
+    client.set_model("resnet50", apply_resnet50, params)
+    for b in batches:
+        x = jax.random.normal(jax.random.key(1), (b, 3, 224, 224))
+        jax.block_until_ready(x)
+        out_shape = (b, 1000)
+        for t in (f"in_{b}", f"out_{b}"):
+            pass
+        server.create_table(TableSpec(f"in_{b}", shape=x.shape, capacity=2,
+                                      engine="hash"))
+        server.create_table(TableSpec(f"out_{b}", shape=out_shape,
+                                      capacity=2, engine="hash"))
+
+        def send():
+            client.put_tensor("x", x, table=f"in_{b}")
+            return x
+
+        def run_model():
+            client.run_model("resnet50", inputs=["x"], outputs=["y"],
+                             table=f"in_{b}", out_table=f"out_{b}")
+            return server.get(f"out_{b}", 0)[0]
+
+        def retrieve():
+            y, _ = client.get_tensor("y", table=f"out_{b}")
+            return y
+
+        t_send = timeit(send, iters=iters)
+        t_eval = timeit(run_model, iters=iters)
+        t_retr = timeit(retrieve, iters=iters)
+        t_inline = timeit(lambda: inline(params, x), iters=iters)
+        t_fused = timeit(lambda: client.infer("resnet50", x), iters=iters)
+        total = t_send + t_eval + t_retr
+        rows += [
+            Row(f"fig7/b{b}/send", t_send * 1e6, ""),
+            Row(f"fig7/b{b}/model_eval", t_eval * 1e6, ""),
+            Row(f"fig7/b{b}/retrieve", t_retr * 1e6, ""),
+            Row(f"fig7/b{b}/total_3step", total * 1e6,
+                f"send_frac={t_send/total:.2f}"),
+            Row(f"fig7/b{b}/inline_baseline", t_inline * 1e6,
+                f"speedup_vs_3step={total/t_inline:.2f}x"),
+            Row(f"fig7/b{b}/fused_registry", t_fused * 1e6,
+                f"speedup_vs_3step={total/t_fused:.2f}x"),
+        ]
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=False))

@@ -1,0 +1,72 @@
+"""Fig. 8: weak + strong scaling of in-situ inference (co-located).
+
+Paper: weak scaling (fixed per-rank batch) is perfectly flat; strong
+scaling of model evaluation degrades at small per-rank batch but the total
+(transfer + eval) stays linear because the transfer shrinks 1/N.
+
+Methodology here: the co-located deployment is embarrassingly parallel
+(zero collective bytes — fig5's structural proof covers inference traffic
+too), so per-device cost is the single-device cost at the per-device batch.
+We measure eval+transfer vs batch on the host and project the curves.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import Client, StoreServer, TableSpec
+from repro.ml.resnet import apply_resnet50, init_resnet50
+
+from .common import Row, timeit
+
+
+def _eval_time_vs_batch(batches, iters):
+    params = init_resnet50(jax.random.key(0))
+    fn = jax.jit(apply_resnet50)
+    out = {}
+    for b in batches:
+        x = jax.random.normal(jax.random.key(1), (b, 3, 224, 224))
+        out[b] = timeit(lambda: fn(params, x), iters=iters)
+    return out
+
+
+def run(quick: bool = True):
+    batches = (1, 2, 4) if quick else (1, 2, 4, 8, 16)
+    iters = 3 if quick else 8
+    t_eval = _eval_time_vs_batch(batches, iters)
+    rows = []
+    base_b = max(batches)
+    # weak scaling: per-device batch fixed at base_b → flat by construction
+    for n in (1, 4, 16, 64, 256):
+        rows.append(Row(
+            f"fig8/weak/{n}dev", t_eval[base_b] * 1e6,
+            f"per_dev_batch={base_b};collective_bytes=0;flat=true"))
+    # strong scaling: global batch fixed at base_b × 16; per-device shrinks.
+    # Paper's observation: eval efficiency degrades at small batch but the
+    # per-device transfer shrinks 1/N, so the TOTAL stays near-linear —
+    # reproduce with the measured per-image transfer cost folded in.
+    global_b = base_b * 16
+    img_bytes = 3 * 224 * 224 * 4
+    from .common import v5e_transfer_time
+    # measured host transfer time per image (send+retrieve), amortized:
+    t_xfer_per_img = 2 * 0.45e-3      # ~0.45 ms/op measured in fig4 regime
+    for n in (16, 32, 64, 128, 256):
+        per = max(1, global_b // n)
+        nearest = min(batches, key=lambda b: abs(b - per))
+        t_ev = t_eval[nearest] * per / nearest
+        t_tr = t_xfer_per_img * per
+        t_total = t_ev + t_tr
+        base_total = (t_eval[base_b] + t_xfer_per_img * base_b) \
+            * global_b / base_b
+        eff_ev = (t_eval[base_b] * global_b / base_b) / (n * t_ev)
+        eff_tot = base_total / (n * t_total)
+        rows.append(Row(
+            f"fig8/strong/{n}dev", t_total * 1e6,
+            f"per_dev_batch={per};eval_eff={eff_ev:.2f};"
+            f"total_eff={eff_tot:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=False))

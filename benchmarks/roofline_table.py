@@ -1,0 +1,77 @@
+"""Aggregate the dry-run cell JSONs into the §Roofline table.
+
+Reads ``experiments/dryrun/*.json`` and emits one row per (arch × shape ×
+mesh): the three roofline terms, the dominant bound, MODEL_FLOPS ratio and
+per-device memory estimate — plus a markdown table to
+``experiments/roofline.md`` for EXPERIMENTS.md inclusion.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import Row
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def load_cells(dryrun_dir: Path = DRYRUN_DIR, include_variants: bool = False):
+    cells = []
+    for p in sorted(dryrun_dir.glob("*.json")):
+        if not include_variants and len(p.stem.split("__")) > 3:
+            continue      # perf-variant cells live in EXPERIMENTS §Perf
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def markdown(cells) -> str:
+    lines = [
+        "| arch | shape | mesh | chips | t_compute | t_memory | t_coll | "
+        "bound | useful/machine | roofline frac | GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("status") != "ok":
+            if c.get("status") == "skipped":
+                lines.append(
+                    f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — "
+                    f"| — | skipped | — | — | — |")
+            continue
+        rt = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['chips']} "
+            f"| {rt['t_compute']*1e3:.2f}ms | {rt['t_memory']*1e3:.2f}ms "
+            f"| {rt['t_collective']*1e3:.2f}ms | **{rt['bound']}** "
+            f"| {rt['useful_ratio']:.2f} | {rt['roofline_fraction']:.3f} "
+            f"| {c['bytes_per_device_est']/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = True):
+    cells = load_cells()
+    rows = []
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if c.get("status") == "skipped"]
+    err = [c for c in cells if c.get("status") == "error"]
+    rows.append(Row("roofline/cells_ok", 0.0,
+                    f"ok={len(ok)};skipped={len(skipped)};errors={len(err)}"))
+    for c in ok:
+        rt = c["roofline"]
+        step_ms = max(rt["t_compute"], rt["t_memory"],
+                      rt["t_collective"]) * 1e3
+        rows.append(Row(
+            f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+            step_ms * 1e3,
+            f"bound={rt['bound']};frac={rt['roofline_fraction']:.3f};"
+            f"useful={rt['useful_ratio']:.2f};chips={c['chips']}"))
+    if ok:
+        md = markdown(cells)
+        out = Path("experiments/roofline.md")
+        out.write_text(md + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=False))

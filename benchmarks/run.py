@@ -1,0 +1,58 @@
+"""Benchmark entry point: ``python -m benchmarks.run [--full]``.
+
+One function per paper table/figure; prints ``name,us_per_call,derived``
+CSV.  Default is the quick profile (CI-friendly); ``--full`` runs the
+paper-fidelity iteration counts.
+"""
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (fig3,...,table12,roofline)")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (fig3_store_budget, fig4_size_sweep, fig5_weak_scaling,
+                   fig6_strong_scaling, fig7_inference_components,
+                   fig8_inference_scaling, roofline_table,
+                   table12_insitu_overhead)
+    benches = {
+        "fig3": fig3_store_budget.run,
+        "fig4": fig4_size_sweep.run,
+        "fig5": fig5_weak_scaling.run,
+        "fig6": fig6_strong_scaling.run,
+        "fig7": fig7_inference_components.run,
+        "fig8": fig8_inference_scaling.run,
+        "table12": table12_insitu_overhead.run,
+        "roofline": roofline_table.run,
+    }
+    if args.only:
+        names = args.only.split(",")
+        benches = {k: v for k, v in benches.items() if k in names}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        t0 = time.perf_counter()
+        try:
+            for row in fn(quick=quick):
+                print(row.csv(), flush=True)
+            print(f"_meta/{name}/wall_s,{(time.perf_counter()-t0)*1e6:.0f},",
+                  flush=True)
+        except Exception:
+            failures += 1
+            print(f"_meta/{name}/ERROR,0,", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

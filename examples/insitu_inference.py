@@ -1,0 +1,58 @@
+"""In-situ inference (paper §3.2 + Fig. 1b): a simulation evaluates an ML
+model through the store at runtime, staying agnostic of its structure.
+
+Run:  PYTHONPATH=src python examples/insitu_inference.py
+
+* Loads ResNet50 (the paper's benchmark model) into the ModelRegistry.
+* A reproducer loop emulates the solver: integrate (sleep) → send inference
+  data → run_model → retrieve predictions, every step.
+* Compares the paper's 3-step protocol against the in-line (LibTorch
+  analogue) call and our fused registry path, reproducing Fig. 7's
+  trade-off: the loosely-coupled path costs more per call, but the
+  integration is ~5 lines and framework-agnostic.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Client, StoreServer, TableSpec
+from repro.core.telemetry import Timers
+from repro.ml.resnet import apply_resnet50, init_resnet50
+from repro.sim.reproducer import ReproducerConfig, run_inference
+
+BATCH = 2
+
+print("initializing ResNet50 (paper's inference benchmark model)...")
+params = init_resnet50(jax.random.key(0))
+server = StoreServer()
+client = Client(server)
+client.set_model("resnet50", apply_resnet50, params)
+
+x = jax.random.normal(jax.random.key(1), (BATCH, 3, 224, 224))
+cfg = ReproducerConfig(n_ranks=1, iterations=5, warmup=1, compute_s=0.02)
+
+print(f"\n-- three-step protocol (paper Fig. 1b), batch={BATCH} --")
+timers = run_inference(cfg, server, "resnet50", x, fused=False)
+print(timers.table())
+
+print("\n-- fused registry path (beyond-paper single dispatch) --")
+timers_fused = run_inference(cfg, server, "resnet50", x, fused=True)
+print(timers_fused.table())
+
+print("\n-- in-line baseline (tightly-coupled LibTorch analogue) --")
+inline = jax.jit(apply_resnet50)
+t = Timers()
+jax.block_until_ready(inline(params, x))
+for _ in range(5):
+    with t.time("inline_eval") as box:
+        box[0] = inline(params, x)
+print(t.table())
+
+total_3step = (timers.mean("send") + timers.mean("model_eval")
+               + timers.mean("retrieve"))
+print(f"\n3-step total {total_3step*1e3:.1f} ms vs in-line "
+      f"{t.mean('inline_eval')*1e3:.1f} ms "
+      f"({total_3step/t.mean('inline_eval'):.2f}x — paper saw 2–4.6x) "
+      f"vs fused {timers_fused.mean('model_eval')*1e3:.1f} ms")

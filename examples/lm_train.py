@@ -1,0 +1,62 @@
+"""LM training example: train a ~100M-param dense model for a few hundred
+steps on the synthetic structured corpus, with checkpoint/restart and
+in-situ hidden-state capture.
+
+Run:  PYTHONPATH=src python examples/lm_train.py [--steps 300]
+
+The model is the starcoder2 family at ~100M scale (8 layers, d=512) — the
+same code path the production configs lower onto the 256-chip mesh.  The
+corpus has a deterministic next-token rule, so the loss falling toward 0
+demonstrates real learning, not just plumbing.  Halfway through, the run
+"crashes" and restarts from the latest async checkpoint to demonstrate the
+fault-tolerance path.
+"""
+
+import argparse
+import dataclasses
+import shutil
+import tempfile
+
+import jax.numpy as jnp
+
+from repro.configs.registry import get_smoke_config
+from repro.launch.train import run
+from repro.models.config import ModelConfig
+
+
+def config_100m() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-100m", family="dense",
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=2,
+        d_ff=2048, vocab=8192,
+        pattern=(("attn", "mlp"),), mlp_act="gelu", norm="layernorm",
+        attn_chunk=256, remat=False, dtype=jnp.float32)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    args = ap.parse_args()
+
+    import repro.configs.registry as registry
+    # register the 100M config under a local name
+    import sys
+    import types
+    mod = types.ModuleType("repro.configs.starcoder2_100m")
+    mod.config = config_100m
+    mod.smoke_config = config_100m
+    sys.modules["repro.configs.starcoder2_100m"] = mod
+
+    ckpt_dir = tempfile.mkdtemp(prefix="lm100m_ckpt_")
+    half = args.steps // 2
+    print(f"=== phase 1: train {half} steps (async ckpt every 50) ===")
+    run("starcoder2_100m", steps=half, batch=args.batch,
+        seq_len=args.seq_len, ckpt_dir=ckpt_dir, ckpt_every=50,
+        capture=True)
+    print("\n=== simulated failure; phase 2: restart from checkpoint ===")
+    run("starcoder2_100m", steps=args.steps, batch=args.batch,
+        seq_len=args.seq_len, ckpt_dir=ckpt_dir, ckpt_every=50,
+        resume=True)
+    shutil.rmtree(ckpt_dir, ignore_errors=True)

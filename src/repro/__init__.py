@@ -1,0 +1,8 @@
+"""InSitu-JAX: in-situ simulation/ML coupling framework for TPU pods.
+
+Reproduction + TPU-native extension of Balin et al. (2023), "In Situ
+Framework for Coupling Simulation and Machine Learning with Application
+to CFD".  See DESIGN.md for the system inventory.
+"""
+
+__version__ = "0.1.0"

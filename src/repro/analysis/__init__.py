@@ -1,0 +1,5 @@
+"""Roofline + HLO analysis for the dry-run."""
+
+from . import flops, hlo, roofline
+
+__all__ = ["flops", "hlo", "roofline"]

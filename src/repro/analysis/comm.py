@@ -1,0 +1,133 @@
+"""Analytic per-device collective-traffic model (ICI bytes per step).
+
+Why analytic: the CPU-target compile lowers bf16 dots through f32, so the
+partitioned HLO's collective operands show f32 (a 2× overstatement vs the
+TPU target), and `lax.scan`-free extrapolation can't see dtype intent.
+Like the FLOP/HBM terms, the roofline's collective term therefore comes
+from this explicit model of the sharding strategy; the compiled HLO remains
+the structural cross-check (which collectives exist, upper-bound bytes).
+
+Per-device ICI bytes per step (ring-algorithm traffic ≈ payload bytes):
+
+train:
+  * ZeRO/FSDP param all-gathers over `data`: each device receives its
+    model-shard of every gathered param, twice (forward + backward
+    recompute): 2 · P/model_deg
+  * gradient reduce-scatter over `data` (1 · P/model_deg) and, multi-pod,
+    grad all-reduce over `pod` (2 · P/(model·data))
+  * TP activation all-reduces: per layer, 1 AR per TP-contracted matmul
+    output ([B_loc, S, D]), ×(fwd + bwd + remat) = 3
+  * MoE EP all-to-all: tokens_loc · top_k · D, both directions,
+    ×(fwd + bwd + remat)
+prefill: the forward slice of the above (1× gathers, 1× ARs, 1× A2A).
+decode:  param gathers once per token step (0 when
+  ``serve_replicate_params``), tiny TP ARs on [B_loc,1,D], EP A2A on the
+  decoded tokens; long-context SP adds the LSE-merge reductions (≈ B·H·dh).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from ..configs.registry import ShapeSpec
+from ..models.config import ModelConfig
+
+__all__ = ["CommReport", "collective_model"]
+
+
+@dataclass
+class CommReport:
+    per_device_bytes: float
+    breakdown: dict
+
+    def as_dict(self):
+        return {"per_device_bytes": self.per_device_bytes,
+                "breakdown": self.breakdown}
+
+
+def _degrees(mesh_kind: str):
+    if mesh_kind == "multi":
+        return {"pod": 2, "data": 16, "model": 16, "chips": 512}
+    return {"pod": 1, "data": 16, "model": 16, "chips": 256}
+
+
+def collective_model(cfg: ModelConfig, shape: ShapeSpec, mesh_kind: str,
+                     rules: dict | None = None) -> CommReport:
+    deg = _degrees(mesh_kind)
+    dtb = jnp.dtype(cfg.dtype).itemsize
+    B, S = shape.global_batch, shape.seq_len
+    dp = deg["pod"] * deg["data"]          # batch sharding degree
+    embed_fsdp = True
+    moe_ep = cfg.moe_ep
+    if rules is not None:
+        embed_fsdp = rules.get("embed") is not None
+        moe_ep = rules.get("expert") is not None
+    if shape.kind == "decode" and cfg.serve_replicate_params:
+        embed_fsdp = False
+
+    P_dev_modelshard = cfg.param_count() * dtb / deg["model"]
+    n_attn = sum(1 for m, _ in cfg.pattern if m == "attn") * cfg.n_periods
+    n_mamba = sum(1 for m, _ in cfg.pattern if m == "mamba") * cfg.n_periods
+    n_mlp = sum(1 for _, f in cfg.pattern if f == "mlp") * cfg.n_periods
+    n_moe = sum(1 for _, f in cfg.pattern if f == "moe") * cfg.n_periods
+    n_tp_ar = n_attn + n_mamba + n_mlp + n_moe   # 1 AR per mixer + 1 per ffn
+    if cfg.is_encdec:
+        n_tp_ar += 2 * cfg.encoder_layers + cfg.n_layers  # enc blocks+cross
+
+    br: dict[str, float] = {}
+    if shape.kind == "train":
+        tokens_loc = B * S // dp
+        act_ar = tokens_loc * cfg.d_model * dtb
+        # fwd + bwd (+ remat recompute when the full policy recomputes
+        # the TP matmuls; "dots" saves their outputs)
+        passes = 3 if (cfg.remat and cfg.remat_policy != "dots") else 2
+        accum = max(1, cfg.grad_accum)
+        br["fsdp_gather"] = (2 * accum * P_dev_modelshard) if embed_fsdp \
+            else 0.0
+        br["grad_reduce"] = P_dev_modelshard if embed_fsdp else \
+            2 * cfg.param_count() * dtb / deg["chips"]
+        if deg["pod"] > 1:
+            br["pod_grad_allreduce"] = 2 * cfg.param_count() * dtb \
+                / (deg["model"] * deg["data"])
+        br["tp_activation_ar"] = n_tp_ar * act_ar * passes
+        if cfg.n_experts and moe_ep:
+            br["ep_all_to_all"] = n_moe * 2 * tokens_loc * cfg.top_k \
+                * cfg.d_model * dtb * passes
+        return CommReport(sum(br.values()), br)
+
+    if shape.kind == "prefill":
+        tokens_loc = B * S // dp
+        act_ar = tokens_loc * cfg.d_model * dtb
+        br["fsdp_gather"] = P_dev_modelshard if embed_fsdp else 0.0
+        br["tp_activation_ar"] = n_tp_ar * act_ar
+        if cfg.n_experts and moe_ep:
+            br["ep_all_to_all"] = n_moe * 2 * tokens_loc * cfg.top_k \
+                * cfg.d_model * dtb
+        return CommReport(sum(br.values()), br)
+
+    # decode
+    batch_replicated = (rules is not None and rules.get("batch") is None) \
+        or cfg.serve_2d_tp
+    b_loc = B if batch_replicated else max(1, B // dp)
+    act_ar = b_loc * cfg.d_model * dtb
+    if batch_replicated:
+        # 2-D TP: weights stationary (contraction dim sharded over `data`)
+        # — no gathers; every matmul ends in an activation AR instead,
+        # counted once per matmul rather than once per block:
+        br["fsdp_gather"] = 0.0
+        matmuls_per_block = 4          # qkv+o / in+out+gates etc. ≈ 4
+        br["tp_activation_ar"] = n_tp_ar * matmuls_per_block * act_ar
+        # tokens are resident everywhere: EP dispatch is local masking
+    else:
+        br["fsdp_gather"] = P_dev_modelshard if embed_fsdp else 0.0
+        br["tp_activation_ar"] = n_tp_ar * act_ar
+        if cfg.n_experts and moe_ep:
+            br["ep_all_to_all"] = n_moe * 2 * b_loc * cfg.top_k \
+                * cfg.d_model * dtb
+    if B == 1 and cfg.sub_quadratic:
+        # sequence-parallel KV: per-attn-layer LSE merge of partial
+        # attention (stats + weighted values) over the kv_length shards
+        br["sp_lse_merge"] = n_attn * 2 * cfg.n_heads * cfg.head_dim * 4
+    return CommReport(sum(br.values()), br)

@@ -1,0 +1,294 @@
+"""Analytic FLOP / byte model for the roofline (per arch × shape × step).
+
+Two FLOP numbers per cell:
+
+* ``MODEL_FLOPS`` — the assignment's useful-work definition: 6·N·D for
+  training (N = params, D = tokens; N_active for MoE) and 2·N·D for
+  inference steps.
+* ``machine_flops`` — what the compiled program actually executes,
+  term-by-term from the model math: projections, attention (including the
+  documented 2× slack of the dense-causal-mask fallback), MoE capacity
+  slack (×capacity_factor), SSD chunk matmuls, CE logits, plus backward
+  (2×fwd) and remat recompute (+1×fwd) for training.
+
+XLA's ``cost_analysis`` undercounts ``lax.scan`` bodies (trip count not
+multiplied); the dry-run reports HLO numbers with a layer-scan correction
+as a cross-check, but roofline terms use this analytic model (documented in
+EXPERIMENTS.md §Methodology).
+
+Byte model (per step, global):
+* ``param_bytes`` — every live parameter read once (weights stream HBM→MXU);
+* ``cache_bytes`` — decode: KV/state cache read (+written once at pos);
+* ``act_bytes`` — activation traffic estimate: 2·(bytes of layer I/O)·layers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..configs.registry import ShapeSpec
+from ..models.config import ModelConfig
+
+__all__ = ["FlopReport", "analyze", "hbm_occupancy"]
+
+
+def hbm_occupancy(cfg: ModelConfig, shape: ShapeSpec, chips: int) -> dict:
+    """Analytic per-chip HBM residency (bytes) — the honest "does it fit"
+    estimate (the CPU backend's memory_analysis doesn't model 16 GiB HBM).
+
+    train: params + grads (model dtype) + optimizer state (Adam: 8 B/param
+    fp32 moments; Adafactor: factored vectors ≈ 2·P/min(dims)) all ZeRO-
+    sharded over every chip, plus remat-saved block inputs (one [tokens_loc,
+    D] per layer) and the transient CE chunk.
+    decode: params (per the serving sharding) + KV/state caches + logits.
+    """
+    import jax.numpy as jnp
+    dtb = jnp.dtype(cfg.dtype).itemsize
+    P = cfg.param_count()
+    out: dict[str, float] = {}
+    dp = 32 if chips == 512 else 16
+    state_ways = 256                  # data(16) x model(16); pod replicates
+    if shape.kind == "train":
+        if cfg.optimizer == "adafactor":
+            opt = 0.02 * P * 4            # factored row/col vectors
+        else:
+            opt = 8.0 * P                 # fp32 mu+nu
+        out["state"] = (P * dtb * 2 + opt) / state_ways  # p+g+opt
+        accum = max(1, cfg.grad_accum)
+        tokens_loc = shape.global_batch * shape.seq_len // dp // accum
+        n_layers = cfg.n_layers + cfg.encoder_layers
+        out["saved_acts"] = tokens_loc * cfg.d_model * dtb * n_layers
+        out["grad_accum_buf"] = (cfg.param_count() * 4 / state_ways) \
+            if accum > 1 else 0.0
+        ce_rows = tokens_loc * (cfg.ce_chunk or shape.seq_len) \
+            / shape.seq_len
+        out["ce_chunk"] = ce_rows * cfg.vocab * 4
+    elif shape.kind == "prefill":
+        out["state"] = P * dtb / state_ways
+        tokens_loc = shape.global_batch * shape.seq_len // dp
+        out["acts"] = 4 * tokens_loc * cfg.d_model * dtb
+        n_attn = sum(1 for m, _ in cfg.pattern if m == "attn") \
+            * cfg.n_periods
+        out["kv_cache"] = n_attn * 2 * tokens_loc * cfg.n_kv_heads \
+            * cfg.head_dim * dtb / 16       # kv-head dim model-sharded
+    else:
+        if cfg.serve_replicate_params:
+            out["state"] = P * dtb / 16          # model shard only
+        else:
+            out["state"] = P * dtb / state_ways
+        n_attn = sum(1 for m, _ in cfg.pattern if m == "attn") \
+            * cfg.n_periods
+        kv_el = (1 + 4.0 / cfg.head_dim) if cfg.kv_cache_quant else dtb
+        out["kv_cache"] = n_attn * 2 * shape.global_batch * shape.seq_len \
+            * cfg.n_kv_heads * cfg.head_dim * kv_el / chips
+        n_mamba = sum(1 for m, _ in cfg.pattern if m == "mamba") \
+            * cfg.n_periods
+        out["ssm_state"] = n_mamba * shape.global_batch * cfg.ssm_heads \
+            * cfg.ssm_headdim * cfg.ssm_state * 4 / chips
+    out["total"] = sum(out.values())
+    return out
+
+
+@dataclass
+class FlopReport:
+    model_flops: float           # assignment "useful" FLOPs
+    machine_flops: float         # executed FLOPs (global)
+    param_bytes: float           # live parameter bytes (global)
+    cache_bytes: float           # KV/state cache bytes touched (global)
+    act_bytes: float             # activation HBM traffic estimate (global)
+    breakdown: dict
+
+    @property
+    def hbm_bytes(self) -> float:
+        return self.param_bytes + self.cache_bytes + self.act_bytes
+
+
+def _attn_proj_flops(cfg, tokens):
+    D, H, K, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return 2 * tokens * (D * H * dh + 2 * D * K * dh + H * dh * D)
+
+
+def _eff_heads(cfg, tp: int = 16) -> int:
+    """Executed head count: TP padding (§Perf H1.2) costs extra heads."""
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    if not cfg.pad_heads or H % tp == 0:
+        return H
+    G = H // K
+    if G == 1:
+        return H + (-H) % tp
+    gp = G
+    while (K * gp) % tp:
+        gp += 1
+    return K * gp
+
+
+def _attn_score_flops(cfg, tokens, kv_len, causal: bool = True):
+    # scores + PV.  The chunked-jnp fallback computes the full rectangle
+    # and masks (2x causal slack); the Pallas flash kernel (attn_impl=
+    # "flash") skips above-diagonal blocks, recovering the 2x.
+    H, dh = _eff_heads(cfg), cfg.head_dim
+    factor = 0.5 if (causal and cfg.attn_impl.startswith("flash")) else 1.0
+    return 2 * tokens * kv_len * H * dh * 2 * factor
+
+
+def _mlp_flops(cfg, tokens):
+    mult = 3 if cfg.mlp_act == "swiglu" else 2
+    return 2 * tokens * cfg.d_model * cfg.d_ff * mult
+
+
+def _moe_flops(cfg, tokens):
+    mult = 3 if cfg.mlp_act == "swiglu" else 2
+    Fm = cfg.d_ff_moe or cfg.d_ff
+    router = 2 * tokens * cfg.d_model * cfg.n_experts
+    # capacity buffers are sized S·k·cf/E per expert and fully multiplied
+    experts = 2 * tokens * cfg.top_k * cfg.capacity_factor \
+        * cfg.d_model * Fm * mult
+    shared = _shared_flops(cfg, tokens)
+    return router + experts + shared
+
+
+def _shared_flops(cfg, tokens):
+    if not cfg.shared_expert:
+        return 0.0
+    mult = 3 if cfg.mlp_act == "swiglu" else 2
+    Fm = cfg.d_ff_moe or cfg.d_ff
+    return 2 * tokens * cfg.d_model * Fm * mult
+
+
+def _ssd_flops(cfg, tokens):
+    D, di = cfg.d_model, cfg.ssm_inner
+    N, H, P = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    Q = cfg.ssm_chunk
+    proj = 2 * tokens * D * (2 * di + 2 * N + H) + 2 * tokens * di * D
+    conv = 2 * tokens * (di + 2 * N) * cfg.ssm_conv
+    # per chunk: CBᵀ 2Q²N ; (scores∘W)·X 2Q²HP ; inter 2QNHP ; state 2QNHP
+    chunks = max(1, tokens // Q)
+    scan = chunks * (2 * Q * Q * N + 2 * Q * Q * H * P + 4 * Q * N * H * P)
+    return proj + conv + scan
+
+
+def _ssd_decode_flops(cfg, batch):
+    D, di = cfg.d_model, cfg.ssm_inner
+    N, H, P = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    proj = 2 * batch * D * (2 * di + 2 * N + H) + 2 * batch * di * D
+    state = 2 * batch * H * P * N * 2
+    return proj + state
+
+
+def _layer_counts(cfg):
+    attn = sum(1 for m, _ in cfg.pattern if m == "attn") * cfg.n_periods
+    mamba = sum(1 for m, _ in cfg.pattern if m == "mamba") * cfg.n_periods
+    mlp = sum(1 for _, f in cfg.pattern if f == "mlp") * cfg.n_periods
+    moe = sum(1 for _, f in cfg.pattern if f == "moe") * cfg.n_periods
+    return attn, mamba, mlp, moe
+
+
+def _dtype_bytes(cfg):
+    import jax.numpy as jnp
+    return jnp.dtype(cfg.dtype).itemsize
+
+
+def _fwd_flops(cfg, tokens, kv_len):
+    n_attn, n_mamba, n_mlp, n_moe = _layer_counts(cfg)
+    fl = {}
+    fl["attn_proj"] = n_attn * _attn_proj_flops(cfg, tokens)
+    fl["attn_score"] = n_attn * _attn_score_flops(cfg, tokens, kv_len)
+    fl["mlp"] = n_mlp * _mlp_flops(cfg, tokens)
+    fl["moe"] = n_moe * _moe_flops(cfg, tokens)
+    fl["ssd"] = n_mamba * _ssd_flops(cfg, tokens)
+    fl["logits"] = 2 * tokens * cfg.d_model * cfg.vocab
+    return fl
+
+
+def analyze(cfg: ModelConfig, shape: ShapeSpec) -> FlopReport:
+    B, S = shape.global_batch, shape.seq_len
+    pbytes = cfg.param_count() * _dtype_bytes(cfg)
+    dtb = _dtype_bytes(cfg)
+    n_attn, n_mamba, n_mlp, n_moe = _layer_counts(cfg)
+    n_layers_total = cfg.n_layers + cfg.encoder_layers
+
+    if shape.kind == "train":
+        tokens = B * S
+        fl = _fwd_flops(cfg, tokens, kv_len=S)
+        if cfg.is_encdec:
+            enc_tok = B * cfg.encoder_ctx
+            fl["encoder"] = cfg.encoder_layers * (
+                _attn_proj_flops(cfg, enc_tok)
+                + _attn_score_flops(cfg, enc_tok, cfg.encoder_ctx, causal=False)
+                + _mlp_flops(cfg, enc_tok))
+            fl["cross"] = cfg.n_layers * (
+                _attn_proj_flops(cfg, tokens)
+                + _attn_score_flops(cfg, tokens, cfg.encoder_ctx, causal=False))
+        fwd = sum(fl.values())
+        # bwd = 2×fwd; full remat recompute ≈ +1×fwd; "dots" policy saves
+        # matmul outputs so recompute is elementwise-only (≈ +0.1×fwd)
+        if cfg.remat and cfg.remat_policy == "dots":
+            machine = fwd * 3.1
+        elif cfg.remat:
+            machine = fwd * 4.0
+        else:
+            machine = fwd * 3.0
+        model = 6.0 * cfg.active_param_count() * tokens
+        act = 2 * tokens * cfg.d_model * dtb * n_layers_total * 4
+        return FlopReport(model, machine, pbytes * 3,  # p + grad + opt read
+                          0.0, act, fl)
+
+    if shape.kind == "prefill":
+        tokens = B * S
+        fl = _fwd_flops(cfg, tokens, kv_len=S)
+        fl["logits"] = 2 * B * cfg.d_model * cfg.vocab   # last position only
+        if cfg.is_encdec:
+            enc_tok = B * cfg.encoder_ctx
+            fl["encoder"] = cfg.encoder_layers * (
+                _attn_proj_flops(cfg, enc_tok)
+                + _attn_score_flops(cfg, enc_tok, cfg.encoder_ctx, causal=False)
+                + _mlp_flops(cfg, enc_tok))
+            fl["cross"] = cfg.n_layers * (
+                _attn_proj_flops(cfg, tokens)
+                + _attn_score_flops(cfg, tokens, cfg.encoder_ctx, causal=False))
+        machine = sum(fl.values())
+        model = 2.0 * cfg.active_param_count() * tokens
+        kv_write = n_attn * 2 * B * S * cfg.n_kv_heads * cfg.head_dim * dtb
+        act = 2 * tokens * cfg.d_model * dtb * n_layers_total * 2
+        return FlopReport(model, machine, pbytes, kv_write, act, fl)
+
+    # decode: one token per sequence
+    tokens = B
+    fl = {}
+    fl["attn_proj"] = n_attn * _attn_proj_flops(cfg, tokens)
+    fl["attn_score"] = n_attn * 2 * tokens * S * cfg.n_heads * cfg.head_dim * 2
+    fl["mlp"] = n_mlp * _mlp_flops(cfg, tokens)
+    fl["moe"] = n_moe * _moe_flops(cfg, tokens)
+    fl["ssd"] = n_mamba * _ssd_decode_flops(cfg, B)
+    fl["logits"] = 2 * tokens * cfg.d_model * cfg.vocab
+    if cfg.is_encdec:
+        fl["cross"] = cfg.n_layers * (
+            _attn_proj_flops(cfg, tokens)
+            + 2 * tokens * cfg.encoder_ctx * cfg.n_heads * cfg.head_dim * 2)
+    machine = sum(fl.values())
+    model = 2.0 * cfg.active_param_count() * tokens
+    kv_elem_bytes = dtb
+    if cfg.kv_cache_quant:
+        # int8 payload + f32 scale per (token, kv-head)
+        kv_elem_bytes = 1 + 4.0 / cfg.head_dim
+    kv = n_attn * 2 * B * S * cfg.n_kv_heads * cfg.head_dim * kv_elem_bytes
+    mamba_state = n_mamba * B * (
+        cfg.ssm_heads * cfg.ssm_headdim * cfg.ssm_state * 4
+        + (cfg.ssm_inner + 2 * cfg.ssm_state) * (cfg.ssm_conv - 1) * dtb)
+    if cfg.is_encdec:
+        kv += cfg.n_layers * 2 * B * cfg.encoder_ctx \
+            * cfg.n_kv_heads * cfg.head_dim * dtb
+    act = 2 * tokens * cfg.d_model * dtb * n_layers_total * 2
+    # MoE decode reads only the routed experts' weights
+    if cfg.n_experts:
+        Fm = cfg.d_ff_moe or cfg.d_ff
+        mult = 3 if cfg.mlp_act == "swiglu" else 2
+        dense_bytes = (cfg.param_count() - cfg.active_param_count()) * dtb
+        touched = min(B * cfg.top_k, cfg.n_experts)
+        frac = touched / cfg.n_experts
+        pbytes = pbytes - dense_bytes * (1 - frac)
+    if cfg.serve_replicate_params:
+        # weights-stationary serving: every data-parallel replica streams
+        # its model-shard per step — global bytes = params × data degree
+        pbytes = pbytes * 16.0
+    return FlopReport(model, machine, pbytes, kv + mamba_state, act, fl)

@@ -1,0 +1,89 @@
+"""HLO inspection: collective-byte accounting from compiled modules.
+
+``collective_bytes(text)`` scans post-SPMD optimized HLO for
+``all-reduce`` / ``all-gather`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` ops and sums their result-shape bytes (the paper's
+interconnect-traffic analogue; cost_analysis does not expose this).
+
+Caveat handled by the caller: ``lax.scan`` bodies appear once in HLO
+(while-loop trip counts are not multiplied), so the dry-run compiles a
+1-period and a 2-period variant of each model and extrapolates
+``total = f(1) + (periods-1)·(f(2) - f(1))``.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_bytes", "parse_shape_bytes", "count_ops",
+           "COLLECTIVE_OPS"]
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def parse_shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string like 'bf16[8,128]' or a tuple thereof."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# e.g. ``%all-reduce.5 = bf16[4096]{0} all-reduce(...)``
+# or  ``ROOT %r = (bf16[2,4]{...}, f32[8]{...}) all-gather(...)``
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\],]+(?:\{[^}]*\})?)\s+(" +
+    "|".join(COLLECTIVE_OPS) + r")[\.( ]")
+
+
+#: approximate per-device link traffic per result byte (ring algorithms):
+#: all-gather receives ~result bytes; all-reduce = reduce-scatter+all-gather
+#: ≈ 2×; permute/all-to-all move ~result bytes.
+_LINK_WEIGHT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind result bytes over a (post-SPMD, i.e. per-device)
+    HLO module.  ``total`` sums raw result bytes; ``link_bytes`` applies the
+    ring-algorithm traffic weights above — the per-device ICI traffic
+    estimate the roofline's collective term uses."""
+    out: dict[str, float] = defaultdict(float)
+    link = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        b = parse_shape_bytes(type_str)
+        out[op] += b
+        link += b * _LINK_WEIGHT[op]
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["link_bytes"] = link
+    return {k: int(v) for k, v in out.items()}
+
+
+def count_ops(hlo_text: str, op_names=COLLECTIVE_OPS) -> dict[str, int]:
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m:
+            counts[m.group(2)] += 1
+    return dict(counts)

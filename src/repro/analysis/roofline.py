@@ -1,0 +1,90 @@
+"""Roofline analysis (TPU v5e targets) — the §Roofline deliverable.
+
+For each compiled (arch × shape × mesh) cell, derive the three terms:
+
+    compute term    = FLOPs            / (chips × 197e12 bf16 FLOP/s)
+    memory term     = HBM bytes        / (chips × 819e9  B/s)
+    collective term = collective bytes / (chips × links × 50e9 B/s)
+
+FLOPs/bytes come from the analytic model (``analysis.flops``) — exact for
+our model math — with the HLO cost_analysis numbers (layer-scan-corrected)
+reported alongside as the compiled cross-check.  Collective bytes come
+from the compiled HLO (scan-corrected; see ``analysis.hlo``).
+
+The step time lower bound is max(terms) assuming perfect overlap;
+``bound`` names the dominant term, ``roofline_fraction`` =
+model-useful-time / max-term (how close useful work runs to the roof).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..launch.mesh import HW
+
+__all__ = ["RooflineTerms", "roofline"]
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # inputs (global)
+    machine_flops: float
+    model_flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    # derived (seconds)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bound: str = ""
+    useful_ratio: float = 0.0        # MODEL_FLOPS / machine_flops
+    roofline_fraction: float = 0.0   # useful-compute-time / max(terms)
+    notes: str = ""
+    extra: dict = field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {k: getattr(self, k) for k in (
+            "arch", "shape", "mesh", "chips", "machine_flops", "model_flops",
+            "hbm_bytes", "collective_bytes", "t_compute", "t_memory",
+            "t_collective", "bound", "useful_ratio", "roofline_fraction",
+            "notes")} | {"extra": self.extra}
+
+
+def roofline(arch: str, shape: str, mesh_name: str, chips: int,
+             machine_flops: float, model_flops: float, hbm_bytes: float,
+             collective_bytes: float, useful_bytes: float | None = None,
+             notes: str = "", extra: dict | None = None) -> RooflineTerms:
+    """``roofline_fraction`` scores against the *dominant* roof:
+
+    * compute-bound: useful-FLOP time / max-term (MFU-style);
+    * memory-bound: irreducible bytes (params + caches — ``useful_bytes``)
+      / total HBM bytes — i.e. how much of the streamed traffic a perfect
+      implementation would still have to move;
+    * collective-bound: useful-FLOP time / max-term (comm is pure overhead).
+    """
+    peak = chips * HW["peak_flops_bf16"]
+    bw = chips * HW["hbm_bytes_per_s"]
+    # collective_bytes comes from the PARTITIONED module = per-device link
+    # traffic; the roof is one chip's aggregate ICI bandwidth.
+    ici = HW["ici_links"] * HW["ici_bytes_per_s_per_link"]
+    t_c = machine_flops / peak
+    t_m = hbm_bytes / bw
+    t_x = collective_bytes / ici
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bound = max(terms, key=terms.get)
+    t_max = max(terms.values())
+    if bound == "memory" and useful_bytes is not None and hbm_bytes:
+        frac = useful_bytes / hbm_bytes
+    else:
+        frac = (model_flops / peak / t_max) if t_max else 0.0
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        machine_flops=machine_flops, model_flops=model_flops,
+        hbm_bytes=hbm_bytes, collective_bytes=collective_bytes,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x, bound=bound,
+        useful_ratio=(model_flops / machine_flops) if machine_flops else 0.0,
+        roofline_fraction=frac, notes=notes, extra=extra or {})

@@ -1,0 +1,7 @@
+"""Architecture configs: the 10 assigned archs + the paper's QuadConv AE."""
+
+from .registry import (ARCH_IDS, SHAPES, ShapeSpec, cell_applicable, cells,
+                       get_config, get_smoke_config)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ShapeSpec", "cell_applicable", "cells",
+           "get_config", "get_smoke_config"]

@@ -1,0 +1,36 @@
+"""Nemotron-4 340B.  [arXiv:2402.16819; unverified]
+
+96L, d_model 18432, 96 heads (GQA kv=8), d_ff 73728, vocab 256000;
+squared-ReLU MLP (no gate), RoPE.  The 340B scale makes optimizer-state
+memory the binding constraint: the train config uses Adafactor (factored
+second moments) + ZeRO-3; see EXPERIMENTS §Dry-run.  Full attention ->
+long_500k skipped.
+"""
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="nemotron-4-340b",
+        family="dense",
+        n_layers=96, d_model=18432, n_heads=96, n_kv_heads=8,
+        d_head=192, d_ff=73728, vocab=256000,
+        pattern=(("attn", "mlp"),),
+        mlp_act="squared_relu", norm="layernorm", rope_theta=10_000.0,
+        ce_chunk=512, grad_accum=64, optimizer="adafactor",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="nemotron-4-smoke",
+        family="dense",
+        n_layers=2, d_model=64, n_heads=8, n_kv_heads=2,
+        d_ff=256, vocab=512,
+        pattern=(("attn", "mlp"),),
+        mlp_act="squared_relu", norm="layernorm",
+        attn_chunk=64, remat=False, dtype=jnp.float32, optimizer="adafactor",
+    )

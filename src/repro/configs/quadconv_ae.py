@@ -1,0 +1,28 @@
+"""The paper's own architecture: the QuadConv autoencoder (paper §4).
+
+Full config mirrors the paper's setup scaled to its per-rank partition:
+36M elements / 960 ranks = 37,500 points per rank (we use the nearest
+structured grid 48x25x32 = 38,400), 4 channels, 16 internal channels,
+2 blocks, latent 100 -> ~1536x compression (paper: 1700x).
+"""
+
+from repro.ml.autoencoder import AEConfig
+from repro.sim.flatplate import FlatPlateConfig
+
+
+def config() -> AEConfig:
+    return AEConfig(n_points=38_400, channels=4, internal=16, latent=100,
+                    blocks=2, pool=4, mlp_width=64, mlp_depth=5)
+
+
+def grid_config() -> FlatPlateConfig:
+    return FlatPlateConfig(nx=48, ny=25, nz=32)
+
+
+def smoke_config() -> AEConfig:
+    return AEConfig(n_points=256, channels=4, internal=8, latent=16,
+                    blocks=2, pool=4, mlp_width=16, mlp_depth=3, mode="ref")
+
+
+def smoke_grid_config() -> FlatPlateConfig:
+    return FlatPlateConfig(nx=8, ny=8, nz=4)

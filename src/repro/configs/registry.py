@@ -1,0 +1,94 @@
+"""Architecture registry: ``get_config(name)`` / ``get_smoke_config(name)``.
+
+Each ``src/repro/configs/<id>.py`` exports ``config()`` (the exact assigned
+configuration) and ``smoke_config()`` (a reduced same-family config for CPU
+smoke tests).  The registry also owns the assigned input-shape table and the
+per-(arch × shape) applicability rules (long_500k → sub-quadratic archs
+only; encoder-only would skip decode — none assigned).
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+from ..models.config import ModelConfig
+
+__all__ = ["ARCH_IDS", "SHAPES", "ShapeSpec", "get_config",
+           "get_smoke_config", "cells", "cell_applicable"]
+
+ARCH_IDS = (
+    "llama4_scout_17b_a16e",
+    "qwen3_moe_235b_a22b",
+    "starcoder2_7b",
+    "phi4_mini_3_8b",
+    "nemotron_4_340b",
+    "starcoder2_3b",
+    "mamba2_1_3b",
+    "jamba_1_5_large_398b",
+    "whisper_large_v3",
+    "llava_next_34b",
+)
+
+# canonical external ids (assignment spelling) -> module name
+_ALIASES = {
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "starcoder2-7b": "starcoder2_7b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "starcoder2-3b": "starcoder2_3b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "whisper-large-v3": "whisper_large_v3",
+    "llava-next-34b": "llava_next_34b",
+}
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def _module(name: str):
+    mod = _ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).config()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).smoke_config()
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Is (arch × shape) a runnable cell?  Returns (ok, reason)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 500k dense-KV decode "
+                       "skipped per assignment (see DESIGN.md)")
+    return True, ""
+
+
+def cells():
+    """All applicable (arch_id, shape_name) cells (the 40-cell table minus
+    assignment-mandated skips)."""
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, reason = cell_applicable(cfg, shape)
+            out.append((arch, shape.name, ok, reason))
+    return out

@@ -1,0 +1,41 @@
+"""Whisper large-v3.  [arXiv:2212.04356; unverified]
+
+Enc-dec: 32 encoder + 32 decoder layers, d_model 1280, 20 heads (MHA,
+kv=20), d_ff 5120, vocab 51866, GELU, LayerNorm, learned positions.
+Conv/mel frontend is a STUB per the assignment — input_specs() provides
+precomputed frame embeddings [B, 1500, 1280].  Decode shapes exercise the
+decoder (self-KV + precomputed cross-KV); long_500k skipped (full attn).
+"""
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3",
+        family="audio",
+        n_layers=32, d_model=1280, n_heads=20, n_kv_heads=20,
+        d_ff=5120, vocab=51866,
+        pattern=(("attn", "mlp"),),
+        mlp_act="gelu", norm="layernorm",
+        tie_embeddings=True,
+        encoder_layers=32, encoder_ctx=1500,
+        frontend="audio",
+        ce_chunk=512,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-smoke",
+        family="audio",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=512,
+        pattern=(("attn", "mlp"),),
+        mlp_act="gelu", norm="layernorm", tie_embeddings=True,
+        encoder_layers=2, encoder_ctx=64,
+        frontend="audio",
+        attn_chunk=64, remat=False, dtype=jnp.float32,
+    )

@@ -1,0 +1,33 @@
+"""Core in-situ coupling layer (the paper's contribution).
+
+Components (paper Fig. 1): data producer and data consumer couple only
+through the in-memory ``TensorStore`` (``store`` + ``server``) using the
+SmartRedis-verb ``Client``; ``deployment`` chooses co-located vs clustered
+placement; ``orchestrator`` is the SmartSim-driver analogue.
+"""
+
+from . import store
+from .client import Client
+from .deployment import Clustered, Colocated, Deployment, split_devices
+from .orchestrator import InSituDriver, RunResult, StragglerPolicy
+from .server import StoreServer
+from .store import TableSpec, TableState, make_key, name_key
+from .telemetry import Timers
+
+__all__ = [
+    "store",
+    "Client",
+    "Clustered",
+    "Colocated",
+    "Deployment",
+    "split_devices",
+    "InSituDriver",
+    "RunResult",
+    "StragglerPolicy",
+    "StoreServer",
+    "TableSpec",
+    "TableState",
+    "make_key",
+    "name_key",
+    "Timers",
+]

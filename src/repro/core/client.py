@@ -1,0 +1,176 @@
+"""Client: the SmartRedis-verb API (paper §2.2).
+
+One ``Client`` per producer/consumer rank.  Mirrors the SmartRedis surface
+the paper leans on ("a single call … each requiring a single line of code"):
+
+    client = Client(server, rank=3)
+    client.put_tensor("x.3.120", x)                     # named put
+    client.send_step("field", step=120, value=x)        # rank/step-keyed put
+    y, ok = client.get_tensor("x.3.120")
+    client.poll_tensor("x.3.120", timeout=10.0)
+    client.set_model("encoder", apply_fn, params)
+    client.run_model("encoder", inputs=["x.3.120"], outputs=["z.3.120"])
+    z, _ = client.get_tensor("z.3.120")
+
+plus the fused ``infer`` fast path (beyond-paper: one dispatch instead of the
+paper's three-step send/run/retrieve) and the consumer-side batch loaders.
+
+Every verb is timed into the paper's component buckets:
+``client_init`` / ``metadata`` / ``send`` / ``retrieve`` / ``model_eval``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import store as S
+from .server import StoreServer
+from .telemetry import Timers
+
+__all__ = ["Client"]
+
+
+class Client:
+    def __init__(self, server: StoreServer, rank: int = 0,
+                 timers: Timers | None = None):
+        t0 = time.perf_counter()
+        self.server = server
+        self.rank = int(rank)
+        self.timers = timers or Timers()
+        # "Client initialization" = establishing the connection in the paper;
+        # here: binding the server reference and warming the key hasher.
+        S.name_key("__warmup__")
+        self.timers.record("client_init", time.perf_counter() - t0)
+
+    # -- named tensors ---------------------------------------------------------
+
+    def put_tensor(self, name: str, value, table: str = "default") -> None:
+        with self.timers.time("send", payload=value):
+            self.server.put(table, S.name_key(name), value)
+
+    def get_tensor(self, name: str, table: str = "default"):
+        with self.timers.time("retrieve") as box:
+            value, found = self.server.get(table, S.name_key(name))
+            box[0] = value
+        return value, found
+
+    def delete_tensor(self, name: str, table: str = "default") -> None:
+        self.server.delete(table, S.name_key(name))
+
+    def poll_tensor(self, name: str, table: str = "default",
+                    timeout: float = 10.0, interval: float = 0.005) -> bool:
+        """Poll until the key exists (SmartRedis ``poll_tensor``)."""
+        key = S.name_key(name)
+        deadline = time.perf_counter() + timeout
+        with self.timers.time("metadata"):
+            while True:
+                if self.server.poll(table, key):
+                    return True
+                if time.perf_counter() >= deadline:
+                    return False
+                time.sleep(interval)
+
+    # -- rank/step-keyed streaming (the simulation path) ------------------------
+
+    def send_step(self, table: str, step: int, value) -> None:
+        """Send this rank's contribution of one time step (unique key per
+        rank and step, exactly the paper's keying scheme)."""
+        with self.timers.time("send", payload=value):
+            self.server.put(table, S.make_key(self.rank, step), value)
+
+    def retrieve_step(self, table: str, rank: int, step: int):
+        with self.timers.time("retrieve") as box:
+            value, found = self.server.get(table, S.make_key(rank, step))
+            box[0] = value
+        return value, found
+
+    def send_batch(self, table: str, step: int, values, ranks=None) -> None:
+        """Vectorized send of many ranks' contributions in one dispatch."""
+        n = values.shape[0]
+        ranks = jnp.arange(n) if ranks is None else jnp.asarray(ranks)
+        keys = S.make_key(ranks, jnp.full((n,), step))
+        with self.timers.time("send", payload=values):
+            self.server.put_many(table, keys, values)
+
+    # -- consumer-side loaders ---------------------------------------------------
+
+    def sample_batch(self, table: str, n: int, rng):
+        """Random gather of ``n`` stored tensors (the paper's data loader)."""
+        with self.timers.time("retrieve") as box:
+            values, keys, ok = self.server.sample(table, rng, n)
+            box[0] = values
+        return values, keys, ok
+
+    def latest_batch(self, table: str, n: int):
+        with self.timers.time("retrieve") as box:
+            values, keys, valid = self.server.latest(table, n)
+            box[0] = values
+        return values, keys, valid
+
+    def wait_for_data(self, table: str, minimum: int = 1,
+                      timeout: float = 60.0) -> bool:
+        """Paper: "the ML workload must query the database multiple times
+        while waiting for the first training snapshot"."""
+        with self.timers.time("metadata"):
+            return self.server.wait_watermark(table, minimum, timeout)
+
+    def watermark(self, table: str) -> int:
+        with self.timers.time("metadata"):
+            return self.server.watermark(table)
+
+    # -- metadata ------------------------------------------------------------------
+
+    def put_metadata(self, name: str, value) -> None:
+        with self.timers.time("metadata"):
+            self.server.put_meta(name, value)
+
+    def get_metadata(self, name: str, timeout: float | None = None):
+        with self.timers.time("metadata"):
+            if timeout is None:
+                return self.server.get_meta(name)
+            return self.server.wait_meta(name, timeout=timeout)
+
+    # -- models (RedisAI verbs) -------------------------------------------------------
+
+    def set_model(self, key: str, apply_fn: Callable, params) -> None:
+        with self.timers.time("model_load"):
+            self.server.set_model(key, apply_fn, params)
+
+    def run_model(self, key: str, inputs: Sequence[str],
+                  outputs: Sequence[str], table: str = "default",
+                  out_table: str | None = None) -> None:
+        """Evaluate a stored model on stored tensors, store the predictions.
+
+        The three-step paper protocol is: (1) ``put_tensor`` the inference
+        data, (2) ``run_model`` by key, (3) ``get_tensor`` the predictions —
+        this verb is step (2) alone, so callers measure each step just like
+        paper Fig. 7.
+        """
+        out_table = out_table or table
+        ins = []
+        for nm in inputs:
+            v, found = self.server.get(table, S.name_key(nm))
+            ins.append(v)
+        with self.timers.time("model_eval") as box:
+            outs = self.server.run_model(key, *ins)
+            box[0] = outs
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        if len(outs) != len(outputs):
+            raise ValueError(f"model {key!r} returned {len(outs)} outputs, "
+                             f"expected {len(outputs)}")
+        for nm, o in zip(outputs, outs):
+            self.server.put(out_table, S.name_key(nm), o)
+
+    def infer(self, key: str, *xs):
+        """Fused fast path: one dispatch, no store round-trip (beyond-paper;
+        the tightly-coupled LibTorch baseline of Fig. 7, but still going
+        through the registry so the producer stays model-agnostic)."""
+        with self.timers.time("model_eval") as box:
+            out = self.server.run_model(key, *xs)
+            box[0] = out
+        return out

@@ -1,0 +1,152 @@
+"""Store deployment policies: co-located vs clustered (paper §2.3).
+
+On Polaris the *co-located* deployment runs one database shard per compute
+node (sharing the node with the simulation and ML ranks) so that every
+send/retrieve stays on-node; the *clustered* deployment gives the database
+dedicated nodes and pushes every transfer across the interconnect.
+
+TPU-native translation:
+
+* **Colocated(mesh, elem_spec)** — the store slab's element dims carry the
+  *same PartitionSpec as the producer's output*.  A ``put`` of a
+  producer-sharded tensor is then a per-device local slab update: the
+  compiled HLO contains **zero collective ops** ("all data transfer is
+  contained within each node").  The resource the store consumes is HBM
+  (slots per chip) rather than CPU cores; ``hbm_budget`` mirrors the
+  paper's Fig-3 core-count sweep.
+
+* **Clustered(client_mesh, db_mesh, elem_spec)** — the store lives on a
+  *dedicated* device subset (its own mesh).  ``stage`` moves a
+  producer-mesh array onto the store mesh (``jax.device_put`` across
+  meshes = the TCP transfer of the paper), and the many-clients-per-shard
+  contention that wrecks the paper's clustered weak scaling shows up as a
+  producer:db fan-in ratio.
+
+Both policies expose the same small interface consumed by the
+``StoreServer``/``Client``:
+
+    slab_sharding(spec)  -> sharding for the [capacity, *shape] slab
+    elem_sharding(spec)  -> sharding of one element (what ``stage`` targets)
+    stage(x)             -> move x onto the store placement (identity when
+                            co-located and already aligned)
+    fan_in               -> clients per store shard (1 for co-located)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .store import TableSpec
+
+__all__ = ["Deployment", "Colocated", "Clustered", "split_devices"]
+
+
+def split_devices(devices=None, db_fraction: float = 0.25):
+    """Split the available devices into (client, db) sets for Clustered.
+
+    Mirrors the paper's node split (e.g. 448 sim + 16 DB nodes).  At least
+    one device lands on each side; with a single device both sides share it
+    (degenerate but keeps laptop-scale runs working).
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    if len(devices) == 1:
+        return devices, devices
+    n_db = max(1, int(round(len(devices) * db_fraction)))
+    n_db = min(n_db, len(devices) - 1)
+    return devices[:-n_db], devices[-n_db:]
+
+
+class Deployment:
+    """Interface; see module docstring."""
+
+    #: clients per store shard — drives the clustered contention model.
+    fan_in: int = 1
+
+    def slab_sharding(self, spec: TableSpec):
+        raise NotImplementedError
+
+    def elem_sharding(self, spec: TableSpec):
+        raise NotImplementedError
+
+    def stage(self, x):
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        raise NotImplementedError
+
+
+@dataclass
+class Colocated(Deployment):
+    """Store sharded exactly like the producer output (on-node DB analogue).
+
+    ``elem_spec`` is the PartitionSpec of one stored element; it must match
+    the sharding the producer emits so that put/get are collective-free.
+    ``capacity_axis`` optionally shards the slot axis too (spreading the
+    ring across an unused mesh axis — beyond-paper, trades capacity for
+    per-chip HBM).
+    """
+
+    mesh: Mesh
+    elem_spec: P = P()
+    capacity_axis: str | None = None
+
+    fan_in: int = 1
+
+    def slab_sharding(self, spec: TableSpec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(self.capacity_axis, *self.elem_spec))
+
+    def elem_sharding(self, spec: TableSpec) -> NamedSharding:
+        return NamedSharding(self.mesh, self.elem_spec)
+
+    def stage(self, x):
+        # Producer output is already placed correctly: zero-copy.  We do not
+        # device_put here on purpose — a sharding mismatch should surface as
+        # a collective in the compiled put (tests assert it does not).
+        return x
+
+    def describe(self) -> str:
+        return (f"colocated(mesh={tuple(self.mesh.shape.items())}, "
+                f"elem_spec={self.elem_spec})")
+
+
+@dataclass
+class Clustered(Deployment):
+    """Store on dedicated devices; every transfer crosses the interconnect."""
+
+    client_mesh: Mesh
+    db_mesh: Mesh
+    elem_spec: P = P()          # layout of an element across the db mesh
+
+    def __post_init__(self):
+        n_clients = int(np.prod(list(self.client_mesh.shape.values())))
+        n_db = int(np.prod(list(self.db_mesh.shape.values())))
+        self.fan_in = max(1, n_clients // max(1, n_db))
+
+    def slab_sharding(self, spec: TableSpec) -> NamedSharding:
+        return NamedSharding(self.db_mesh, P(None, *self.elem_spec))
+
+    def elem_sharding(self, spec: TableSpec) -> NamedSharding:
+        return NamedSharding(self.db_mesh, self.elem_spec)
+
+    def stage(self, x):
+        """The cross-network hop: reshard from client mesh onto the db mesh."""
+        return jax.device_put(x, self.elem_sharding(None))
+
+    def describe(self) -> str:
+        return (f"clustered(clients={tuple(self.client_mesh.shape.items())}, "
+                f"db={tuple(self.db_mesh.shape.items())}, fan_in={self.fan_in})")
+
+
+def make_colocated_1d(axis: str = "data", mesh: Mesh | None = None,
+                      shard_dim: int = 0, ndim: int = 1) -> Colocated:
+    """Convenience: co-located deployment sharding element dim 0 over `axis`."""
+    if mesh is None:
+        mesh = jax.make_mesh((len(jax.devices()),), (axis,))
+    spec = [None] * ndim
+    spec[shard_dim] = axis
+    return Colocated(mesh=mesh, elem_spec=P(*spec))

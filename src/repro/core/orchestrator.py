@@ -1,0 +1,144 @@
+"""InSituDriver: the SmartSim "driver program" (paper §2.2).
+
+The paper's driver is a Python script using the SmartSim infrastructure
+library to launch the database, the CFD simulation and the distributed
+training job, and to wire them together.  Here the driver:
+
+  * builds the ``StoreServer`` with the chosen deployment (co-located or
+    clustered),
+  * creates the tables the workflow declares,
+  * runs the producer and consumer loops on concurrent host threads
+    (loose coupling: they interact only with the store, never with each
+    other),
+  * enforces wall-clock / step budgets and the straggler policy,
+  * collects per-component timers from every rank and merges them into the
+    paper's Tables-1/2 style report.
+
+Fault-tolerance hooks: a component raising is recorded, the other side keeps
+running until its own budget expires (the paper's loose coupling means one
+side's failure never deadlocks the other), and ``InSituDriver.run`` returns
+a structured result with per-component status so callers (tests, the
+launcher) can decide to restart from the in-store checkpoint.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+from . import store as S
+from .client import Client
+from .deployment import Deployment
+from .server import StoreServer
+from .telemetry import Timers
+
+__all__ = ["InSituDriver", "ComponentResult", "RunResult", "StragglerPolicy"]
+
+
+@dataclass
+class StragglerPolicy:
+    """Deadline-based mitigation for slow components.
+
+    ``consumer_wait_s``: how long the consumer waits for fresh data before
+    training on what it has (never blocks indefinitely on a slow producer).
+    ``producer_send_async``: producer sends are enqueue-only (JAX async
+    dispatch); the producer never waits for the consumer at all.
+    ``max_step_s``: if a single producer/consumer step exceeds this, the
+    driver logs a straggler event (on real fleets this triggers rescheduling;
+    here it feeds the telemetry used by tests).
+    """
+
+    consumer_wait_s: float = 30.0
+    producer_send_async: bool = True
+    max_step_s: float = float("inf")
+
+
+@dataclass
+class ComponentResult:
+    name: str
+    steps: int = 0
+    error: str | None = None
+    straggler_events: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+@dataclass
+class RunResult:
+    components: dict[str, ComponentResult]
+    timers: Timers
+    wall_s: float
+
+    @property
+    def ok(self) -> bool:
+        return all(c.ok for c in self.components.values())
+
+
+class InSituDriver:
+    """Launch producer/consumer component loops against one store."""
+
+    def __init__(self, deployment: Deployment | None = None,
+                 tables: Sequence[S.TableSpec] = (),
+                 straggler: StragglerPolicy | None = None):
+        self.server = StoreServer(deployment)
+        self.straggler = straggler or StragglerPolicy()
+        for spec in tables:
+            self.server.create_table(spec)
+
+    def client(self, rank: int = 0) -> Client:
+        return Client(self.server, rank=rank)
+
+    def run(self, components: dict[str, Callable[[Client, "threading.Event"], int]],
+            max_wall_s: float = 300.0, ranks: dict[str, int] | None = None
+            ) -> RunResult:
+        """Run each component loop on its own thread.
+
+        A component is ``fn(client, stop_event) -> steps_completed``; it
+        should poll ``stop_event`` between steps.  ``ranks`` assigns each
+        component a client rank (default: enumeration order).
+        """
+        ranks = ranks or {}
+        stop = threading.Event()
+        results: dict[str, ComponentResult] = {}
+        clients: dict[str, Client] = {}
+        threads = []
+
+        def _wrap(name: str, fn):
+            def _run():
+                res = results[name]
+                t0 = time.perf_counter()
+                try:
+                    res.steps = int(fn(clients[name], stop) or 0)
+                except Exception:  # noqa: BLE001 — component isolation
+                    res.error = traceback.format_exc()
+                finally:
+                    res.wall_s = time.perf_counter() - t0
+            return _run
+
+        for i, (name, fn) in enumerate(components.items()):
+            results[name] = ComponentResult(name=name)
+            clients[name] = Client(self.server, rank=ranks.get(name, i))
+            threads.append(threading.Thread(target=_wrap(name, fn),
+                                            name=f"insitu-{name}", daemon=True))
+
+        t0 = time.perf_counter()
+        for th in threads:
+            th.start()
+        deadline = t0 + max_wall_s
+        for th in threads:
+            th.join(max(0.0, deadline - time.perf_counter()))
+        stop.set()
+        for th in threads:
+            th.join(timeout=30.0)
+
+        timers = Timers()
+        for name, cl in clients.items():
+            timers.merge(cl.timers)
+        return RunResult(components=results, timers=timers,
+                         wall_s=time.perf_counter() - t0)

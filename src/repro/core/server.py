@@ -1,0 +1,219 @@
+"""StoreServer: the host-side owner of TensorStore state.
+
+The Redis process of the paper becomes a lock-guarded holder of immutable
+JAX store state.  Host threads (producer / consumer / driver) call the
+server's verbs; each verb dispatches a jitted pure store op and swaps the
+state reference.  JAX's async dispatch gives the loose coupling: a ``put``
+returns as soon as the update is enqueued on the device stream, so the
+producer (like the paper's PHASTA ranks) is blocked only for the enqueue,
+not for the ML consumer.
+
+For *fused in-situ capture* (beyond-paper fast path) a producer step can own
+a table's state directly inside its jit: ``checkout()`` hands the state out,
+``commit()`` swaps the updated state back in.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from . import store as S
+from .deployment import Colocated, Deployment
+from .telemetry import Timers
+
+__all__ = ["StoreServer"]
+
+
+class StoreServer:
+    """Thread-safe owner of a set of store tables plus the model registry."""
+
+    def __init__(self, deployment: Deployment | None = None,
+                 timers: Timers | None = None):
+        self.deployment = deployment
+        self.timers = timers or Timers()
+        self._lock = threading.RLock()
+        self._specs: dict[str, S.TableSpec] = {}
+        self._state: dict[str, S.TableState] = {}
+        self._models: dict[str, tuple[Callable, Any]] = {}
+        self._meta: dict[str, Any] = {}          # tiny host-side metadata KV
+        self._meta_event = threading.Condition(self._lock)
+
+    # -- table management ---------------------------------------------------
+
+    def create_table(self, spec: S.TableSpec, deployment: Deployment | None = None):
+        dep = deployment or self.deployment
+        slab_sharding = dep.slab_sharding(spec) if dep is not None else None
+        with self._lock:
+            if spec.name in self._specs:
+                raise ValueError(f"table {spec.name!r} already exists")
+            self._specs[spec.name] = spec
+            self._state[spec.name] = S.init_table(spec, slab_sharding)
+        return spec
+
+    def spec(self, table: str) -> S.TableSpec:
+        return self._specs[table]
+
+    def tables(self) -> list[str]:
+        return list(self._specs)
+
+    def hbm_bytes(self) -> int:
+        return sum(S.table_bytes(sp) for sp in self._specs.values())
+
+    # -- fused-capture escape hatch ------------------------------------------
+
+    def checkout(self, table: str) -> S.TableState:
+        with self._lock:
+            return self._state[table]
+
+    def commit(self, table: str, new_state: S.TableState) -> None:
+        with self._lock:
+            self._state[table] = new_state
+
+    # -- verbs ---------------------------------------------------------------
+
+    def _staged(self, value):
+        dep = self.deployment
+        return dep.stage(value) if dep is not None else value
+
+    def put(self, table: str, key, value) -> None:
+        spec = self._specs[table]
+        value = self._staged(value)
+        key = jax.numpy.asarray(key, S.KEY_DTYPE)
+        with self._lock:
+            self._state[table] = S.put(spec, self._state[table], key, value)
+
+    def put_many(self, table: str, keys, values) -> None:
+        spec = self._specs[table]
+        values = self._staged(values)
+        with self._lock:
+            self._state[table] = S.put_many(spec, self._state[table], keys, values)
+
+    # NOTE on donation safety: ``put``/``put_many`` donate the previous
+    # table state, which marks its buffers deleted *at dispatch time*.
+    # Every read therefore dispatches its op while holding the lock — the
+    # lock orders dispatches, and the device stream executes them in
+    # dispatch order, so a read enqueued before a donating put always sees
+    # live buffers.  (Blocking host-side .item()/print on the result happens
+    # outside the lock; the returned arrays are fresh outputs, not aliases.)
+
+    def get(self, table: str, key):
+        spec = self._specs[table]
+        key = jax.numpy.asarray(key, S.KEY_DTYPE)
+        with self._lock:
+            return S.get(spec, self._state[table], key)
+
+    def get_many(self, table: str, keys):
+        spec = self._specs[table]
+        with self._lock:
+            return S.get_many(spec, self._state[table], keys)
+
+    def sample(self, table: str, rng, n: int):
+        spec = self._specs[table]
+        with self._lock:
+            return S.sample(spec, self._state[table], rng, n)
+
+    def latest(self, table: str, n: int):
+        spec = self._specs[table]
+        with self._lock:
+            return S.latest(spec, self._state[table], n)
+
+    def poll(self, table: str, key) -> bool:
+        spec = self._specs[table]
+        key = jax.numpy.asarray(key, S.KEY_DTYPE)
+        with self._lock:
+            return bool(S.poll(spec, self._state[table], key))
+
+    def delete(self, table: str, key) -> None:
+        spec = self._specs[table]
+        key = jax.numpy.asarray(key, S.KEY_DTYPE)
+        with self._lock:
+            self._state[table] = S.delete(spec, self._state[table], key)
+
+    def watermark(self, table: str) -> int:
+        """Total writes so far — the consumer's freshness signal."""
+        with self._lock:
+            count = jax.numpy.asarray(self._state[table].count).copy()
+        return int(count)
+
+    def valid_count(self, table: str) -> int:
+        spec = self._specs[table]
+        with self._lock:
+            n = S.valid_count(spec, self._state[table])
+        return int(n)
+
+    def wait_watermark(self, table: str, minimum: int, timeout: float = 60.0,
+                       interval: float = 0.005) -> bool:
+        """Block until ``watermark >= minimum`` (paper: ML ranks poll the DB
+        while waiting for the first snapshot).  Returns False on timeout —
+        the caller decides whether to proceed with stale data (straggler
+        mitigation) or abort."""
+        deadline = time.perf_counter() + timeout
+        while time.perf_counter() < deadline:
+            if self.watermark(table) >= minimum:
+                return True
+            time.sleep(interval)
+        return self.watermark(table) >= minimum
+
+    # -- metadata (host KV, paper's "useful metadata") ------------------------
+
+    def put_meta(self, name: str, value) -> None:
+        with self._meta_event:
+            self._meta[name] = value
+            self._meta_event.notify_all()
+
+    def get_meta(self, name: str, default=None):
+        with self._lock:
+            return self._meta.get(name, default)
+
+    def wait_meta(self, name: str, timeout: float = 60.0):
+        with self._meta_event:
+            ok = self._meta_event.wait_for(lambda: name in self._meta,
+                                           timeout=timeout)
+            return self._meta.get(name) if ok else None
+
+    # -- model registry (RedisAI analogue) ------------------------------------
+
+    def set_model(self, key: str, apply_fn: Callable, params,
+                  jit_compile: bool = True) -> None:
+        """Store a model "in the database": params pinned to the store
+        placement, apply jitted.  The producer only ever sees ``key``."""
+        dep = self.deployment
+        if dep is not None and not isinstance(dep, Colocated):
+            params = jax.tree.map(dep.stage, params)
+        fn = jax.jit(apply_fn) if jit_compile else apply_fn
+        with self._lock:
+            self._models[key] = (fn, params)
+
+    def has_model(self, key: str) -> bool:
+        with self._lock:
+            return key in self._models
+
+    def run_model(self, key: str, *inputs):
+        with self._lock:
+            fn, params = self._models[key]
+        return fn(params, *inputs)
+
+    def model_keys(self) -> list[str]:
+        with self._lock:
+            return list(self._models)
+
+    # -- in-memory checkpointing hook -----------------------------------------
+
+    def snapshot(self) -> dict[str, S.TableState]:
+        """Deep snapshot of all table state.  Copies the buffers: later
+        ``put``s donate (invalidate) the live state, so a zero-copy
+        snapshot would dangle."""
+        with self._lock:
+            return {name: jax.tree.map(jax.numpy.copy, st)
+                    for name, st in self._state.items()}
+
+    def restore(self, snap: dict[str, S.TableState]) -> None:
+        with self._lock:
+            for name, st in snap.items():
+                if name in self._specs:
+                    self._state[name] = st

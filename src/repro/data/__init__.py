@@ -1,0 +1,6 @@
+"""Host data pipeline: synthetic token streams, background prefetch."""
+
+from . import pipeline
+from .pipeline import PrefetchIterator, TokenStream
+
+__all__ = ["pipeline", "PrefetchIterator", "TokenStream"]

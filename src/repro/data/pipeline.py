@@ -1,0 +1,81 @@
+"""Host data pipeline: synthetic token streams with background prefetch.
+
+Production trait being exercised: the input pipeline must never block the
+accelerator.  ``PrefetchIterator`` runs the batch generator on a host
+thread with a bounded buffer (double/triple buffering) and hands out
+device-ready arrays; ``TokenStream`` is the deterministic synthetic corpus
+(zipfian unigram mixture with a repeating-ngram structure so that small
+models actually have something to learn in the examples)."""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["TokenStream", "PrefetchIterator"]
+
+
+@dataclass
+class TokenStream:
+    vocab: int
+    batch: int
+    seq_len: int
+    seed: int = 0
+    structure: float = 0.7     # fraction of deterministic-ngram positions
+
+    def __iter__(self):
+        rng = np.random.default_rng(self.seed)
+        # zipf-ish unigram distribution
+        ranks = np.arange(1, self.vocab + 1)
+        probs = 1.0 / ranks
+        probs /= probs.sum()
+        while True:
+            base = rng.choice(self.vocab, size=(self.batch, self.seq_len),
+                              p=probs).astype(np.int32)
+            # structured positions: token t = (prev*31 + 7) mod vocab — a
+            # learnable next-token rule, applied sequentially so the
+            # invariant holds through cascaded replacements
+            mask = rng.random((self.batch, self.seq_len - 1)) < self.structure
+            for t in range(1, self.seq_len):
+                det = (base[:, t - 1] * 31 + 7) % self.vocab
+                base[:, t] = np.where(mask[:, t - 1], det, base[:, t])
+            yield {"tokens": base, "labels": base.copy()}
+
+
+class PrefetchIterator:
+    """Background-thread prefetch with a bounded buffer (never blocks the
+    device on host-side batch building)."""
+
+    def __init__(self, it, buffer_size: int = 2, device_put: bool = True,
+                 sharding=None):
+        self._q: queue.Queue = queue.Queue(maxsize=buffer_size)
+        self._sentinel = object()
+        self.dropped = 0
+
+        def _producer():
+            try:
+                for item in it:
+                    if device_put:
+                        item = jax.tree.map(
+                            lambda a: jax.device_put(jnp.asarray(a), sharding)
+                            if sharding is not None else jnp.asarray(a), item)
+                    self._q.put(item)
+            finally:
+                self._q.put(self._sentinel)
+
+        self._thread = threading.Thread(target=_producer, daemon=True)
+        self._thread.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._sentinel:
+            raise StopIteration
+        return item

@@ -1,0 +1,4 @@
+from .ops import mha, preferred_mode
+from .ref import mha_ref
+
+__all__ = ["mha", "mha_ref", "preferred_mode"]

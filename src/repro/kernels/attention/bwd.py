@@ -1,0 +1,164 @@
+"""Pallas TPU flash-attention BACKWARD (FlashAttention-2 style).
+
+Recomputes the probabilities from (q, k, LSE) tile-by-tile — no O(S²)
+materialization — in two passes with opposite accumulation orders:
+
+* ``_dq_kernel``: grid (BH, i, j), KV innermost; accumulates
+  dq_i = scale · Σ_j (p ∘ (do·vᵀ − D)) k_j in a VMEM scratch tile;
+* ``_dkv_kernel``: grid (BH, j, i), Q innermost; accumulates
+  dv_j = Σ_i pᵀ do_i and dk_j = scale · Σ_i (p ∘ (do·vᵀ − D))ᵀ q_i.
+
+Both skip above-diagonal tiles under the causal mask (same 2× saving as
+forward).  D_i = rowsum(do_i ∘ o_i) is a cheap jnp precomputation.  GQA is
+handled in ``ops.py`` by expanding KV to the q-head grid and group-summing
+dk/dv afterwards (the expansion exists only inside the backward).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_bwd"]
+
+NEG_INF = -1e30
+
+
+def _p_and_ds(q, k, v, do, lse, d_rows, i, j, blk_q, blk_k, causal, scale):
+    s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if causal:
+        qpos = i * blk_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (blk_q, blk_k), 0)
+        kpos = j * blk_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (blk_q, blk_k), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - d_rows[:, None])
+    return p, ds
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, dq_ref, acc_ref,
+               *, blk_q, blk_k, n_k, causal, scale):
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (j * blk_k) <= (i * blk_q + blk_q - 1) if causal else j >= 0
+
+    @pl.when(run)
+    def _body():
+        _, ds = _p_and_ds(q_ref[0].astype(jnp.float32),
+                          k_ref[0].astype(jnp.float32),
+                          v_ref[0].astype(jnp.float32),
+                          do_ref[0].astype(jnp.float32),
+                          lse_ref[0], d_ref[0], i, j, blk_q, blk_k,
+                          causal, scale)
+        acc_ref[...] += scale * jax.lax.dot_general(
+            ds, k_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_k - 1)
+    def _store():
+        dq_ref[0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, dk_ref, dv_ref,
+                dk_acc, dv_acc, *, blk_q, blk_k, n_q, causal, scale):
+    j, i = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    run = (j * blk_k) <= (i * blk_q + blk_q - 1) if causal else i >= 0
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)
+        p, ds = _p_and_ds(q, k_ref[0].astype(jnp.float32),
+                          v_ref[0].astype(jnp.float32), do,
+                          lse_ref[0], d_ref[0], i, j, blk_q, blk_k,
+                          causal, scale)
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dk_acc[...] += scale * jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(i == n_q - 1)
+    def _store():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "blk_q", "blk_k",
+                                             "interpret"))
+def flash_attention_bwd(q, k, v, o, do, lse, causal: bool = True,
+                        blk_q: int = 128, blk_k: int = 128,
+                        interpret: bool = False):
+    """All inputs head-major MHA layout: q/k/v/o/do [BH, S, dh],
+    lse [BH, S] → (dq, dk, dv) with the input dtypes."""
+    BH, S, dh = q.shape
+    T = k.shape[1]
+    blk_q = min(blk_q, S)
+    blk_k = min(blk_k, T)
+    if S % blk_q or T % blk_k:
+        raise ValueError("block sizes must divide sequence lengths")
+    n_q, n_k = S // blk_q, T // blk_k
+    scale = 1.0 / (dh ** 0.5)
+    d_rows = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), -1)
+
+    common = dict(blk_q=blk_q, blk_k=blk_k, causal=causal, scale=scale)
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, n_k=n_k, **common),
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_q), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, blk_q), lambda b, i, j: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((blk_q, dh), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, d_rows)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, n_q=n_q, **common),
+        grid=(BH, n_k, n_q),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, dh), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, blk_q, dh), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, blk_q), lambda b, j, i: (b, i)),
+            pl.BlockSpec((1, blk_q), lambda b, j, i: (b, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk_k, dh), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda b, j, i: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, dh), k.dtype),
+            jax.ShapeDtypeStruct((BH, T, dh), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((blk_k, dh), jnp.float32),
+                        pltpu.VMEM((blk_k, dh), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, d_rows)
+    return dq, dk, dv

@@ -1,0 +1,78 @@
+"""Public entry for flash attention: kernel on TPU, oracle elsewhere.
+
+``mha(q, k, v, causal, mode)``:
+* mode="pallas"    — compiled Pallas kernel (TPU);
+* mode="interpret" — Pallas kernel under interpret=True (CPU tests);
+* mode="ref"/None-on-CPU — the jnp oracle (XLA's fusion is the right
+  fallback off-TPU).
+
+custom_vjp: forward takes the kernel path and saves (q, k, v, o, LSE);
+backward runs the Pallas FlashAttention-2 kernels (``bwd.py``) — the
+probabilities are recomputed tile-by-tile from the LSE, so neither pass
+materializes O(S²) state, and causal tiles above the diagonal are skipped
+in both directions.  GQA backward expands KV to the q-head grid and
+group-sums dk/dv (the expansion exists only inside the backward).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .bwd import flash_attention_bwd
+from .kernel import flash_attention
+from .ref import mha_ref
+
+__all__ = ["mha", "preferred_mode"]
+
+
+def preferred_mode() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def mha(q, k, v, causal: bool = True, mode: str | None = None):
+    return _fwd(q, k, v, causal, mode)[0]
+
+
+def _fwd(q, k, v, causal, mode):
+    mode = mode or preferred_mode()
+    if mode == "ref":
+        out = mha_ref(q, k, v, causal)
+        return out, (q, k, v, None, None)
+    out, lse = flash_attention(q, k, v, causal=causal,
+                               interpret=(mode == "interpret"),
+                               return_lse=True)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, mode, res, ct):
+    q, k, v, o, lse = res
+    mode = mode or preferred_mode()
+    if mode == "ref" or o is None:
+        _, vjp = jax.vjp(lambda q_, k_, v_: mha_ref(q_, k_, v_, causal),
+                         q, k, v)
+        return vjp(ct)
+    B, S, H, dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    head_major = lambda t: t.transpose(0, 2, 1, 3).reshape(-1, t.shape[1], dh)
+    qh, oh, doh = head_major(q), head_major(o), head_major(ct)
+    # expand KV to the q-head grid (GQA backward)
+    kexp = jnp.repeat(k, G, axis=2)
+    vexp = jnp.repeat(v, G, axis=2)
+    kh, vh = head_major(kexp), head_major(vexp)
+    lseh = lse.transpose(0, 2, 1).reshape(-1, S)
+    dqh, dkh, dvh = flash_attention_bwd(
+        qh, kh, vh, oh, doh, lseh, causal=causal,
+        interpret=(mode == "interpret"))
+    back = lambda t, n: t.reshape(B, n, -1, dh).transpose(0, 2, 1, 3)
+    dq = back(dqh, H)
+    dk = back(dkh, H).reshape(B, T, K, G, dh).sum(3)
+    dv = back(dvh, H).reshape(B, T, K, G, dh).sum(3)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+mha.defvjp(_fwd, _bwd)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+__all__ = ["mha_ref"]
+
+
+def mha_ref(q, k, v, causal: bool = True) -> jnp.ndarray:
+    """q: [B,S,H,dh]; k,v: [B,T,K,dh] (H = G·K grouped) → [B,S,H,dh]."""
+    B, S, H, dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, dh)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) / (dh ** 0.5)
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(q.dtype), v)
+    return out.reshape(B, S, H, dh)

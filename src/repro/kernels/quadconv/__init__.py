@@ -1,0 +1,4 @@
+from .ops import quadconv_contract, preferred_mode
+from .ref import quadconv_contract as quadconv_contract_ref
+
+__all__ = ["quadconv_contract", "quadconv_contract_ref", "preferred_mode"]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the QuadConv quadrature contraction.
+
+QuadConv (Doherty et al. 2023, arXiv:2211.05151) approximates a continuous
+convolution with a single quadrature sum over non-uniform points:
+
+    out[b, j, o] = sum_i sum_c  w[i] * G[j, i, o, c] * f[b, i, c]
+
+where ``w`` are learned quadrature weights over the I input points, ``G`` is
+the MLP-parameterized kernel evaluated at point-pair offsets, f has C input
+channels, and the output lives on J (possibly different) points with O
+channels.  This contraction is the FLOPs hot spot of the paper's autoencoder
+(everything else is small MLPs), hence the Pallas kernel next door.
+
+The contraction is a single GEMM in disguise:
+
+    out[b, (j,o)] = sum_{(i,c)} (w[i] f[b,i,c]) · G^T[(i,c), (j,o)]
+
+which is exactly how both the kernel and this oracle compute it.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["quadconv_contract"]
+
+
+def quadconv_contract(f: jnp.ndarray, w: jnp.ndarray, g: jnp.ndarray
+                      ) -> jnp.ndarray:
+    """out[b,j,o] = Σ_{i,c} w[i] G[j,i,o,c] f[b,i,c].
+
+    Args:
+      f: [B, I, C] input features on I quadrature points.
+      w: [I] quadrature weights.
+      g: [J, I, O, C] kernel tensor (MLP(x_j - y_i), compact-support masked).
+    Returns:
+      [B, J, O]
+    """
+    return jnp.einsum("i,jioc,bic->bjo", w, g, f,
+                      preferred_element_type=jnp.float32).astype(f.dtype)

@@ -1,0 +1,4 @@
+from .ops import preferred_mode, ssd_scan
+from .ref import ssd_intra_ref
+
+__all__ = ["ssd_scan", "ssd_intra_ref", "preferred_mode"]

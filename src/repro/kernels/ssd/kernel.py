@@ -1,0 +1,91 @@
+"""Pallas TPU kernel for the SSD intra-chunk contraction (Mamba-2).
+
+One grid step = one (sequence-chunk × head-block): the decay-weighted
+"attention-like" matmul ``(C Bᵀ ∘ L) · X`` plus the chunk-state outer
+product, all in VMEM:
+
+* grid = (B·n_chunks, H/blk_h); chunks are independent (the sequential
+  inter-chunk recurrence stays outside — it is O(S/Q) tiny updates);
+* VMEM per step @ Q=128, blk_h=8, P=64, N=128:
+  xdt (128·8·64) + scores (128²) + W (128²·8) + y + state ≈ 1.3 MB fp32 —
+  double-bufferable against the 16 MB budget;
+* the (Q×Q) score matmul and the (Q×Q)@(Q×P) contraction per head hit the
+  MXU; cumsum/exp decay math rides the VPU.
+
+Numerics follow the chunked reference exactly (fp32 throughout).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_intra"]
+
+
+def _kernel(xdt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, cum_ref, *,
+            q: int, blk_h: int, p: int):
+    xdt = xdt_ref[0].astype(jnp.float32)       # [Q, blk_h, P]
+    a = a_ref[0].astype(jnp.float32)           # [Q, blk_h]
+    b = b_ref[0].astype(jnp.float32)           # [Q, N]
+    c = c_ref[0].astype(jnp.float32)           # [Q, N]
+    cum = jnp.cumsum(a, axis=0)                # [Q, blk_h]
+    # decay matrix per head: L[i,j,h] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, None, :] - cum[None, :, :]   # [Q, Q, blk_h]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    w = jnp.where((ii >= jj)[:, :, None], jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    sw = scores[:, :, None] * w                # [Q, Q, blk_h]
+    # y[i,h,p] = Σ_j sw[i,j,h] xdt[j,h,p]  — batched matmul over h
+    y = jnp.einsum("ijh,jhp->ihp", sw, xdt,
+                   preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+    # state[h,p,n] = Σ_j xdt[j,h,p] b[j,n] exp(cum_last - cum_j)
+    decay_end = jnp.exp(cum[-1:, :] - cum)     # [Q, blk_h]
+    xw = xdt * decay_end[:, :, None]
+    state = jnp.einsum("jhp,jn->hpn", xw, b,
+                       preferred_element_type=jnp.float32)
+    state_ref[0] = state.astype(state_ref.dtype)
+    cum_ref[0] = cum.astype(cum_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_h", "interpret"))
+def ssd_intra(xdt: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+              blk_h: int = 8, interpret: bool = False):
+    """xdt:[BC,Q,H,P], a:[BC,Q,H], b,c:[BC,Q,N] →
+    (y [BC,Q,H,P] f32, state [BC,H,P,N] f32, cum [BC,Q,H] f32)."""
+    BC, Q, H, P = xdt.shape
+    N = b.shape[-1]
+    blk_h = min(blk_h, H)
+    if H % blk_h:
+        raise ValueError(f"H={H} not divisible by blk_h={blk_h}")
+    nh = H // blk_h
+    grid = (BC, nh)
+    y, state, cum = pl.pallas_call(
+        functools.partial(_kernel, q=Q, blk_h=blk_h, p=P),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, blk_h, P), lambda i, h: (i, 0, h, 0)),
+            pl.BlockSpec((1, Q, blk_h), lambda i, h: (i, 0, h)),
+            pl.BlockSpec((1, Q, N), lambda i, h: (i, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda i, h: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, blk_h, P), lambda i, h: (i, 0, h, 0)),
+            pl.BlockSpec((1, blk_h, P, N), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, Q, blk_h), lambda i, h: (i, 0, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BC, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((BC, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((BC, Q, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, a, b, c)
+    return y, state, cum

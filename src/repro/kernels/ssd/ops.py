@@ -1,0 +1,71 @@
+"""Public entry: full chunked SSD scan with the Pallas intra-chunk kernel.
+
+``ssd_scan(xdt, a, b_coef, c_coef, chunk, mode)`` reproduces
+``models.ssd.ssd_scan_chunked`` exactly, with the parallel intra-chunk
+heavy lifting in the kernel (TPU) and the O(S/chunk) inter-chunk
+recurrence as a tiny jnp scan.  mode: "pallas" | "interpret" | "ref".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_intra
+from .ref import ssd_intra_ref
+
+__all__ = ["ssd_scan", "preferred_mode"]
+
+
+def preferred_mode() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def ssd_scan(xdt, a, b_coef, c_coef, chunk: int, mode: str | None = None,
+             h0=None):
+    """Same contract as models.ssd.ssd_scan_chunked: returns (y, h_final)."""
+    mode = mode or preferred_mode()
+    B, S, H, P = xdt.shape
+    N = b_coef.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        raise ValueError(f"S={S} must divide chunk={Q} (pad upstream)")
+    nc = S // Q
+    fold = lambda t: t.reshape(B * nc if False else B, nc, Q, *t.shape[2:]) \
+        .reshape(B * nc, Q, *t.shape[2:])
+    xdt_c = xdt.reshape(B, nc, Q, H, P).reshape(B * nc, Q, H, P)
+    a_c = a.reshape(B, nc, Q, H).reshape(B * nc, Q, H)
+    b_c = b_coef.reshape(B, nc, Q, N).reshape(B * nc, Q, N)
+    c_c = c_coef.reshape(B, nc, Q, N).reshape(B * nc, Q, N)
+
+    if mode == "ref":
+        y_i, states, cum = ssd_intra_ref(xdt_c, a_c, b_c, c_c)
+    else:
+        y_i, states, cum = ssd_intra(xdt_c, a_c, b_c, c_c,
+                                     interpret=(mode == "interpret"))
+
+    y_i = y_i.reshape(B, nc, Q, H, P)
+    states = states.reshape(B, nc, H, P, N)
+    cum = cum.reshape(B, nc, Q, H)
+    c_r = c_coef.reshape(B, nc, Q, N).astype(jnp.float32)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # [B,nc,H]
+
+    # inter-chunk recurrence: h_c = decay_c · h_{c-1} + S_c  (tiny scan)
+    h_init = jnp.zeros((B, H, P, N), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        s_c, d_c = inp                                  # [B,H,P,N],[B,H]
+        h_prev = h
+        h = d_c[:, :, None, None] * h + s_c
+        return h, h_prev
+
+    h_final, h_prevs = jax.lax.scan(
+        step, h_init, (states.transpose(1, 0, 2, 3, 4),
+                       chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)          # [B,nc,H,P,N]
+
+    # inter-chunk contribution: y_i += exp(cum) · C_i · h_prev
+    y_x = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", c_r, h_prevs, jnp.exp(cum))
+    y = (y_i + y_x).reshape(B, S, H, P)
+    return y, h_final

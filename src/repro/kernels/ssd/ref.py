@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the SSD intra-chunk computation.
+
+Per chunk (the Mamba-2 chunked algorithm's parallel part):
+    cum_i   = Σ_{l≤i} a_l                          (within-chunk decay)
+    Y_i     = Σ_{j≤i} (C_i·B_j) · exp(cum_i−cum_j) · xdt_j   (intra output)
+    S       = Σ_j  xdt_j ⊗ B_j · exp(cum_last−cum_j)          (chunk state)
+The inter-chunk recurrence (sequential, tiny) stays outside the kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ssd_intra_ref"]
+
+
+def ssd_intra_ref(xdt, a, b, c):
+    """xdt:[BC,Q,H,P] (B·chunks folded), a:[BC,Q,H], b,c:[BC,Q,N]
+    → (y:[BC,Q,H,P], state:[BC,H,P,N], cum:[BC,Q,H])."""
+    xdt = xdt.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    Q = xdt.shape[1]
+    cum = jnp.cumsum(a, axis=1)
+    diff = cum[:, :, None, :] - cum[:, None, :, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    w = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bin,bjn->bij", c, b)
+    y = jnp.einsum("bij,bijh,bjhp->bihp", scores, w, xdt)
+    decay_end = jnp.exp(cum[:, -1:, :] - cum)
+    state = jnp.einsum("bjhp,bjn,bjh->bhpn", xdt, b, decay_end)
+    return y, state, cum

@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve/in-situ."""
+
+from .mesh import HW, make_production_mesh
+
+__all__ = ["HW", "make_production_mesh"]

@@ -1,0 +1,36 @@
+"""Splice generated tables into EXPERIMENTS.md.
+
+Replaces ``<!-- INCLUDE:path -->`` markers with the file contents (between
+BEGIN/END guard comments so re-assembly is idempotent).
+
+Usage: PYTHONPATH=src python -m repro.launch.assemble_experiments
+"""
+
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+DOC = Path("EXPERIMENTS.md")
+MARK = re.compile(
+    r"<!-- INCLUDE:(?P<path>[^ ]+) -->"
+    r"(?:\n<!-- BEGIN-INCLUDE -->.*?<!-- END-INCLUDE -->)?",
+    re.DOTALL)
+
+
+def main() -> None:
+    text = DOC.read_text()
+
+    def _sub(m):
+        path = m.group("path")
+        body = Path(path).read_text().rstrip()
+        return (f"<!-- INCLUDE:{path} -->\n<!-- BEGIN-INCLUDE -->\n"
+                f"{body}\n<!-- END-INCLUDE -->")
+
+    new = MARK.sub(_sub, text)
+    DOC.write_text(new)
+    print(f"assembled {len(MARK.findall(text))} includes")
+
+
+if __name__ == "__main__":
+    main()

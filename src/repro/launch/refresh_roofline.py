@@ -1,0 +1,69 @@
+"""Recompute the roofline section of cached dry-run JSONs without
+recompiling (the analytic FLOP/byte/comm models are pure functions of the
+config; the compiled memory/HLO fields are untouched).
+
+Usage: PYTHONPATH=src python -m repro.launch.refresh_roofline [dir]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+from ..analysis import comm as comm_mod
+from ..analysis import flops as flops_mod
+from ..analysis.roofline import roofline
+from ..configs.registry import SHAPES, get_config
+from .steps import rules_for
+
+
+def refresh(path: Path) -> bool:
+    d = json.loads(path.read_text())
+    if d.get("status") != "ok":
+        return False
+    cfg = get_config(d["arch"])
+    if d.get("overrides"):
+        cfg = dataclasses.replace(cfg, **d["overrides"])
+    shape = SHAPES[d["shape"]]
+    rules = rules_for(cfg, shape)
+    rep = flops_mod.analyze(cfg, shape)
+    occ = flops_mod.hbm_occupancy(cfg, shape, d["chips"])
+    comm = comm_mod.collective_model(cfg, shape, d["mesh"], rules)
+    corrected = d.get("cost_analysis_corrected", {})
+    hlo_coll = corrected.get(
+        "collective_link_bytes",
+        d.get("collectives_raw", {}).get("link_bytes", 0))
+    rt = roofline(d["arch"], d["shape"], d["mesh"], d["chips"],
+                  machine_flops=rep.machine_flops,
+                  model_flops=rep.model_flops,
+                  hbm_bytes=rep.hbm_bytes,
+                  collective_bytes=comm.per_device_bytes,
+                  useful_bytes=rep.param_bytes + rep.cache_bytes,
+                  extra={"flop_breakdown": rep.breakdown,
+                         "comm_breakdown": comm.breakdown,
+                         "hlo_link_bytes_upper_bound": float(hlo_coll)})
+    d["analytic"] = {
+        "machine_flops": rep.machine_flops, "model_flops": rep.model_flops,
+        "param_bytes": rep.param_bytes, "cache_bytes": rep.cache_bytes,
+        "act_bytes": rep.act_bytes,
+        "comm_per_device_bytes": comm.per_device_bytes,
+        "hbm_occupancy": occ,
+    }
+    d["roofline"] = rt.as_dict()
+    path.write_text(json.dumps(d, indent=1, default=str))
+    return True
+
+
+def main() -> None:
+    out_dir = Path(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
+    n = 0
+    for p in sorted(out_dir.glob("*.json")):
+        if refresh(p):
+            n += 1
+    print(f"refreshed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

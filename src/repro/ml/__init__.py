@@ -1,0 +1,9 @@
+"""Data-consumer substrate: QuadConv autoencoder (paper §4), ResNet50
+(paper §3.2 inference benches) and the store-backed in-situ trainer."""
+
+from . import autoencoder, quadconv, resnet, trainer
+from .autoencoder import AEConfig
+from .trainer import TrainerConfig, TrainState
+
+__all__ = ["autoencoder", "quadconv", "resnet", "trainer", "AEConfig",
+           "TrainerConfig", "TrainState"]

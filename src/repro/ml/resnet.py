@@ -1,0 +1,101 @@
+"""ResNet50 in pure JAX — the paper's inference benchmark model (§3.2).
+
+The paper characterizes in-situ inference cost with ResNet50
+((n,3,224,224) → (n,1000)) served through RedisAI.  We implement the
+standard bottleneck-v1.5 network as init/apply pure functions.  BatchNorm
+runs in inference mode (folded scale/shift), matching a deployed model; the
+benchmarks measure transfer + evaluation cost, not accuracy, so weights are
+randomly initialized.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_resnet50", "apply_resnet50", "RESNET50_STAGES"]
+
+RESNET50_STAGES = (3, 4, 6, 3)
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout)) * jnp.sqrt(2.0 / fan_in)
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _bottleneck_init(key, cin, cmid, stride):
+    ks = jax.random.split(key, 4)
+    cout = cmid * 4
+    p = {
+        "conv1": _conv_init(ks[0], 1, 1, cin, cmid), "bn1": _bn_init(cmid),
+        "conv2": _conv_init(ks[1], 3, 3, cmid, cmid), "bn2": _bn_init(cmid),
+        "conv3": _conv_init(ks[2], 1, 1, cmid, cout), "bn3": _bn_init(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(ks[3], 1, 1, cin, cout)
+        p["bn_proj"] = _bn_init(cout)
+    return p
+
+
+def init_resnet50(key, num_classes: int = 1000) -> dict:
+    keys = jax.random.split(key, 2 + sum(RESNET50_STAGES))
+    params: dict = {
+        "stem": _conv_init(keys[0], 7, 7, 3, 64),
+        "bn_stem": _bn_init(64),
+        "stages": [],
+    }
+    cin, ki = 64, 1
+    for s, blocks in enumerate(RESNET50_STAGES):
+        cmid = 64 * (2 ** s)
+        stage = []
+        for b in range(blocks):
+            stride = 2 if (b == 0 and s > 0) else 1
+            stage.append(_bottleneck_init(keys[ki], cin, cmid, stride))
+            cin = cmid * 4
+            ki += 1
+        params["stages"].append(stage)
+    params["fc"] = {
+        "w": jax.random.normal(keys[ki], (cin, num_classes))
+        * jnp.sqrt(1.0 / cin),
+        "b": jnp.zeros((num_classes,)),
+    }
+    return params
+
+
+def _conv(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn(x, p):
+    return x * p["scale"] + p["bias"]
+
+
+def _bottleneck(p, x, stride):
+    y = jax.nn.relu(_bn(_conv(x, p["conv1"]), p["bn1"]))
+    y = jax.nn.relu(_bn(_conv(y, p["conv2"], stride), p["bn2"]))
+    y = _bn(_conv(y, p["conv3"]), p["bn3"])
+    if "proj" in p:
+        x = _bn(_conv(x, p["proj"], stride), p["bn_proj"])
+    return jax.nn.relu(x + y)
+
+
+def apply_resnet50(params: dict, x: jax.Array) -> jax.Array:
+    """x: [N, 3, 224, 224] (paper's NCHW interface) → logits [N, 1000]."""
+    x = x.transpose(0, 2, 3, 1)                     # NCHW → NHWC (TPU layout)
+    x = jax.nn.relu(_bn(_conv(x, params["stem"], 2), params["bn_stem"]))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for s, stage in enumerate(params["stages"]):
+        for b, block in enumerate(stage):
+            stride = 2 if (b == 0 and s > 0) else 1
+            x = _bottleneck(block, x, stride)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["fc"]["w"] + params["fc"]["b"]

@@ -1,0 +1,7 @@
+"""Assigned-architecture model zoo: generic pattern-based decoder LM
+(dense/GQA/MoE/SSM/hybrid), Whisper enc-dec, shared layers."""
+
+from . import layers, lm, moe, ssd, whisper
+from .config import ModelConfig
+
+__all__ = ["layers", "lm", "moe", "ssd", "whisper", "ModelConfig"]

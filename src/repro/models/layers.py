@@ -1,0 +1,466 @@
+"""Shared neural layers: norms, RoPE, GQA attention (train/prefill/decode),
+dense MLP variants, embeddings — all pure functions with logical-axis
+sharding annotations (``parallel.sharding.shard``).
+
+Attention offers two execution plans:
+* ``full``   — materialize [B,H,S,T] scores (short sequences, encoders);
+* ``chunked``— streaming-softmax over KV blocks with q-blocking
+  (memory-bounded for 32k prefill; the pure-JAX fallback of the Pallas
+  flash kernel in ``repro.kernels.attention``).
+
+Decode attends one query against a fixed-capacity KV cache with a length
+mask.  All softmax statistics accumulate in fp32.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import ParamSpec, shard, shard_fit
+
+__all__ = ["rmsnorm", "layernorm", "norm_spec", "apply_norm", "rope",
+           "attention_specs", "attention", "decode_attention", "KVCache",
+           "mlp_specs", "mlp_apply", "embed_specs"]
+
+NEG_INF = -1e30
+
+
+@jax.custom_vjp
+def ct_cast(x):
+    """Identity forward; casts the COTANGENT to x's dtype on the way back.
+
+    §Perf H1.1': fp32 sneaks into the backward pass through the norm
+    layers' fp32 variance paths (any fp32 contribution promotes the whole
+    accumulated cotangent), doubling every activation-gradient collective
+    and HBM byte.  Inserting this at block boundaries pins the residual
+    stream's cotangent to bf16.  Gradient *values* change only by bf16
+    rounding of the cotangent (weight grads still accumulate in fp32 inside
+    the einsum transposes).
+    """
+    return x
+
+
+def _ct_cast_fwd(x):
+    # residual must be a JAX type: carry the dtype as a 0-sized array
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _ct_cast_bwd(res, ct):
+    return (ct.astype(res.dtype),)
+
+
+ct_cast.defvjp(_ct_cast_fwd, _ct_cast_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_spec(d: int, kind: str, stacked: tuple[int, ...] = ()) -> dict:
+    axes = ("layers",) * len(stacked)
+    p = {"scale": ParamSpec(stacked + (d,), axes + (None,), "ones")}
+    if kind == "layernorm":
+        p["bias"] = ParamSpec(stacked + (d,), axes + (None,), "zeros")
+    return p
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def layernorm(x, scale, bias, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+def apply_norm(params: dict, x, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B,S,H,dh]; positions: [B,S] (int).  Rotates pairs (even, odd)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # [B,S,half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([
+        x1 * cos - x2 * sin,
+        x2 * cos + x1 * sin,
+    ], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array     # [B, T, K·dh] (flattened; see attention_specs)
+    v: jax.Array
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV cache with per-(token, kv-head) scales (§Perf H3.1).
+
+    Halves the decode memory term vs bf16 — the dominant roofline term for
+    every ``decode_32k`` cell.  Quantization error ≤ scale/254 per element;
+    accuracy checked against the bf16 path in tests.
+    """
+
+    k: jax.Array         # int8 [B, T, K·dh]
+    v: jax.Array
+    k_scale: jax.Array   # f32 [B, T, K]
+    v_scale: jax.Array
+
+
+def attention_specs(cfg, stacked: tuple[int, ...] = (), cross: bool = False
+                    ) -> dict:
+    """Projection weights stored with FLATTENED head dims ([D, H·dh]):
+    H·dh is 16-divisible for every assigned arch even when H is not (e.g.
+    36 heads), so jit *input* shardings stay exact; activations reshape to
+    [.., H, dh] and rely on GSPMD padding for uneven head counts."""
+    D, H, K, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    lay = ("layers",) * len(stacked)
+    p = {
+        "wq": ParamSpec(stacked + (D, H * dh), lay + ("embed", "heads")),
+        "wk": ParamSpec(stacked + (D, K * dh), lay + ("embed", "kv_heads")),
+        "wv": ParamSpec(stacked + (D, K * dh), lay + ("embed", "kv_heads")),
+        "wo": ParamSpec(stacked + (H * dh, D), lay + ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ParamSpec(stacked + (dh,), lay + (None,), "ones")
+        p["k_norm"] = ParamSpec(stacked + (dh,), lay + (None,), "ones")
+    return p
+
+
+def _tp_degree() -> int:
+    from ..parallel.sharding import current_mesh
+    mesh = current_mesh()
+    return mesh.shape.get("model", 1) if mesh is not None else 1
+
+
+def _maybe_pad_heads(q, k, v, cfg):
+    """§Perf H1.2: pad head counts to the TP degree.
+
+    Uneven head counts (36 q-heads over a 16-way TP axis) make GSPMD fall
+    back to "involuntary full rematerialization" reshards.  Padding with
+    zero heads keeps every attention einsum exactly sharded; padded heads'
+    outputs are sliced away before the out-projection (cost: H_pad/H ×
+    attention FLOPs, accounted in the roofline).
+
+    GQA grouping is preserved: q pads *within* each KV group (G → G_pad),
+    MHA (G=1) pads q and kv together.  Returns (q, k, v, unpad_fn).
+    """
+    ident = lambda out: out
+    if not cfg.pad_heads:
+        return q, k, v, ident
+    tp = _tp_degree()
+    B, S, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    if H % tp == 0:
+        return q, k, v, ident
+    if G == 1:
+        Hp = H + (-H) % tp
+        padw = ((0, 0), (0, 0), (0, Hp - H), (0, 0))
+        q2, k2, v2 = (jnp.pad(t, padw) for t in (q, k, v))
+
+        def unpad(out):
+            return out[:, :, :H]
+        return q2, k2, v2, unpad
+    gp = G
+    while (K * gp) % tp:
+        gp += 1
+    q5 = q.reshape(B, S, K, G, dh)
+    q5 = jnp.pad(q5, ((0, 0), (0, 0), (0, 0), (0, gp - G), (0, 0)))
+    q2 = q5.reshape(B, S, K * gp, dh)
+
+    def unpad(out):
+        B_, S_ = out.shape[0], out.shape[1]
+        return out.reshape(B_, S_, K, gp, dh)[:, :, :, :G] \
+            .reshape(B_, S_, H, dh)
+    return q2, k, v, unpad
+
+
+def _project_qkv(params, cfg, x, positions, use_rope=True):
+    B, S, _ = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(B, S, H, dh)
+    k = jnp.einsum("bsd,de->bse", x, params["wk"]).reshape(B, S, K, dh)
+    v = jnp.einsum("bsd,de->bse", x, params["wv"]).reshape(B, S, K, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = shard_fit(q, "batch", "length", "heads", None)
+    k = shard_fit(k, "batch", "length", "kv_heads", None)
+    v = shard_fit(v, "batch", "length", "kv_heads", None)
+    return q, k, v
+
+
+def _full_attention(q, k, v, causal: bool, kv_offset: int = 0):
+    """q:[B,S,H,dh] k,v:[B,T,K,dh] → [B,S,H,dh] (scores materialized)."""
+    B, S, H, dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, dh)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) / (dh ** 0.5)
+    if causal:
+        qpos = kv_offset + jnp.arange(S)[:, None]
+        kpos = jnp.arange(T)[None, :]
+        logits = jnp.where((qpos >= kpos)[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return out.reshape(B, S, H, dh)
+
+
+def _chunked_attention(q, k, v, causal: bool, chunk: int):
+    """Streaming-softmax attention over q/kv blocks (flash-style in jnp).
+
+    Causal block skipping: kv blocks strictly above the diagonal are
+    masked; their compute is still issued (dense scan) — the Pallas kernel
+    removes it on TPU; the roofline counts this as the documented 2×
+    attention-FLOP slack of the fallback.
+    """
+    B, S, H, dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    if S % chunk or T % chunk:
+        return _full_attention(q, k, v, causal)
+    nq, nk = S // chunk, T // chunk
+    qg = q.reshape(B, nq, chunk, K, G, dh)
+
+    def q_block(_, i):
+        qi = qg[:, i]                                    # [B,c,K,G,dh]
+
+        def kv_block(acc, j):
+            m, s, o = acc
+            kj = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, 1)
+            vj = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, 1)
+            logits = jnp.einsum("bqkgd,btkd->bkgqt", qi, kj,
+                                preferred_element_type=jnp.float32) / (dh ** 0.5)
+            if causal:
+                qpos = i * chunk + jnp.arange(chunk)[:, None]
+                kpos = j * chunk + jnp.arange(chunk)[None, :]
+                logits = jnp.where((qpos >= kpos)[None, None, None],
+                                   logits, NEG_INF)
+            mn = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - mn[..., None])
+            corr = jnp.exp(m - mn)
+            s2 = s * corr + p.sum(-1)
+            o2 = o * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, vj.astype(jnp.float32))
+            return (mn, s2, o2), None
+
+        m0 = jnp.full((B, K, G, chunk), NEG_INF, jnp.float32)
+        s0 = jnp.zeros((B, K, G, chunk), jnp.float32)
+        o0 = jnp.zeros((B, K, G, chunk, dh), jnp.float32)
+        (m, s, o), _ = jax.lax.scan(kv_block, (m0, s0, o0), jnp.arange(nk))
+        out = (o / jnp.maximum(s[..., None], 1e-30)).astype(q.dtype)
+        return None, out.transpose(0, 3, 1, 2, 4)        # [B,c,K,G,dh]
+
+    _, outs = jax.lax.scan(q_block, None, jnp.arange(nq))
+    outs = outs.transpose(1, 0, 2, 3, 4, 5)              # [B,nq,c,K,G,dh]
+    return outs.reshape(B, S, H, dh)
+
+
+def _out_proj(params, out, cfg):
+    B, S = out.shape[0], out.shape[1]
+    flat = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    y = jnp.einsum("bse,ed->bsd", flat, params["wo"])
+    return shard(y, "batch", "length", None)
+
+
+def attention(params: dict, cfg, x: jax.Array, positions: jax.Array,
+              causal: bool = True, kv: jax.Array | None = None,
+              use_rope: bool = True) -> jax.Array:
+    """Self- (or cross-, via ``kv``) attention over a full sequence.
+
+    x: [B,S,D].  Returns [B,S,D].  Chunked plan picked for long sequences.
+    """
+    B, S, D = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if kv is None:
+        q, k, v = _project_qkv(params, cfg, x, positions, use_rope)
+    else:
+        q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(B, S, H, dh)
+        if cfg.qk_norm:
+            q = rmsnorm(q, params["q_norm"])
+        if use_rope:
+            q = rope(q, positions, cfg.rope_theta)
+        T = kv.shape[1]
+        k = jnp.einsum("btd,de->bte", kv, params["wk"]).reshape(B, T, K, dh)
+        v = jnp.einsum("btd,de->bte", kv, params["wv"]).reshape(B, T, K, dh)
+        if cfg.qk_norm:
+            k = rmsnorm(k, params["k_norm"])
+    out = _attention_core(q, k, v, causal, cfg)
+    out = shard_fit(out, "batch", "length", "heads", None)
+    return _out_proj(params, out, cfg)
+
+
+def _attention_core(q, k, v, causal, cfg):
+    """Dispatch the attention plan: Pallas flash kernel / chunked / full,
+    with optional TP head padding around the core."""
+    q, k, v, unpad = _maybe_pad_heads(q, k, v, cfg)
+    if q.shape[2] != cfg.n_heads:        # padded: exact head sharding now
+        q = shard_fit(q, "batch", "length", "heads", None)
+    S, T = q.shape[1], k.shape[1]
+    if cfg.attn_impl in ("flash", "flash_interpret"):
+        from ..kernels.attention import mha
+        mode = "interpret" if cfg.attn_impl == "flash_interpret" else None
+        out = mha(q, k, v, causal, mode)
+    elif S > cfg.attn_chunk and S % cfg.attn_chunk == 0 \
+            and T % cfg.attn_chunk == 0:
+        out = _chunked_attention(q, k, v, causal, cfg.attn_chunk)
+    else:
+        out = _full_attention(q, k, v, causal)
+    return unpad(out)
+
+
+def prefill_attention(params: dict, cfg, x, positions, use_rope: bool = True):
+    """Like ``attention`` but also returns the KV cache for decode.
+
+    Cache K/V stored flattened [B, S, K·dh] (16-divisible input sharding)."""
+    q, k, v = _project_qkv(params, cfg, x, positions, use_rope)
+    B, S = x.shape[0], x.shape[1]
+    out = _attention_core(q, k, v, True, cfg)
+    kd = cfg.n_kv_heads * cfg.head_dim
+    cache = KVCache(k=k.reshape(B, S, kd), v=v.reshape(B, S, kd))
+    return _out_proj(params, out, cfg), cache
+
+
+def _quantize_kv(x: jax.Array, K: int, dh: int):
+    """x [B,1,K,dh] → (int8 [B,1,K·dh], scale f32 [B,1,K])."""
+    B = x.shape[0]
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q.reshape(B, 1, K * dh), scale
+
+
+def decode_attention(params: dict, cfg, x: jax.Array, cache,
+                     pos: jax.Array, kv_sharded: bool = False,
+                     update_cache: bool = True, use_rope: bool = True):
+    """One-token decode: x [B,1,D], cache [B,T,K·dh] (flattened), pos scalar.
+
+    Writes the new K/V at ``pos`` and attends over positions ≤ pos.
+    ``kv_sharded``: annotate the cache time axis as ``kv_length`` (long-
+    context SP — partial attention per shard merged by XLA's reductions).
+    Accepts a bf16 ``KVCache`` or an int8 ``QuantKVCache``.
+    """
+    B, _, D = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions, use_rope)
+    kd = K * dh
+    t_axis = "kv_length" if kv_sharded else "length"
+    quant = isinstance(cache, QuantKVCache)
+    if quant:
+        kq, ks = _quantize_kv(k_new, K, dh)
+        vq, vs = _quantize_kv(v_new, K, dh)
+        dus = jax.lax.dynamic_update_slice_in_dim
+        new_cache = QuantKVCache(
+            k=dus(cache.k, kq, pos, 1) if update_cache else cache.k,
+            v=dus(cache.v, vq, pos, 1) if update_cache else cache.v,
+            k_scale=dus(cache.k_scale, ks, pos, 1) if update_cache
+            else cache.k_scale,
+            v_scale=dus(cache.v_scale, vs, pos, 1) if update_cache
+            else cache.v_scale)
+        k_flat = shard(new_cache.k, "batch", t_axis, "kv_heads")
+        v_flat = shard(new_cache.v, "batch", t_axis, "kv_heads")
+        T = k_flat.shape[1]
+        k = (k_flat.reshape(B, T, K, dh).astype(cfg.dtype)
+             * new_cache.k_scale[..., None].astype(cfg.dtype))
+        v = (v_flat.reshape(B, T, K, dh).astype(cfg.dtype)
+             * new_cache.v_scale[..., None].astype(cfg.dtype))
+    else:
+        if update_cache:
+            k_flat = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k_new.reshape(B, 1, kd).astype(cache.k.dtype),
+                pos, 1)
+            v_flat = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v_new.reshape(B, 1, kd).astype(cache.v.dtype),
+                pos, 1)
+        else:
+            k_flat, v_flat = cache.k, cache.v
+        new_cache = KVCache(k=k_flat, v=v_flat)
+        k_flat = shard(k_flat, "batch", t_axis, "kv_heads")
+        v_flat = shard(v_flat, "batch", t_axis, "kv_heads")
+        T = k_flat.shape[1]
+        k = k_flat.reshape(B, T, K, dh)
+        v = v_flat.reshape(B, T, K, dh)
+    G = H // K
+    qg = q.reshape(B, K, G, dh)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k,
+                        preferred_element_type=jnp.float32) / (dh ** 0.5)
+    mask = jnp.arange(T)[None, None, None, :] <= pos
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(q.dtype), v)
+    out = out.reshape(B, 1, H, dh)
+    return _out_proj(params, out, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_specs(d: int, f: int, act: str, stacked: tuple[int, ...] = ()) -> dict:
+    lay = ("layers",) * len(stacked)
+    p = {
+        "w_up": ParamSpec(stacked + (d, f), lay + ("embed", "mlp")),
+        "w_down": ParamSpec(stacked + (f, d), lay + ("mlp", "embed")),
+    }
+    if act == "swiglu":
+        p["w_gate"] = ParamSpec(stacked + (d, f), lay + ("embed", "mlp"))
+    return p
+
+
+def mlp_apply(params: dict, x: jax.Array, act: str) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, params["w_up"])
+    if act == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        h = jax.nn.silu(g) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(f"unknown activation {act!r}")
+    h = shard(h, "batch", "length", "mlp") if h.ndim == 3 else h
+    y = jnp.einsum("...f,fd->...d", h, params["w_down"])
+    return shard(y, "batch", "length", None) if y.ndim == 3 else y
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg) -> dict:
+    p = {"embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                            "embed")}
+    if not cfg.tie_embeddings:
+        p["unembed"] = ParamSpec((cfg.d_model, cfg.vocab),
+                                 ("embed", "vocab"))
+    return p

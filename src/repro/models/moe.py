@@ -1,0 +1,117 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity,
+expert-parallel over the ``model`` mesh axis.
+
+Implementation (TPU-friendly, GShard/MaxText lineage):
+  1. router logits → softmax → top-k experts per token, gates renormalized;
+  2. slot assignment: position-in-expert via a cumulative count over the
+     token axis; tokens beyond ``capacity = ceil(S·k/E · capacity_factor)``
+     are dropped (standard capacity discipline — keeps every shape static);
+  3. dispatch: scatter-add token vectors into per-expert buffers
+     [B, E, C, D] (vmapped over batch rows — indices stay local);
+  4. expert compute: batched einsum over the expert axis (sharded over
+     ``model`` → each device runs its resident experts: EP);
+  5. combine: gather back per token, weight by gates, sum the k copies.
+
+Auxiliary load-balance loss (Switch-style): ``E · Σ_e f_e·P_e`` where f is
+the routed-token fraction and P the mean router prob.  A Llama-4-style
+always-on shared expert is supported (``cfg.shared_expert``).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import ParamSpec, shard
+from .layers import mlp_apply, mlp_specs
+
+__all__ = ["moe_specs", "moe_apply", "capacity"]
+
+
+def capacity(cfg, tokens_per_group: int) -> int:
+    cap = math.ceil(tokens_per_group * cfg.top_k / cfg.n_experts
+                    * cfg.capacity_factor)
+    return max(8, min(cap, tokens_per_group))
+
+
+def moe_specs(cfg, stacked: tuple[int, ...] = ()) -> dict:
+    D = cfg.d_model
+    F = cfg.d_ff_moe or cfg.d_ff
+    E = cfg.n_experts
+    lay = ("layers",) * len(stacked)
+    p = {
+        "router": ParamSpec(stacked + (D, E), lay + ("embed", None)),
+        "w_up": ParamSpec(stacked + (E, D, F), lay + ("expert", "embed", "mlp")),
+        "w_down": ParamSpec(stacked + (E, F, D), lay + ("expert", "mlp", "embed")),
+    }
+    if cfg.mlp_act == "swiglu":
+        p["w_gate"] = ParamSpec(stacked + (E, D, F),
+                                lay + ("expert", "embed", "mlp"))
+    if cfg.shared_expert:
+        p["shared"] = mlp_specs(D, F, cfg.mlp_act, stacked)
+    return p
+
+
+def moe_apply(params: dict, cfg, x: jax.Array):
+    """x: [B, S, D] → (y [B,S,D], aux_loss scalar)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, S)
+
+    router_logits = jnp.einsum("bsd,de->bse", x, params["router"],
+                               preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(router_logits, axis=-1)            # [B,S,E] f32
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)           # [B,S,k]
+    gates = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # ---- slot assignment ---------------------------------------------------
+    flat_e = expert_idx.reshape(B, S * k)                     # [B,S·k]
+    flat_g = gates.reshape(B, S * k).astype(x.dtype)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # [B,S·k,E]
+    pos = jnp.einsum("bte,bte->bt", jnp.cumsum(onehot, axis=1), onehot) - 1
+    keep = (pos < C)
+    dest = flat_e * C + jnp.clip(pos, 0, C - 1)               # [B,S·k]
+
+    # ---- dispatch (vmapped scatter-add keeps indices batch-local) ----------
+    x_rep = jnp.repeat(x, k, axis=1)                          # [B,S·k,D]
+    x_rep = x_rep * keep[..., None].astype(x.dtype)
+
+    def _scatter(buf_rows, idx, rows):
+        return buf_rows.at[idx].add(rows)
+
+    buf = jnp.zeros((B, E * C, D), x.dtype)
+    buf = jax.vmap(_scatter)(buf, dest, x_rep)
+    buf = buf.reshape(B, E, C, D)
+    buf = shard(buf, "batch", "expert", None, None)
+
+    # ---- expert compute (EP: expert axis sharded over `model`) -------------
+    h = jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    if cfg.mlp_act == "swiglu":
+        g = jnp.einsum("becd,edf->becf", buf, params["w_gate"])
+        h = jax.nn.silu(g) * h
+    elif cfg.mlp_act == "gelu":
+        h = jax.nn.gelu(h)
+    elif cfg.mlp_act == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    h = shard(h, "batch", "expert", None, "mlp")
+    y_buf = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    y_buf = shard(y_buf, "batch", "expert", None, None)
+
+    # ---- combine ------------------------------------------------------------
+    y_tok = jax.vmap(lambda rows, idx: rows[idx])(
+        y_buf.reshape(B, E * C, D), dest)                     # [B,S·k,D]
+    y_tok = y_tok * (flat_g * keep.astype(x.dtype))[..., None]
+    y = y_tok.reshape(B, S, k, D).sum(axis=2)
+    y = shard(y, "batch", "length", None)
+
+    # ---- Switch-style load-balance auxiliary loss ----------------------------
+    frac_routed = jnp.mean(onehot.astype(jnp.float32), axis=(0, 1)) * S * k / S
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_routed / k * mean_prob)
+
+    if cfg.shared_expert:
+        y = y + mlp_apply(params["shared"], x, cfg.mlp_act)
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,253 @@
+"""Mamba-2 / SSD mixer (state-space duality, arXiv:2405.21060).
+
+The selective state-space recurrence with scalar per-head decay,
+
+    h_t = exp(Δt·A) · h_{t-1} + (Δt·x_t) ⊗ B_t ,   y_t = C_t·h_t + D·x_t,
+
+evaluated with the paper's **chunked (matmul) algorithm**: the sequence is
+split into chunks of Q steps; within a chunk the contribution is a masked
+"attention-like" matmul ``(C Bᵀ ∘ L) X`` (MXU work), and chunk states are
+carried by a short sequential scan — O(S·Q) instead of O(S²), and exactly
+equal to the recurrence (tested against the sequential reference).
+
+Block layout follows Mamba-2: in-proj → (z gate | x | B | C | Δt), causal
+depthwise conv(4) on x/B/C, SSD core, gated RMSNorm, out-proj.  ``n_groups=1``
+(B/C shared across heads).  Decode keeps a conv tail + the [H,P,N] state —
+O(1) per token, which is why the SSM/hybrid archs own the ``long_500k`` cell.
+
+Sharding: heads/inner channels over ``model`` (TP); B/C projections are
+small and replicated.  Jamba's mamba layers reuse this block unchanged
+(Jamba ships Mamba-1; we use the SSD successor as the TPU-native form —
+scalar-decay recurrences map to matmul chunks, Mamba-1's per-channel A does
+not; recorded in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import ParamSpec, shard
+from .layers import rmsnorm
+
+__all__ = ["MambaCache", "ssd_specs", "ssd_apply", "ssd_decode",
+           "init_mamba_cache", "ssd_scan_ref", "ssd_scan_chunked"]
+
+
+class MambaCache(NamedTuple):
+    conv_x: jax.Array   # [B, k-1, di]
+    conv_b: jax.Array   # [B, k-1, N]
+    conv_c: jax.Array   # [B, k-1, N]
+    state: jax.Array    # [B, H, P, N]
+
+
+def ssd_specs(cfg, stacked: tuple[int, ...] = ()) -> dict:
+    D, di = cfg.d_model, cfg.ssm_inner
+    N, H, K = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    lay = ("layers",) * len(stacked)
+    return {
+        "w_z": ParamSpec(stacked + (D, di), lay + ("embed", "mlp")),
+        "w_x": ParamSpec(stacked + (D, di), lay + ("embed", "mlp")),
+        "w_b": ParamSpec(stacked + (D, N), lay + ("embed", None)),
+        "w_c": ParamSpec(stacked + (D, N), lay + ("embed", None)),
+        "w_dt": ParamSpec(stacked + (D, H), lay + ("embed", "heads")),
+        "conv_x": ParamSpec(stacked + (K, di), lay + (None, "mlp"),
+                            "normal", 0.5),
+        "conv_b": ParamSpec(stacked + (K, N), lay + (None, None),
+                            "normal", 0.5),
+        "conv_c": ParamSpec(stacked + (K, N), lay + (None, None),
+                            "normal", 0.5),
+        "a_log": ParamSpec(stacked + (H,), lay + ("heads",), "zeros"),
+        "d": ParamSpec(stacked + (H,), lay + ("heads",), "ones"),
+        "dt_bias": ParamSpec(stacked + (H,), lay + ("heads",), "zeros"),
+        "gn_scale": ParamSpec(stacked + (di,), lay + ("mlp",), "ones"),
+        "w_out": ParamSpec(stacked + (di, D), lay + ("mlp", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: [B,S,C]; w: [K,C] depthwise causal conv (pad left K-1)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # Unrolled taps (K=4): cheaper to compile than grouped conv on CPU and
+    # identical HLO shape on TPU after fusion.
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return out
+
+
+def _conv_step(tail: jax.Array, x_new: jax.Array, w: jax.Array):
+    """Decode-time conv: tail [B,K-1,C], x_new [B,1,C] → (y [B,1,C], tail')."""
+    window = jnp.concatenate([tail, x_new], axis=1)         # [B,K,C]
+    y = jnp.einsum("bkc,kc->bc", window, w)[:, None, :]
+    return y, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_scan_ref(xdt, a, b, c, h0=None):
+    """Sequential oracle.  xdt:[B,S,H,P] (Δt·x), a:[B,S,H] (Δt·A, ≤0),
+    b,c:[B,S,N] → y:[B,S,H,P], h_final:[B,H,P,N]."""
+    B, S, H, P = xdt.shape
+    N = b.shape[-1]
+    h_init = jnp.zeros((B, H, P, N), jnp.float32) if h0 is None else h0
+
+    def step(h, t):
+        xdt_t, a_t, b_t, c_t = t
+        h = jnp.exp(a_t)[..., None, None] * h \
+            + xdt_t[..., :, None] * b_t[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+        return h, y
+
+    xs = (xdt.transpose(1, 0, 2, 3), a.transpose(1, 0, 2),
+          b.transpose(1, 0, 2), c.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h_init, xs)
+    return ys.transpose(1, 0, 2, 3), h
+
+
+def ssd_scan_chunked(xdt, a, c_coef, b_coef, chunk: int, h0=None):
+    """Chunked (matmul-form) SSD.  Same contract as ``ssd_scan_ref``.
+
+    Args are fp32-castable; per-chunk work is MXU matmuls; the inter-chunk
+    recurrence is a scan over S/Q steps carrying [B,H,P,N].
+    """
+    xdt, a = xdt.astype(jnp.float32), a.astype(jnp.float32)
+    b, c = b_coef.astype(jnp.float32), c_coef.astype(jnp.float32)
+    B, S, H, P = xdt.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:
+        # Zero-pad the tail: xdt=0 adds nothing and a=0 (decay exp(0)=1)
+        # leaves the carried state untouched, so h_final stays exact.
+        pad = Q - S % Q
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    xdt = xdt.reshape(B, nc, Q, H, P)
+    a = a.reshape(B, nc, Q, H)
+    b = b.reshape(B, nc, Q, N)
+    c = c.reshape(B, nc, Q, N)
+    h_init = jnp.zeros((B, H, P, N), jnp.float32) if h0 is None else \
+        h0.astype(jnp.float32)
+
+    def chunk_step(h, inputs):
+        xdt_c, a_c, b_c, c_c = inputs           # [B,Q,H,P],[B,Q,H],[B,Q,N]
+        cum = jnp.cumsum(a_c, axis=1)           # inclusive within chunk
+        # intra-chunk: W[i,j,h] = exp(cum_i - cum_j) for i ≥ j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]      # [B,Q,Q,H]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        w = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", c_c, b_c)        # [B,Q,Q]
+        y = jnp.einsum("bij,bijh,bjhp->bihp", scores, w, xdt_c)
+        # inter-chunk: contribution of carried state
+        y = y + jnp.einsum("bin,bhpn,bih->bihp", c_c, h, jnp.exp(cum))
+        # state update
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)         # [B,Q,H]
+        s = jnp.einsum("bjhp,bjn,bjh->bhpn", xdt_c, b_c, decay_to_end)
+        h = jnp.exp(cum[:, -1, :])[..., None, None] * h + s
+        return h, y
+
+    xs = (xdt.transpose(1, 0, 2, 3, 4), a.transpose(1, 0, 2, 3),
+          b.transpose(1, 0, 2, 3), c.transpose(1, 0, 2, 3))
+    h, ys = jax.lax.scan(chunk_step, h_init, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y[:, :S_orig], h
+
+
+# ---------------------------------------------------------------------------
+# Block
+# ---------------------------------------------------------------------------
+
+def _projections(params, cfg, x):
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"])
+    xs = jnp.einsum("bsd,de->bse", x, params["w_x"])
+    b = jnp.einsum("bsd,dn->bsn", x, params["w_b"])
+    c = jnp.einsum("bsd,dn->bsn", x, params["w_c"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["w_dt"])
+    return z, xs, b, c, dt_raw
+
+
+def ssd_apply(params: dict, cfg, x: jax.Array, return_cache: bool = False):
+    """Full-sequence mamba block.  x: [B,S,D] → [B,S,D] (+cache)."""
+    B, S, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z, xs, b, c, dt_raw = _projections(params, cfg, x)
+    xs_conv_in, b_in, c_in = xs, b, c
+    xs = jax.nn.silu(_causal_conv(xs, params["conv_x"]))
+    b = jax.nn.silu(_causal_conv(b, params["conv_b"]))
+    c = jax.nn.silu(_causal_conv(c, params["conv_c"]))
+    xs = shard(xs, "batch", "length", "mlp")
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xs.reshape(B, S, H, P)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    a = dt * A[None, None, :]
+    if cfg.ssd_impl in ("kernel", "kernel_interpret") \
+            and S % min(cfg.ssm_chunk, S) == 0:
+        from ..kernels.ssd import ssd_scan as _kernel_scan
+        mode = "interpret" if cfg.ssd_impl == "kernel_interpret" else None
+        y, h = _kernel_scan(xdt, a, b, c, cfg.ssm_chunk, mode=mode)
+    else:
+        y, h = ssd_scan_chunked(xdt, a, c, b, cfg.ssm_chunk)
+    y = y + params["d"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, H * P).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["gn_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    out = shard(out, "batch", "length", None)
+    if not return_cache:
+        return out
+    K = cfg.ssm_conv
+    cache = MambaCache(
+        conv_x=xs_conv_in[:, S - (K - 1):, :],
+        conv_b=b_in[:, S - (K - 1):, :],
+        conv_c=c_in[:, S - (K - 1):, :],
+        state=h,
+    )
+    return out, cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32) -> MambaCache:
+    H, P, N, K = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_conv
+    return MambaCache(
+        conv_x=jnp.zeros((batch, K - 1, cfg.ssm_inner), dtype),
+        conv_b=jnp.zeros((batch, K - 1, N), dtype),
+        conv_c=jnp.zeros((batch, K - 1, N), dtype),
+        state=jnp.zeros((batch, H, P, N), jnp.float32),
+    )
+
+
+def ssd_decode(params: dict, cfg, x: jax.Array, cache: MambaCache):
+    """One-token decode.  x: [B,1,D] → ([B,1,D], cache')."""
+    B = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z, xs, b, c, dt_raw = _projections(params, cfg, x)
+    xs_c, tail_x = _conv_step(cache.conv_x, xs, params["conv_x"])
+    b_c, tail_b = _conv_step(cache.conv_b, b, params["conv_b"])
+    c_c, tail_c = _conv_step(cache.conv_c, c, params["conv_c"])
+    xs_c, b_c, c_c = (jax.nn.silu(t) for t in (xs_c, b_c, c_c))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])[:, 0]
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xs_c.reshape(B, H, P).astype(jnp.float32)
+    h = cache.state
+    decay = jnp.exp(dt * A[None, :])                        # [B,H]
+    h = decay[..., None, None] * h \
+        + (dt[..., None] * xh)[..., None] * b_c[:, 0][:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, c_c[:, 0].astype(jnp.float32))
+    y = y + params["d"][None, :, None] * xh
+    y = y.reshape(B, 1, H * P).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["gn_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, MambaCache(conv_x=tail_x, conv_b=tail_b, conv_c=tail_c,
+                           state=h)

@@ -1,0 +1,253 @@
+"""Whisper-style encoder-decoder backbone (whisper-large-v3 assignment).
+
+Per the assignment the conv/mel frontend is a **stub**: ``input_specs``
+feeds precomputed frame embeddings [B, 1500, D] straight into the encoder
+stack.  The transformer backbone is faithful: pre-LN layernorm blocks,
+learned positional embeddings (no RoPE), bidirectional encoder self-attn,
+causal decoder self-attn + cross-attention to the encoder output, GELU MLPs.
+
+Serving: ``prefill`` encodes the audio once, precomputes every layer's
+cross-attention K/V (they are decode-invariant), and primes the decoder
+self-attn KV caches; ``decode_step`` is then one causal decoder step.
+Encoder-side "decode" does not exist (see DESIGN §Arch-applicability) —
+the decode shapes exercise the decoder against a full cache.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import ParamSpec, shard
+from .layers import (KVCache, _full_attention, apply_norm, attention,
+                     attention_specs, decode_attention, mlp_apply, mlp_specs,
+                     norm_spec, prefill_attention)
+
+__all__ = ["whisper_specs", "encode", "decoder_forward", "whisper_loss",
+           "whisper_prefill", "whisper_decode_step", "init_decoder_caches"]
+
+
+class CrossCache(NamedTuple):
+    k: jax.Array    # [n_layers, B, T_enc, K, dh]
+    v: jax.Array
+
+
+def whisper_specs(cfg) -> dict:
+    D = cfg.d_model
+    enc, dec = cfg.encoder_layers, cfg.n_layers
+    return {
+        "embed": ParamSpec((cfg.vocab, D), ("vocab", "embed"), "embed"),
+        "enc_pos": ParamSpec((cfg.encoder_ctx, D), ("length", None), "embed"),
+        "dec_pos": ParamSpec((32776, D), ("length", None), "embed"),
+        "encoder": {
+            "norm1": norm_spec(D, cfg.norm, (enc,)),
+            "attn": attention_specs(cfg, (enc,)),
+            "norm2": norm_spec(D, cfg.norm, (enc,)),
+            "mlp": mlp_specs(D, cfg.d_ff, cfg.mlp_act, (enc,)),
+        },
+        "enc_final_norm": norm_spec(D, cfg.norm),
+        "decoder": {
+            "norm1": norm_spec(D, cfg.norm, (dec,)),
+            "self_attn": attention_specs(cfg, (dec,)),
+            "norm_x": norm_spec(D, cfg.norm, (dec,)),
+            "cross_attn": attention_specs(cfg, (dec,), cross=True),
+            "norm2": norm_spec(D, cfg.norm, (dec,)),
+            "mlp": mlp_specs(D, cfg.d_ff, cfg.mlp_act, (dec,)),
+        },
+        "final_norm": norm_spec(D, cfg.norm),
+    }
+
+
+def encode(params: dict, cfg, frames: jax.Array) -> jax.Array:
+    """frames: [B, T_enc, D] (stub frontend output) → encoder states."""
+    T = frames.shape[1]
+    x = frames.astype(cfg.dtype) + params["enc_pos"][:T].astype(cfg.dtype)
+    x = shard(x, "batch", "length", None)
+    positions = jnp.broadcast_to(jnp.arange(T), x.shape[:2])
+
+    def inner(x, p):
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        x = x + attention(p["attn"], cfg, h, positions, causal=False,
+                          use_rope=False)
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        return x + mlp_apply(p["mlp"], h, cfg.mlp_act)
+
+    fn = jax.checkpoint(inner) if cfg.remat else inner
+    if cfg.encoder_layers <= 2:      # unrolled for dry-run cost extrapolation
+        for l in range(cfg.encoder_layers):
+            x = fn(x, jax.tree.map(lambda a: a[l], params["encoder"]))
+    else:
+        def body(x, p):
+            return fn(x, p), None
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+    return apply_norm(params["enc_final_norm"], x, cfg.norm)
+
+
+def decoder_forward(params: dict, cfg, tokens: jax.Array,
+                    enc_out: jax.Array) -> jax.Array:
+    """Teacher-forced decoder: tokens [B,S] × enc_out [B,T,D] → hidden."""
+    S = tokens.shape[1]
+    x = params["embed"][tokens].astype(cfg.dtype) \
+        + params["dec_pos"][:S].astype(cfg.dtype)
+    x = shard(x, "batch", "length", None)
+    positions = jnp.broadcast_to(jnp.arange(S), x.shape[:2])
+
+    def inner(x, p):
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        x = x + attention(p["self_attn"], cfg, h, positions, causal=True,
+                          use_rope=False)
+        h = apply_norm(p["norm_x"], x, cfg.norm)
+        x = x + attention(p["cross_attn"], cfg, h, positions,
+                          causal=False, kv=enc_out, use_rope=False)
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        return x + mlp_apply(p["mlp"], h, cfg.mlp_act)
+
+    fn = jax.checkpoint(inner) if cfg.remat else inner
+    if cfg.n_layers <= 2:            # unrolled for dry-run cost extrapolation
+        for l in range(cfg.n_layers):
+            x = fn(x, jax.tree.map(lambda a: a[l], params["decoder"]))
+    else:
+        def body(x, p):
+            return fn(x, p), None
+        x, _ = jax.lax.scan(body, x, params["decoder"])
+    return apply_norm(params["final_norm"], x, cfg.norm)
+
+
+def whisper_loss(params: dict, cfg, frames: jax.Array, tokens: jax.Array,
+                 labels: jax.Array):
+    """Enc-dec training loss (teacher forcing, CE over decoder positions)."""
+    enc_out = encode(params, cfg, frames)
+    hidden = decoder_forward(params, cfg, tokens, enc_out)
+    w = params["embed"].T
+    h, y = hidden[:, :-1], labels[:, 1:]
+    mask = (y >= 0).astype(jnp.float32)
+    y = jnp.maximum(y, 0)
+    logits = jnp.einsum("bsd,dv->bsv", h, w,
+                        preferred_element_type=jnp.float32)
+    logits = shard(logits, "batch", "length", "vocab")
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce, {"ce": ce}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_decoder_caches(cfg, batch: int, t_max: int):
+    from .layers import QuantKVCache
+    L, kd = cfg.n_layers, cfg.n_kv_heads * cfg.head_dim
+    if cfg.kv_cache_quant:
+        kv = lambda t: QuantKVCache(
+            k=jnp.zeros((L, batch, t, kd), jnp.int8),
+            v=jnp.zeros((L, batch, t, kd), jnp.int8),
+            k_scale=jnp.zeros((L, batch, t, cfg.n_kv_heads), jnp.float32),
+            v_scale=jnp.zeros((L, batch, t, cfg.n_kv_heads), jnp.float32))
+    else:
+        kv = lambda t: KVCache(
+            k=jnp.zeros((L, batch, t, kd), cfg.dtype),
+            v=jnp.zeros((L, batch, t, kd), cfg.dtype))
+    return {"self": kv(t_max), "cross": kv(cfg.encoder_ctx)}
+
+
+def whisper_prefill(params: dict, cfg, frames: jax.Array,
+                    prompt: jax.Array, t_max: int):
+    """Encode audio, precompute cross K/V, prime decoder self caches.
+
+    prompt: [B, S0] decoder prompt tokens.  Returns (logits, caches, pos).
+    """
+    enc_out = encode(params, cfg, frames)
+
+    def cross_kv(p):
+        # stored flattened [B, T_enc, K·dh], matching decode_attention
+        k = jnp.einsum("btd,de->bte", enc_out, p["cross_attn"]["wk"])
+        v = jnp.einsum("btd,de->bte", enc_out, p["cross_attn"]["wv"])
+        return KVCache(k=k, v=v)
+
+    cross = jax.lax.map(cross_kv, params["decoder"])
+
+    S0 = prompt.shape[1]
+    x = params["embed"][prompt].astype(cfg.dtype) \
+        + params["dec_pos"][:S0].astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S0), x.shape[:2])
+
+    def body(x, scanned):
+        p, cr = scanned
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        att, cache = prefill_attention(p["self_attn"], cfg, h, positions,
+                                       use_rope=False)
+        x = x + att
+        h = apply_norm(p["norm_x"], x, cfg.norm)
+        # cross attention against precomputed enc K/V
+        B, S_, _ = h.shape
+        H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = jnp.einsum("bsd,de->bse", h, p["cross_attn"]["wq"]) \
+            .reshape(B, S_, H, dh)
+        T = cr.k.shape[1]
+        out = _full_attention(q, cr.k.reshape(B, T, K, dh),
+                              cr.v.reshape(B, T, K, dh), causal=False)
+        x = x + jnp.einsum("bse,ed->bsd", out.reshape(B, S_, H * dh),
+                           p["cross_attn"]["wo"])
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        x = x + mlp_apply(p["mlp"], h, cfg.mlp_act)
+        return x, cache
+
+    if cfg.n_layers <= 2:
+        per_layer = []
+        for l in range(cfg.n_layers):
+            x, c = body(x, jax.tree.map(lambda a: a[l],
+                                        (params["decoder"], cross)))
+            per_layer.append(c)
+        self_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+    else:
+        x, self_cache = jax.lax.scan(body, x, (params["decoder"], cross))
+    if t_max > S0:
+        pad = [(0, 0), (0, 0), (0, t_max - S0), (0, 0)]
+        self_cache = KVCache(k=jnp.pad(self_cache.k, pad),
+                             v=jnp.pad(self_cache.v, pad))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["embed"].T)
+    return logits, {"self": self_cache, "cross": cross}, S0
+
+
+def whisper_decode_step(params: dict, cfg, caches: dict, token: jax.Array,
+                        pos):
+    """One decoder step.  token [B,1]; returns (logits [B,V], caches')."""
+    pos = jnp.asarray(pos, jnp.int32)
+    x = params["embed"][token].astype(cfg.dtype) \
+        + params["dec_pos"][pos][None, None, :].astype(cfg.dtype)
+    x = shard(x, "batch", "length", None)
+
+    def body(x, scanned):
+        p, self_c, cross_c = scanned
+        h = apply_norm(p["norm1"], x, cfg.norm)
+        att, new_self = decode_attention(p["self_attn"], cfg, h, self_c, pos,
+                                         use_rope=False)
+        x = x + att
+        h = apply_norm(p["norm_x"], x, cfg.norm)
+        att2, _ = decode_attention(p["cross_attn"], cfg, h, cross_c,
+                                   jnp.asarray(cross_c.k.shape[1] - 1,
+                                               jnp.int32),
+                                   update_cache=False, use_rope=False)
+        x = x + att2
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        x = x + mlp_apply(p["mlp"], h, cfg.mlp_act)
+        return x, new_self
+
+    if cfg.n_layers <= 2:
+        per_layer = []
+        for l in range(cfg.n_layers):
+            x, c = body(x, jax.tree.map(
+                lambda a: a[l],
+                (params["decoder"], caches["self"], caches["cross"])))
+            per_layer.append(c)
+        new_self = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+    else:
+        x, new_self = jax.lax.scan(
+            body, x, (params["decoder"], caches["self"], caches["cross"]))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], params["embed"].T)
+    return logits, {"self": new_self, "cross": caches["cross"]}

@@ -1,0 +1,6 @@
+"""Mesh-independent distribution machinery: logical-axis sharding rules,
+pipeline parallelism, gradient compression."""
+
+from . import compress, pipeline, sharding
+
+__all__ = ["compress", "pipeline", "sharding"]

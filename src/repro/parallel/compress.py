@@ -1,0 +1,111 @@
+"""Gradient / payload compression (distributed-optimization tricks).
+
+* ``quantize_int8`` / ``dequantize_int8`` — per-tensor-block symmetric int8
+  with fp32 scales: 4× wire-size reduction for DP gradient all-reduce or
+  store transfers (the in-situ framework's send path can compress solution
+  snapshots the same way — the paper's autoencoder is the learned version
+  of this lever).
+* ``ErrorFeedback`` — residual accumulation (1-bit-Adam style): the
+  quantization error of step *t* is added back to the gradient of step
+  *t+1*, which keeps SGD convergence unbiased.
+* ``compressed_allreduce`` — shard_map DP all-reduce that quantizes before
+  ``psum``-ing the int32 accumulator (wire bytes ≈ ¼ of fp32), used by the
+  explicit-DP in-situ trainer.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+__all__ = ["quantize_int8", "dequantize_int8", "ErrorFeedback",
+           "compressed_allreduce", "compression_ratio"]
+
+
+class QTensor(NamedTuple):
+    q: jax.Array        # int8 payload
+    scale: jax.Array    # fp32 per-block scale
+
+
+def quantize_int8(x: jax.Array, block: int = 256) -> QTensor:
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q=q, scale=scale)
+
+
+def dequantize_int8(qt: QTensor, shape, dtype=jnp.float32) -> jax.Array:
+    flat = (qt.q.astype(jnp.float32) * qt.scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compression_ratio(x: jax.Array, block: int = 256) -> float:
+    raw = x.size * jnp.dtype(jnp.float32).itemsize
+    comp = x.size * 1 + (x.size // block + 1) * 4
+    return raw / comp
+
+
+class ErrorFeedback:
+    """Residual error feedback for biased compressors (host-side state)."""
+
+    def __init__(self):
+        self.residual: Any = None
+
+    def compress(self, grads: Any, block: int = 256):
+        if self.residual is not None:
+            grads = jax.tree.map(lambda g, r: g + r.astype(g.dtype),
+                                 grads, self.residual)
+        qts = jax.tree.map(lambda g: quantize_int8(g, block), grads,
+                           is_leaf=lambda x: isinstance(x, jax.Array))
+        deq = jax.tree.map(
+            lambda g, qt: dequantize_int8(qt, g.shape, g.dtype),
+            grads, qts, is_leaf=lambda x: isinstance(x, jax.Array))
+        self.residual = jax.tree.map(lambda g, d: (g - d), grads, deq)
+        return qts, deq
+
+
+def compressed_allreduce(grad_stack: Any, mesh: Mesh, axis: str = "data",
+                         block: int = 256) -> Any:
+    """Mean-all-reduce of per-rank gradients with an int8 wire format.
+
+    ``grad_stack`` leaves are [n_ranks, ...] (rank axis sharded over
+    ``axis``): each shard quantizes its local gradient, int8 payloads are
+    summed via ``psum`` in int32 (no overflow for ≤2^23 ranks); dequantized
+    with the rank-mean scale.  Biased per step — pair with ErrorFeedback.
+    Returns the mean gradient, replicated (leaves [...]).
+    """
+    n = mesh.shape[axis]
+
+    def _one(g_stack):
+        shape = g_stack.shape[1:]
+
+        def _worker(gl):
+            qt = quantize_int8(gl[0], block)
+            qsum = jax.lax.psum(qt.q.astype(jnp.int32), axis)
+            # per-shard scales differ; dequantize with the mean scale and
+            # let error feedback absorb the residual bias.
+            smean = jax.lax.psum(qt.scale, axis) / n
+            mean = (qsum.astype(jnp.float32) * smean) / n
+            flat = mean.reshape(-1)
+            m = 1
+            for s in shape:
+                m *= s
+            return flat[:m].reshape(shape).astype(gl.dtype)
+
+        fn = shard_map(_worker, mesh=mesh,
+                       in_specs=(P(axis),), out_specs=P(),
+                       check_rep=False)
+        return fn(g_stack)
+
+    return jax.tree.map(_one, grad_stack)

@@ -1,0 +1,6 @@
+"""Serving substrate: continuous batching + greedy decode loops."""
+
+from . import batching, decode
+from .batching import Batcher, Request
+
+__all__ = ["batching", "decode", "Batcher", "Request"]

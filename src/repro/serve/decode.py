@@ -1,0 +1,96 @@
+"""Serving loop: prefill + continuous-batching greedy decode.
+
+Drives the compiled ``prefill``/``decode_step`` against the ``Batcher``.
+Laptop-scale (smoke configs) it runs for real; at pod scale the same loop
+is what ``launch/serve.py`` jits onto the production mesh.  Also the host
+of the in-situ serving hook: each decode step can capture hidden states /
+KV into the co-located store (``capture_table``) with zero extra
+collectives — the paper's in-situ inference applied to LM serving.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import lm
+from .batching import Batcher
+
+__all__ = ["greedy_generate", "serve_loop"]
+
+
+def greedy_generate(params, cfg, prompt_tokens: jax.Array, max_new: int,
+                    t_max: int | None = None):
+    """Single-batch greedy decode (examples + tests).
+
+    prompt_tokens: [B, S0].  Returns [B, max_new] generated ids.
+    """
+    B, S0 = prompt_tokens.shape
+    t_max = t_max or (S0 + max_new)
+    logits, caches, pos = lm.prefill(params, cfg, prompt_tokens, t_max=t_max)
+    step_fn = jax.jit(
+        lambda p, c, t, i: lm.decode_step(p, cfg, c, t, i))
+    out = []
+    token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for i in range(max_new):
+        out.append(token)
+        logits, caches = step_fn(params, caches, token, jnp.int32(pos + i))
+        token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+def serve_loop(params, cfg, batcher: Batcher, t_max: int,
+               max_steps: int = 1000, capture_client=None,
+               capture_table: str = "serving"):
+    """Continuous batching: admit → decode-step → retire, until idle.
+
+    All slots share one fixed-shape cache of depth ``t_max``; admissions
+    prefill their prompt into their slot via single-token steps (simple and
+    shape-stable; bulk prefill is a per-slot optimization the benchmarks
+    explore separately).  Returns (completed requests, steps, tok/s).
+    """
+    B = batcher.max_batch
+    caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                          jax.eval_shape(lambda: lm.init_caches(cfg, B, t_max)))
+    step_fn = jax.jit(lambda p, c, t, i: lm.decode_step(p, cfg, c, t, i))
+    tokens = np.zeros((B, 1), np.int32)
+    pos_per_slot = np.zeros(B, np.int32)
+    pending_prompt: dict[int, list[int]] = {}
+
+    t0 = time.perf_counter()
+    steps = 0
+    total_tokens = 0
+    while steps < max_steps and not batcher.idle:
+        for slot, req in batcher.admit():
+            pending_prompt[slot] = list(req.prompt)
+            pos_per_slot[slot] = 0
+        # feed: prompt token if pending, else last generated token
+        feeding = np.zeros(B, bool)
+        for i in range(B):
+            if pending_prompt.get(i):
+                tokens[i, 0] = pending_prompt[i].pop(0)
+                feeding[i] = True
+        pos = int(pos_per_slot.max())
+        logits, caches = step_fn(params, caches, jnp.asarray(tokens),
+                                 jnp.int32(pos))
+        steps += 1
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        active = batcher.active_mask()
+        emit = active & ~feeding
+        if emit.any():
+            batcher.record_tokens(np.where(emit, nxt, 0))
+            total_tokens += int(emit.sum())
+        for i in range(B):
+            if active[i] or feeding[i]:
+                pos_per_slot[i] += 1
+            if not feeding[i] and active[i]:
+                tokens[i, 0] = int(nxt[i])
+        if capture_client is not None and steps % 8 == 0:
+            capture_client.send_step(capture_table, steps,
+                                     jnp.asarray(logits))
+    dt = time.perf_counter() - t0
+    return batcher.completed, steps, total_tokens / max(dt, 1e-9)

@@ -1,0 +1,11 @@
+"""Data-producer substrate: pseudo-spectral NS DNS (PHASTA analogue),
+synthetic flat-plate boundary-layer snapshots, and the Fortran-reproducer
+analogue that drives the scaling benchmarks."""
+
+from . import flatplate, reproducer, spectral
+from .flatplate import FlatPlateConfig
+from .reproducer import ReproducerConfig
+from .spectral import NSConfig, NSState
+
+__all__ = ["flatplate", "reproducer", "spectral", "FlatPlateConfig",
+           "ReproducerConfig", "NSConfig", "NSState"]

@@ -1,0 +1,129 @@
+"""Synthetic turbulent flat-plate boundary-layer snapshots (paper §4 data).
+
+The paper trains the QuadConv autoencoder on DNS of a flat-plate turbulent
+boundary layer at Re_θ = 1000 on a 36M-element *non-uniform* grid (wall-normal
+stretching).  A DNS of that flow is out of scope for a CPU container, so this
+module synthesizes statistically-plausible boundary-layer snapshots on a
+non-uniform structured grid:
+
+* mean streamwise profile from the composite law of the wall
+  (viscous sublayer u⁺ = y⁺ blended into the log law u⁺ = ln(y⁺)/κ + B);
+* divergence-suppressed velocity fluctuations from a sum of random Fourier
+  modes with a k⁻⁵ᐟ³-shaped amplitude spectrum, modulated by a wall-damped
+  intensity profile (peak near y⁺≈15, vanishing at the wall);
+* pressure fluctuations correlated with the fluctuation field;
+* wall-normal grid geometrically stretched (the non-uniform quadrature
+  points QuadConv is built for).
+
+Snapshots evolve smoothly in a ``step`` parameter (frozen-turbulence
+convection of the mode phases), so consecutive "time steps" are correlated
+like real DNS output.  Everything is deterministic given (key, step).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FlatPlateConfig", "grid_coords", "snapshot", "snapshot_batch"]
+
+KAPPA = 0.41
+B_LOG = 5.2
+
+
+@dataclass(frozen=True)
+class FlatPlateConfig:
+    nx: int = 16
+    ny: int = 16                # wall-normal (stretched)
+    nz: int = 8
+    n_modes: int = 32           # random Fourier modes
+    re_tau: float = 400.0       # friction Reynolds number
+    stretch: float = 2.5        # wall-normal geometric stretching strength
+    lx: float = 6.0
+    lz: float = 3.0
+    u_conv: float = 0.5         # frozen-turbulence convection speed
+
+    @property
+    def n_points(self) -> int:
+        return self.nx * self.ny * self.nz
+
+    @property
+    def channels(self) -> int:
+        return 4                 # (p, u, v, w)
+
+
+def grid_coords(cfg: FlatPlateConfig) -> jax.Array:
+    """Non-uniform grid coordinates, shape [n_points, 3] (x, y, z).
+
+    y uses tanh clustering toward the wall (y=0) — the canonical BL grid.
+    """
+    x = jnp.linspace(0.0, cfg.lx, cfg.nx, endpoint=False)
+    eta = jnp.linspace(0.0, 1.0, cfg.ny)
+    y = 1.0 - jnp.tanh(cfg.stretch * (1.0 - eta)) / jnp.tanh(cfg.stretch)
+    z = jnp.linspace(0.0, cfg.lz, cfg.nz, endpoint=False)
+    X, Y, Z = jnp.meshgrid(x, y, z, indexing="ij")
+    return jnp.stack([X.ravel(), Y.ravel(), Z.ravel()], axis=-1)
+
+
+def _mean_profile(cfg: FlatPlateConfig, y: jax.Array) -> jax.Array:
+    """Composite law-of-the-wall mean streamwise velocity (in u_τ units)."""
+    yplus = jnp.maximum(y * cfg.re_tau, 1e-6)
+    visc = yplus
+    log = jnp.log(yplus) / KAPPA + B_LOG
+    # Reichardt-style smooth blend
+    blend = 1.0 - jnp.exp(-yplus / 11.0)
+    return (1 - blend) * visc + blend * jnp.minimum(log, visc + 20.0)
+
+
+def _intensity(y: jax.Array, re_tau: float) -> jax.Array:
+    """Wall-damped turbulence intensity, peaking near y⁺ ≈ 15."""
+    yplus = jnp.maximum(y * re_tau, 0.0)
+    return (yplus / 15.0) * jnp.exp(1.0 - yplus / 15.0) * 2.0 + 0.1 * (
+        jnp.exp(-y)
+    )
+
+
+@partial(jax.jit, static_argnums=0)
+def snapshot(cfg: FlatPlateConfig, key, step) -> jax.Array:
+    """One (p,u,v,w) snapshot, shape [4, n_points] on the stretched grid."""
+    coords = grid_coords(cfg)                       # [N,3]
+    x, y, z = coords[:, 0], coords[:, 1], coords[:, 2]
+
+    km = jax.random.split(key, 4)
+    # random mode wavevectors (streamwise/spanwise periodic, wall-normal free)
+    kvec = jax.random.normal(km[0], (cfg.n_modes, 3)) * jnp.array([4.0, 8.0, 4.0])
+    phase0 = jax.random.uniform(km[1], (cfg.n_modes,), maxval=2 * jnp.pi)
+    # Kolmogorov-ish amplitude decay |k|^{-5/6} per component (energy k^-5/3)
+    kmag = jnp.linalg.norm(kvec, axis=-1) + 1e-3
+    amp = kmag ** (-5.0 / 6.0)
+    amp = amp / jnp.sqrt(jnp.sum(amp ** 2))
+    # random unit polarization ⊥ k  (suppresses divergence mode-by-mode)
+    raw = jax.random.normal(km[2], (cfg.n_modes, 3))
+    pol = raw - kvec * jnp.sum(raw * kvec, -1, keepdims=True) / (kmag[:, None] ** 2)
+    pol = pol / (jnp.linalg.norm(pol, axis=-1, keepdims=True) + 1e-8)
+
+    t = jnp.asarray(step, jnp.float32)
+    # frozen turbulence: phases convect downstream with u_conv
+    phases = (coords @ kvec.T) + phase0[None, :] - cfg.u_conv * t * kvec[None, :, 0]
+    waves = jnp.sin(phases)                          # [N, M]
+    fluct = (waves * amp[None, :]) @ pol             # [N, 3]
+    fluct = fluct * _intensity(y, cfg.re_tau)[:, None]
+
+    u = _mean_profile(cfg, y) + fluct[:, 0] * 2.0
+    v = fluct[:, 1]
+    w = fluct[:, 2]
+    # pressure fluctuations: low-pass-ish combination of the same modes
+    p_amp = amp * (kmag ** (-1.0 / 3.0))
+    p = (jnp.cos(phases) * p_amp[None, :]).sum(-1) * _intensity(y, cfg.re_tau)
+    return jnp.stack([p, u, v, w]).astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnums=(0, 3))
+def snapshot_batch(cfg: FlatPlateConfig, key, step0, n: int) -> jax.Array:
+    """``n`` consecutive steps, shape [n, 4, n_points]."""
+    steps = jnp.asarray(step0) + jnp.arange(n)
+    return jax.vmap(lambda s: snapshot(cfg, key, s))(steps)

@@ -1,0 +1,144 @@
+"""Simulation reproducer (paper §3): the Fortran send/retrieve driver.
+
+The paper's scaling study does not run PHASTA; it runs a Fortran
+"reproducer" that (1) initializes a SmartRedis client per rank, (2) loops
+over time steps, sleeping to emulate PDE integration, (3) sends its data
+contribution with a rank/step key, and (4) retrieves it back.  For the
+inference benchmarks the reproducer also loads a model and evaluates it in
+each iteration.
+
+This module is that reproducer, rank-for-rank: it drives every scaling
+benchmark (Figs 3-8).  ``run_transfer`` does the send/retrieve loop;
+``run_inference`` does the send/run_model/retrieve loop.  Both return the
+per-component ``Timers`` (mean/std across iterations) the figures plot.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.client import Client
+from ..core.server import StoreServer
+from ..core.store import TableSpec, make_key
+from ..core.telemetry import Timers
+
+__all__ = ["ReproducerConfig", "run_transfer", "run_inference"]
+
+
+@dataclass(frozen=True)
+class ReproducerConfig:
+    n_ranks: int = 24            # simulation ranks (paper: 24/node)
+    bytes_per_rank: int = 256 * 1024   # paper default message size
+    iterations: int = 40         # paper: 40 timed iterations
+    warmup: int = 2              # paper: 2 discarded warmup iterations
+    compute_s: float = 0.0       # sleep emulating PDE integration
+    dtype: str = "float32"
+
+    @property
+    def elems_per_rank(self) -> int:
+        return self.bytes_per_rank // jnp.dtype(self.dtype).itemsize
+
+    def table_spec(self, capacity: int | None = None) -> TableSpec:
+        # One slab row per rank, ring-buffered over a window of steps.
+        return TableSpec(
+            name="repro",
+            shape=(self.elems_per_rank,),
+            dtype=self.dtype,
+            capacity=capacity or max(2 * self.n_ranks, 8),
+            engine="ring",
+        )
+
+
+def _payload(cfg: ReproducerConfig, seed: int = 0) -> jax.Array:
+    """All ranks' contributions for one step: [n_ranks, elems]."""
+    key = jax.random.key(seed)
+    return jax.random.normal(
+        key, (cfg.n_ranks, cfg.elems_per_rank), dtype=cfg.dtype
+    )
+
+
+def run_transfer(cfg: ReproducerConfig, server: StoreServer,
+                 vectorized: bool = True) -> Timers:
+    """The paper's data-transfer loop: sleep, send, retrieve, repeat.
+
+    ``vectorized=True`` sends all ranks' tensors in one ``put_many`` (one
+    dispatch per step — how a sharded producer actually behaves on a TPU
+    mesh: every chip writes its shard of the same step concurrently).
+    ``vectorized=False`` issues one put per rank (per-client requests, the
+    Polaris picture) — used to study request-count contention.
+    """
+    if "repro" not in server.tables():
+        server.create_table(cfg.table_spec())
+    client = Client(server)
+    data = _payload(cfg)
+    jax.block_until_ready(data)
+    timers = client.timers
+
+    for it in range(cfg.warmup + cfg.iterations):
+        if it == cfg.warmup:
+            timers = Timers()
+            client.timers = timers
+        if cfg.compute_s:
+            time.sleep(cfg.compute_s)
+        step = it
+        if vectorized:
+            client.send_batch("repro", step, data)
+            keys = make_key(jnp.arange(cfg.n_ranks), jnp.full(cfg.n_ranks, step))
+            with timers.time("retrieve") as box:
+                vals, founds = server.get_many("repro", keys)
+                box[0] = vals
+        else:
+            for rank in range(cfg.n_ranks):
+                rc = Client(server, rank=rank, timers=timers)
+                rc.send_step("repro", step, data[rank])
+            for rank in range(cfg.n_ranks):
+                rc = Client(server, rank=rank, timers=timers)
+                rc.retrieve_step("repro", rank, step)
+    return timers
+
+
+def run_inference(cfg: ReproducerConfig, server: StoreServer, model_key: str,
+                  batch: jax.Array, fused: bool = False) -> Timers:
+    """The paper's inference loop: send → run_model → retrieve each step.
+
+    ``batch`` is the per-step inference input (e.g. ResNet50 images
+    [n,3,224,224]).  The model must already be registered on the server.
+    ``fused=True`` uses the single-dispatch fast path instead of the
+    three-step protocol (the beyond-paper optimization benchmarked against
+    the faithful path in Fig. 7's harness).
+    """
+    client = Client(server)
+    # Output spec discovered once via eval_shape on the registered model.
+    fn, params = server._models[model_key]
+    out_shape = jax.eval_shape(fn, params, batch)
+    if "infer_in" not in server.tables():
+        server.create_table(TableSpec("infer_in", shape=batch.shape,
+                                      dtype=batch.dtype, capacity=2,
+                                      engine="hash"))
+        server.create_table(TableSpec("infer_out", shape=out_shape.shape,
+                                      dtype=out_shape.dtype, capacity=2,
+                                      engine="hash"))
+    jax.block_until_ready(batch)
+    timers = client.timers
+
+    for it in range(cfg.warmup + cfg.iterations):
+        if it == cfg.warmup:
+            timers = Timers()
+            client.timers = timers
+        if cfg.compute_s:
+            time.sleep(cfg.compute_s)
+        if fused:
+            y = client.infer(model_key, batch)
+            jax.block_until_ready(y)
+            continue
+        client.put_tensor("x", batch, table="infer_in")
+        client.run_model(model_key, inputs=["x"], outputs=["y"],
+                         table="infer_in", out_table="infer_out")
+        y, found = client.get_tensor("y", table="infer_out")
+        jax.block_until_ready(y)
+    return timers

@@ -1,0 +1,6 @@
+"""Training substrate: optimizers, train states, checkpointing."""
+
+from . import checkpoint, optimizer, train_state
+from .train_state import TrainState, make_tx
+
+__all__ = ["checkpoint", "optimizer", "train_state", "TrainState", "make_tx"]

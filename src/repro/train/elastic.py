@@ -1,0 +1,52 @@
+"""Elastic scaling: carry a training job across mesh-size changes.
+
+A 1000-node fleet loses nodes; the job must continue on whatever mesh the
+scheduler can re-assemble.  Two supported paths:
+
+* **restart-reshard** (`reshard_state`): the durable checkpoint is restored
+  with ``device_put`` onto the *new* mesh's shardings (``checkpoint.restore``
+  does this transparently — leaves carry their target shardings);
+* **live remesh** (`remesh`): an in-memory state pytree is moved onto a new
+  mesh directly (survivor-to-survivor reshard; on hardware this is the
+  cheap path after a partial failure when HBM contents survive).
+
+``plan_mesh`` picks the largest (data, model) grid that fits the surviving
+device count while preserving the model-parallel degree (TP degree is a
+property of the checkpoint's layout efficiency, DP shrinks freely).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from ..parallel.sharding import spec_for
+
+__all__ = ["plan_mesh", "remesh", "reshard_state"]
+
+
+def plan_mesh(n_devices: int, model_degree: int = 1,
+              axis_names=("data", "model")) -> Mesh:
+    """Largest (data, model) mesh for the surviving devices."""
+    if model_degree > n_devices:
+        raise ValueError(f"model degree {model_degree} > {n_devices} devices")
+    data = n_devices // model_degree
+    devices = jax.devices()[: data * model_degree]
+    import numpy as np
+    return Mesh(np.array(devices).reshape(data, model_degree), axis_names)
+
+
+def remesh(tree, axes_tree, new_mesh: Mesh, rules=None):
+    """Move a live pytree onto ``new_mesh`` (axes_tree: logical axes per
+    leaf, same structure)."""
+    def _move(x, axes):
+        sh = NamedSharding(new_mesh, spec_for(axes, new_mesh, rules))
+        return jax.device_put(x, sh)
+    return jax.tree.map(_move, tree, axes_tree)
+
+
+def reshard_state(ckpt_dir, like_state, step=None):
+    """Restore a checkpoint onto the current mesh (thin alias with intent:
+    ``like_state`` was built for the *new* mesh)."""
+    from . import checkpoint as ck
+    return ck.restore(ckpt_dir, like_state, step=step)

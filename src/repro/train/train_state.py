@@ -1,0 +1,102 @@
+"""Generic train state + optimizer wiring for the LM substrate.
+
+Builds the optimizer from the arch config (AdamW for ≤35B, Adafactor for
+the 340B/398B giants — factored second moments are what make them fit),
+and provides *abstract* state constructors (ShapeDtypeStruct + shardings)
+for the dry-run: optimizer state inherits the ZeRO sharding of the params
+it tracks, with Adafactor's factored vectors dropping the reduced axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..parallel.sharding import ParamSpec, fitted_sharding, spec_for
+from . import optimizer as opt
+
+__all__ = ["TrainState", "make_tx", "abstract_train_state", "init_train_state"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def make_tx(cfg, total_steps: int = 100_000) -> opt.GradientTransformation:
+    sched = opt.warmup_cosine(3e-4 if cfg.optimizer != "adafactor" else 1e-2,
+                              warmup_steps=min(2000, total_steps // 10),
+                              total_steps=total_steps)
+    if cfg.optimizer == "adafactor":
+        inner = opt.adafactor(lr=sched)
+    else:
+        inner = opt.adamw(lr=sched, b1=0.9, b2=0.95, weight_decay=0.1)
+    return opt.chain(opt.clip_by_global_norm(1.0), inner)
+
+
+def init_train_state(key, cfg, specs, tx, dtype=None) -> TrainState:
+    from ..parallel.sharding import init_params
+    params = init_params(key, specs, dtype or cfg.dtype)
+    return TrainState(params=params, opt_state=tx.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Abstract state (dry-run)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, axes, rules=None):
+    sh = fitted_sharding(mesh, shape, axes, rules)
+    return jax.ShapeDtypeStruct(tuple(shape), dtype, sharding=sh)
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def abstract_params(specs, mesh, dtype, rules=None):
+    return jax.tree.map(
+        lambda s: _sds(s.shape, dtype, mesh, s.axes, rules),
+        specs, is_leaf=_is_spec)
+
+
+def _abstract_adam(specs, mesh, rules):
+    mu = jax.tree.map(lambda s: _sds(s.shape, jnp.float32, mesh, s.axes,
+                                     rules), specs, is_leaf=_is_spec)
+    nu = jax.tree.map(lambda s: _sds(s.shape, jnp.float32, mesh, s.axes,
+                                     rules), specs, is_leaf=_is_spec)
+    return opt.AdamState(step=_sds((), jnp.int32, mesh, ()), mu=mu, nu=nu)
+
+
+def _abstract_adafactor(specs, mesh, rules):
+    def rows(s):
+        if len(s.shape) >= 2:
+            return _sds(s.shape[:-1], jnp.float32, mesh, s.axes[:-1], rules)
+        return _sds(s.shape, jnp.float32, mesh, s.axes, rules)
+
+    def cols(s):
+        if len(s.shape) >= 2:
+            return _sds(s.shape[:-2] + s.shape[-1:], jnp.float32, mesh,
+                        s.axes[:-2] + s.axes[-1:], rules)
+        return _sds((), jnp.float32, mesh, ())
+
+    return opt.AdafactorState(
+        step=_sds((), jnp.int32, mesh, ()),
+        vr=jax.tree.map(rows, specs, is_leaf=_is_spec),
+        vc=jax.tree.map(cols, specs, is_leaf=_is_spec))
+
+
+def abstract_train_state(cfg, specs, mesh, rules=None) -> TrainState:
+    """ShapeDtypeStruct TrainState matching ``make_tx(cfg)``'s structure."""
+    params = abstract_params(specs, mesh, cfg.dtype, rules)
+    if cfg.optimizer == "adafactor":
+        inner = _abstract_adafactor(specs, mesh, rules)
+    else:
+        inner = _abstract_adam(specs, mesh, rules)
+    # chain(clip, inner) state = ((), inner_state)
+    return TrainState(params=params, opt_state=((), inner),
+                      step=_sds((), jnp.int32, mesh, ()))

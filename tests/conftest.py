@@ -1,0 +1,38 @@
+"""Shared pytest fixtures/utilities.
+
+NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+single real CPU device; multi-device tests spawn subprocesses that set
+``--xla_force_host_platform_device_count`` themselves (see ``run_subprocess``).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+
+
+def run_subprocess(code: str, n_devices: int = 4, timeout: float = 420.0):
+    """Run ``code`` in a fresh interpreter with N host platform devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode}):\n"
+            f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+    return jax.random.key(0)

@@ -1,0 +1,193 @@
+"""Pallas kernel correctness: shape/dtype sweeps vs the pure-jnp oracles.
+
+Kernels execute under ``interpret=True`` on CPU (the TPU BlockSpec path run
+in Python), asserted allclose against ``ref.py``.  Hypothesis drives random
+shapes; fixed sweeps cover the MXU-aligned and the ragged/padded cases.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.quadconv import quadconv_contract, quadconv_contract_ref
+
+
+def _rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape).astype(dtype) * 0.3
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("B,I,C,J,O", [
+    (1, 16, 4, 8, 8),        # tiny
+    (4, 96, 4, 48, 16),      # paper-ish channels
+    (2, 128, 16, 128, 16),   # MXU-aligned K and N
+    (3, 50, 3, 17, 5),       # ragged everything (exercises padding)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quadconv_kernel_sweep(B, I, C, J, O, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    f = _rand(ks[0], B, I, C, dtype=dtype)
+    w = jax.random.uniform(ks[1], (I,)).astype(dtype)
+    g = _rand(ks[2], J, I, O, C, dtype=dtype)
+    ref = quadconv_contract_ref(f, w, g)
+    out = quadconv_contract(f, w, g, "interpret", 8, 128, 128)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 40), st.integers(1, 6),
+       st.integers(1, 24), st.integers(1, 8))
+def test_quadconv_kernel_property(B, I, C, J, O):
+    ks = jax.random.split(jax.random.key(B * 1000 + I), 3)
+    f = _rand(ks[0], B, I, C)
+    w = jax.random.uniform(ks[1], (I,))
+    g = _rand(ks[2], J, I, O, C)
+    ref = quadconv_contract_ref(f, w, g)
+    out = quadconv_contract(f, w, g, "interpret", 8, 128, 128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_quadconv_kernel_grads_match_ref():
+    ks = jax.random.split(jax.random.key(1), 3)
+    f = _rand(ks[0], 2, 32, 4)
+    w = jax.random.uniform(ks[1], (32,))
+    g = _rand(ks[2], 16, 32, 8, 4)
+
+    def loss(f, w, g, mode):
+        return jnp.sum(quadconv_contract(f, w, g, mode) ** 2)
+
+    g_ref = jax.grad(loss, argnums=(0, 1, 2))(f, w, g, "ref")
+    g_int = jax.grad(loss, argnums=(0, 1, 2))(f, w, g, "interpret")
+    for a, b in zip(g_ref, g_int):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_quadconv_linearity():
+    """Contraction is linear in f: K(af1 + bf2) == aK(f1) + bK(f2)."""
+    ks = jax.random.split(jax.random.key(2), 4)
+    f1, f2 = _rand(ks[0], 2, 24, 4), _rand(ks[1], 2, 24, 4)
+    w = jax.random.uniform(ks[2], (24,))
+    g = _rand(ks[3], 12, 24, 8, 4)
+    lhs = quadconv_contract(2.0 * f1 + 3.0 * f2, w, g, "interpret")
+    rhs = 2.0 * quadconv_contract(f1, w, g, "interpret") \
+        + 3.0 * quadconv_contract(f2, w, g, "interpret")
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention kernel
+# ---------------------------------------------------------------------------
+
+from repro.kernels.attention import mha, mha_ref
+
+
+@pytest.mark.parametrize("B,S,H,K,dh,causal", [
+    (1, 128, 2, 2, 64, True),       # MHA
+    (2, 256, 4, 2, 64, True),       # GQA 2:1
+    (1, 128, 8, 2, 128, True),      # GQA 4:1, wide head
+    (1, 128, 4, 4, 64, False),      # bidirectional (encoder)
+    (1, 384, 2, 1, 64, True),       # MQA, 3 kv blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, K, dh, causal, dtype):
+    ks = jax.random.split(jax.random.key(B * S + H), 3)
+    q = (jax.random.normal(ks[0], (B, S, H, dh)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, S, K, dh)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, S, K, dh)) * 0.5).astype(dtype)
+    ref = mha_ref(q, k, v, causal)
+    out = mha(q, k, v, causal, "interpret")
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_flash_attention_grads():
+    ks = jax.random.split(jax.random.key(9), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64)) * 0.5
+    k = jax.random.normal(ks[1], (1, 128, 2, 64)) * 0.5
+    v = jax.random.normal(ks[2], (1, 128, 2, 64)) * 0.5
+    g1 = jax.grad(lambda q_: jnp.sum(mha(q_, k, v, True, "interpret") ** 2))(q)
+    g2 = jax.grad(lambda q_: jnp.sum(mha_ref(q_, k, v, True) ** 2))(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)
+
+
+def test_flash_attention_long_context_numerics():
+    """Streaming softmax stays exact over many KV blocks."""
+    ks = jax.random.split(jax.random.key(11), 3)
+    q = jax.random.normal(ks[0], (1, 512, 1, 64))
+    k = jax.random.normal(ks[1], (1, 512, 1, 64))
+    v = jax.random.normal(ks[2], (1, 512, 1, 64))
+    ref = mha_ref(q, k, v, True)
+    out = mha(q, k, v, True, "interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD intra-chunk kernel
+# ---------------------------------------------------------------------------
+
+from repro.kernels.ssd import ssd_scan
+from repro.models.ssd import ssd_scan_ref
+
+
+@pytest.mark.parametrize("B,S,H,P,N,Q", [
+    (1, 16, 2, 4, 8, 8),
+    (2, 32, 4, 8, 16, 8),
+    (1, 64, 8, 16, 32, 16),     # multi head-block
+    (2, 24, 6, 8, 16, 8),       # H not a multiple of default blk_h
+])
+def test_ssd_kernel_sweep(B, S, H, P, N, Q):
+    ks = jax.random.split(jax.random.key(B * 100 + S), 4)
+    xdt = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    a = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    b = jax.random.normal(ks[2], (B, S, N)) * 0.5
+    c = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    y_ref, h_ref = ssd_scan_ref(xdt, a, b, c)
+    blk = H if H % 2 else 2
+    from repro.kernels.ssd.ops import ssd_scan as scan
+    y, h = scan(xdt, a, b, c, chunk=Q, mode="interpret")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=3e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 2), st.integers(1, 4), st.integers(1, 3),
+       st.integers(1, 3))
+def test_ssd_kernel_property(B, nc, h2, p2):
+    H, P, N, Q = 2 * h2, 4 * p2, 8, 8
+    S = nc * Q
+    ks = jax.random.split(jax.random.key(B * 7 + S), 4)
+    xdt = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    a = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    b = jax.random.normal(ks[2], (B, S, N)) * 0.5
+    c = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    y_ref, h_ref = ssd_scan_ref(xdt, a, b, c)
+    y, h = ssd_scan(xdt, a, b, c, chunk=Q, mode="interpret")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=3e-5)
+
+
+@pytest.mark.parametrize("B,S,H,K,dh,causal", [
+    (1, 128, 2, 2, 64, True),       # MHA causal
+    (2, 256, 4, 2, 64, True),       # GQA (group-summed dk/dv)
+    (1, 128, 4, 4, 64, False),      # bidirectional
+    (1, 384, 2, 1, 64, True),       # MQA, 3 kv blocks
+])
+def test_flash_attention_bwd_kernel(B, S, H, K, dh, causal):
+    """Pallas FA-2 backward == oracle VJP (dq, dk, dv)."""
+    ks = jax.random.split(jax.random.key(B * S + H), 4)
+    q = jax.random.normal(ks[0], (B, S, H, dh)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, K, dh)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, K, dh)) * 0.5
+    ct = jax.random.normal(ks[3], (B, S, H, dh)) * 0.5
+    g1 = jax.grad(lambda *a: jnp.sum(mha(*a, causal, "interpret") * ct),
+                  argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: jnp.sum(mha_ref(*a, causal) * ct),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)

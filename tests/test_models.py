@@ -1,0 +1,305 @@
+"""Model zoo: per-arch smoke tests + component-level correctness.
+
+Every assigned architecture instantiates its REDUCED (same-family) config
+and runs one forward/train step on CPU asserting output shapes and no
+NaNs; decode is checked against the teacher-forced forward logits.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import lm, moe, ssd, whisper
+from repro.models.config import ModelConfig
+from repro.models.layers import rope
+from repro.parallel.sharding import init_params
+
+B, S = 2, 32
+
+
+def _lm_setup(cfg, seed=0):
+    params = init_params(jax.random.key(seed), lm.lm_specs(cfg), cfg.dtype)
+    tokens = jax.random.randint(jax.random.key(seed + 1), (B, S), 0,
+                                cfg.vocab)
+    extra, labels = None, tokens
+    if cfg.frontend == "vision":
+        extra = jax.random.normal(
+            jax.random.key(seed + 2),
+            (B, cfg.frontend_tokens, cfg.d_model)) * 0.1
+        labels = jnp.concatenate(
+            [jnp.full((B, cfg.frontend_tokens), -1, jnp.int32), tokens], 1)
+    return params, tokens, labels, extra
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_loss(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.is_encdec:
+        params = init_params(jax.random.key(0), whisper.whisper_specs(cfg),
+                             cfg.dtype)
+        frames = jax.random.normal(
+            jax.random.key(1), (B, cfg.encoder_ctx, cfg.d_model)) * 0.1
+        tokens = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab)
+        loss, m = whisper.whisper_loss(params, cfg, frames, tokens, tokens)
+        assert jnp.isfinite(loss)
+        enc = whisper.encode(params, cfg, frames)
+        assert enc.shape == (B, cfg.encoder_ctx, cfg.d_model)
+        assert bool(jnp.isfinite(enc).all())
+        return
+    params, tokens, labels, extra = _lm_setup(cfg)
+    hidden, aux = lm.forward(params, cfg, tokens, extra)
+    S_total = S + (cfg.frontend_tokens if extra is not None else 0)
+    assert hidden.shape == (B, S_total, cfg.d_model)
+    assert bool(jnp.isfinite(hidden).all())
+    loss, metrics = lm.lm_loss(params, cfg, tokens, labels, extra)
+    assert jnp.isfinite(loss) and float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    from repro.configs.registry import SHAPES
+    from repro.launch.steps import make_train_step
+    from repro.train.train_state import init_train_state, make_tx
+    tx = make_tx(cfg, total_steps=10)
+    from repro.launch.steps import model_specs
+    state = init_train_state(jax.random.key(0), cfg, model_specs(cfg), tx)
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            jax.random.key(2), (B, cfg.encoder_ctx, cfg.d_model)) * 0.1
+    if cfg.frontend == "vision":
+        batch["patches"] = jnp.zeros((B, cfg.frontend_tokens, cfg.d_model),
+                                     cfg.dtype)
+        batch["labels"] = jnp.concatenate(
+            [jnp.full((B, cfg.frontend_tokens), -1, jnp.int32), tokens], 1)
+    step = make_train_step(cfg)
+    new_state, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert int(new_state.step) == 1
+    # params actually changed
+    delta = sum(float(jnp.sum(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(new_state.params),
+                                jax.tree.leaves(state.params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["starcoder2_3b", "phi4_mini_3_8b",
+                                  "mamba2_1_3b", "jamba_1_5_large_398b",
+                                  "qwen3_moe_235b_a22b", "llava_next_34b"])
+def test_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    params, tokens, labels, extra = _lm_setup(cfg)
+    hidden, _ = lm.forward(params, cfg, tokens, extra)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits_tf = hidden[:, -1] @ w
+    t_max = (cfg.frontend_tokens if extra is not None else 0) + S + 4
+    _, caches, pos = lm.prefill(params, cfg, tokens[:, :-1], extra,
+                                t_max=t_max)
+    dl, _ = lm.decode_step(params, cfg, caches, tokens[:, -1:], pos)
+    np.testing.assert_allclose(np.asarray(logits_tf), np.asarray(dl),
+                               atol=3e-3)
+
+
+def test_full_config_param_counts_match_published():
+    published = {   # billions, ±6%
+        "llama4_scout_17b_a16e": 109, "qwen3_moe_235b_a22b": 235,
+        "starcoder2_7b": 7.2, "phi4_mini_3_8b": 3.8, "nemotron_4_340b": 340,
+        "starcoder2_3b": 3.0, "mamba2_1_3b": 1.3,
+        "jamba_1_5_large_398b": 398, "whisper_large_v3": 1.54,
+        "llava_next_34b": 34.4,
+    }
+    for arch, target in published.items():
+        got = get_config(arch).param_count() / 1e9
+        assert abs(got - target) / target < 0.08, (arch, got, target)
+
+
+def test_active_params_moe():
+    assert abs(get_config("llama4_scout_17b_a16e").active_param_count() / 1e9
+               - 17) < 1.5
+    assert abs(get_config("qwen3_moe_235b_a22b").active_param_count() / 1e9
+               - 22) < 1.5
+    assert abs(get_config("jamba_1_5_large_398b").active_param_count() / 1e9
+               - 94) < 4
+
+
+# ---------------------------------------------------------------------------
+# Component-level
+# ---------------------------------------------------------------------------
+
+class TestSSD:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(1, 3), st.integers(2, 6), st.integers(1, 4),
+           st.integers(1, 4), st.integers(2, 8))
+    def test_chunked_equals_sequential(self, b, s_chunks, h, p2, n):
+        S_ = s_chunks * 4
+        P = 2 * p2
+        ks = jax.random.split(jax.random.key(b * 100 + S_), 4)
+        xdt = jax.random.normal(ks[0], (b, S_, h, P)) * 0.5
+        a = -jax.nn.softplus(jax.random.normal(ks[1], (b, S_, h)))
+        bb = jax.random.normal(ks[2], (b, S_, n)) * 0.5
+        cc = jax.random.normal(ks[3], (b, S_, n)) * 0.5
+        y_ref, h_ref = ssd.ssd_scan_ref(xdt, a, bb, cc)
+        y_chk, h_chk = ssd.ssd_scan_chunked(xdt, a, cc, bb, chunk=4)
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_chk),
+                                   atol=2e-5)
+        np.testing.assert_allclose(np.asarray(h_ref), np.asarray(h_chk),
+                                   atol=2e-5)
+
+    def test_decode_equals_full(self):
+        cfg = get_smoke_config("mamba2_1_3b")
+        params = init_params(jax.random.key(1),
+                             ssd.ssd_specs(cfg), jnp.float32)
+        x = jax.random.normal(jax.random.key(2), (2, 16, cfg.d_model)) * 0.5
+        x1 = jax.random.normal(jax.random.key(3), (2, 1, cfg.d_model)) * 0.5
+        out, cache = ssd.ssd_apply(params, cfg, x, return_cache=True)
+        full = ssd.ssd_apply(params, cfg, jnp.concatenate([x, x1], 1))
+        dec, _ = ssd.ssd_decode(params, cfg, x1, cache)
+        np.testing.assert_allclose(np.asarray(full[:, -1:]), np.asarray(dec),
+                                   atol=2e-4)
+
+
+class TestMoE:
+    def test_matches_dense_routing(self):
+        cfg = ModelConfig(name="m", n_layers=2, d_model=16, n_heads=2,
+                          n_kv_heads=2, d_ff=32, vocab=64,
+                          pattern=(("attn", "moe"),), n_experts=4, top_k=2,
+                          d_ff_moe=32, capacity_factor=8.0)
+        mp = init_params(jax.random.key(4), moe.moe_specs(cfg))
+        xm = jax.random.normal(jax.random.key(5), (2, 8, 16)) * 0.5
+        y, aux = moe.moe_apply(mp, cfg, xm)
+        logits = jnp.einsum("bsd,de->bse", xm, mp["router"])
+        probs = jax.nn.softmax(logits, -1)
+        gv, gi = jax.lax.top_k(probs, 2)
+        g = gv / gv.sum(-1, keepdims=True)
+        ref = np.zeros_like(np.asarray(xm))
+        for b_ in range(2):
+            for s_ in range(8):
+                for j in range(2):
+                    e = int(gi[b_, s_, j])
+                    t = xm[b_, s_]
+                    h = t @ mp["w_up"][e]
+                    gt = t @ mp["w_gate"][e]
+                    o = (jax.nn.silu(gt) * h) @ mp["w_down"][e]
+                    ref[b_, s_] += float(g[b_, s_, j]) * np.asarray(o)
+        np.testing.assert_allclose(np.asarray(y), ref, atol=1e-4)
+        assert float(aux) > 0
+
+    def test_capacity_drops_tokens(self):
+        cfg = ModelConfig(name="m", n_layers=2, d_model=8, n_heads=2,
+                          n_kv_heads=2, d_ff=16, vocab=64,
+                          pattern=(("attn", "moe"),), n_experts=2, top_k=1,
+                          d_ff_moe=16, capacity_factor=1.0)
+        mp = init_params(jax.random.key(0), moe.moe_specs(cfg))
+        x = jnp.ones((1, 16, 8)) * 0.3     # all tokens route identically
+        y, aux = moe.moe_apply(mp, cfg, x)
+        # over-capacity tokens get zero expert output
+        norms = np.linalg.norm(np.asarray(y)[0], axis=-1)
+        assert (norms < 1e-6).sum() >= 16 - moe.capacity(cfg, 16)
+
+
+def test_rope_rotation_invariant():
+    """RoPE preserves norms and relative-position inner products."""
+    x = jax.random.normal(jax.random.key(0), (1, 8, 2, 16))
+    pos = jnp.arange(8)[None, :]
+    r = rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(r), axis=-1),
+                               atol=1e-5)
+    # relative property: <r(q,i), r(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.key(1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.key(2), (1, 1, 1, 16))
+    def dot_at(i, j):
+        rq = rope(q, jnp.array([[i]]), 1e4)
+        rk = rope(k, jnp.array([[j]]), 1e4)
+        return float(jnp.sum(rq * rk))
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4
+
+
+def test_ce_chunked_equals_full():
+    cfg = get_smoke_config("starcoder2_3b")
+    import dataclasses
+    cfg_full = dataclasses.replace(cfg, ce_chunk=0)
+    cfg_chunk = dataclasses.replace(cfg, ce_chunk=8)
+    params, tokens, labels, _ = _lm_setup(cfg)
+    l1, _ = lm.lm_loss(params, cfg_full, tokens, labels)
+    l2, _ = lm.lm_loss(params, cfg_chunk, tokens, labels)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_quantized_kv_decode_close_to_bf16():
+    """§Perf H3.1: int8 KV cache decode tracks the exact path (<5% rel)."""
+    import dataclasses
+    cfg = get_smoke_config("phi4_mini_3_8b")
+    cfg_q = dataclasses.replace(cfg, kv_cache_quant=True)
+    params, tokens, _, _ = _lm_setup(cfg)
+    _, caches, pos = lm.prefill(params, cfg, tokens[:, :-1], t_max=S + 4)
+    ref, _ = lm.decode_step(params, cfg, caches, tokens[:, -1:], pos)
+    caches_q = lm.init_caches(cfg_q, B, S + 4)
+    logits = None
+    for t in range(S):
+        logits, caches_q = lm.decode_step(params, cfg_q, caches_q,
+                                          tokens[:, t:t + 1], jnp.int32(t))
+    rel = float(jnp.max(jnp.abs(ref - logits))) / \
+        float(jnp.max(jnp.abs(ref)))
+    assert rel < 0.05, rel
+
+
+def test_flash_impl_matches_xla_forward():
+    import dataclasses
+    cfg = get_smoke_config("starcoder2_7b")
+    params, tokens, labels, _ = _lm_setup(cfg)
+    hid_x, _ = lm.forward(params, cfg, tokens)
+    cfg_f = dataclasses.replace(cfg, attn_impl="flash_interpret",
+                                attn_chunk=16)
+    hid_f, _ = lm.forward(params, cfg_f, tokens)
+    np.testing.assert_allclose(np.asarray(hid_x), np.asarray(hid_f),
+                               atol=5e-3)
+
+
+def test_bf16_grads_close_to_fp32_grads():
+    import dataclasses
+    cfg = get_smoke_config("phi4_mini_3_8b")     # fp32 smoke dtype
+    params, tokens, labels, _ = _lm_setup(cfg)
+    g_ref = jax.grad(lambda p: lm.lm_loss(p, cfg, tokens, labels)[0])(params)
+    cfg_b = dataclasses.replace(cfg, bf16_grads=True)
+    g_b = jax.grad(lambda p: lm.lm_loss(p, cfg_b, tokens, labels)[0])(params)
+    # fp32 smoke dtype -> ct_cast is exact identity here
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_b)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_grad_accum_matches_single_step():
+    """Microbatched step == monolithic step on the same global batch."""
+    import dataclasses
+    from repro.launch.steps import make_train_step
+    from repro.train.train_state import init_train_state, make_tx
+    from repro.launch.steps import model_specs
+    cfg1 = get_smoke_config("starcoder2_3b")
+    cfg2 = dataclasses.replace(cfg1, grad_accum=2)
+    tokens = jax.random.randint(jax.random.key(1), (4, 16), 0, cfg1.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    outs = []
+    for cfg in (cfg1, cfg2):
+        tx = make_tx(cfg, total_steps=10)
+        state = init_train_state(jax.random.key(0), cfg, model_specs(cfg), tx)
+        new_state, metrics = make_train_step(cfg)(state, batch)
+        outs.append(new_state.params)
+    for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_ssd_kernel_impl_matches_xla():
+    """`ssd_impl=kernel_interpret` forward == xla chunked path."""
+    import dataclasses
+    cfg = get_smoke_config("mamba2_1_3b")
+    params, tokens, labels, _ = _lm_setup(cfg)
+    hid_x, _ = lm.forward(params, cfg, tokens)
+    cfg_k = dataclasses.replace(cfg, ssd_impl="kernel_interpret")
+    hid_k, _ = lm.forward(params, cfg_k, tokens)
+    np.testing.assert_allclose(np.asarray(hid_x), np.asarray(hid_k),
+                               atol=2e-4)

@@ -1,0 +1,107 @@
+"""CFD substrate: spectral solver exactness + flat-plate generator."""
+
+import jax
+import jax.numpy as jnp
+import math
+import numpy as np
+import pytest
+
+from repro.sim import flatplate as fp
+from repro.sim import spectral as sp
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return sp.NSConfig(n=16, nu=0.05, dt=0.01)
+
+
+def test_tgv2d_exact_decay(cfg):
+    """2-D Taylor-Green is an exact NS solution: E(t) = E0·e^{-4νt}."""
+    state = sp.taylor_green_2d(cfg)
+    e0 = float(sp.energy(cfg, state))
+    for _ in range(20):
+        state = sp.step(cfg, state)
+    e = float(sp.energy(cfg, state))
+    expected = e0 * math.exp(-4 * cfg.nu * float(state.t))
+    assert abs(e - expected) / expected < 1e-5
+
+
+def test_divergence_free(cfg):
+    state = sp.taylor_green(cfg)
+    for _ in range(10):
+        state = sp.step(cfg, state)
+    assert float(sp.max_divergence(cfg, state)) < 1e-10
+
+
+def test_energy_monotone_decay_unforced(cfg):
+    state = sp.taylor_green(cfg)
+    es = [float(sp.energy(cfg, state))]
+    for _ in range(8):
+        state = sp.step(cfg, state)
+        es.append(float(sp.energy(cfg, state)))
+    assert all(a >= b for a, b in zip(es, es[1:]))
+
+
+def test_forcing_sustains_energy():
+    cfg = sp.NSConfig(n=16, nu=0.02, dt=0.01, forcing=True, f_amp=0.15)
+    state = sp.random_turbulence(cfg, jax.random.key(0), e0=0.3)
+    e0 = float(sp.energy(cfg, state))
+    for _ in range(30):
+        state = sp.step(cfg, state)
+    e = float(sp.energy(cfg, state))
+    assert e > 0.2 * e0            # forced flow does not die out
+
+
+def test_snapshot_shape_and_finite(cfg):
+    state = sp.taylor_green(cfg)
+    snap = sp.snapshot(cfg, state)
+    assert snap.shape == (4, cfg.n_points)
+    assert bool(jnp.isfinite(snap).all())
+    # pressure gauge: zero mean
+    assert abs(float(snap[0].mean())) < 1e-6
+
+
+def test_partition_snapshot_roundtrip(cfg):
+    state = sp.taylor_green(cfg)
+    snap = sp.snapshot(cfg, state)
+    parts = sp.partition_snapshot(snap, 8)
+    assert parts.shape == (8, 4, cfg.n_points // 8)
+    rebuilt = parts.transpose(1, 0, 2).reshape(4, -1)
+    np.testing.assert_allclose(np.asarray(rebuilt), np.asarray(snap))
+
+
+class TestFlatPlate:
+    def test_shapes_and_coords(self):
+        cfg = fp.FlatPlateConfig(nx=8, ny=8, nz=4)
+        coords = fp.grid_coords(cfg)
+        snap = fp.snapshot(cfg, jax.random.key(0), 0)
+        assert coords.shape == (cfg.n_points, 3)
+        assert snap.shape == (4, cfg.n_points)
+        assert bool(jnp.isfinite(snap).all())
+
+    def test_wall_normal_stretching(self):
+        cfg = fp.FlatPlateConfig(nx=4, ny=16, nz=2)
+        coords = fp.grid_coords(cfg)
+        y = np.unique(np.asarray(coords[:, 1]))
+        dy = np.diff(y)
+        assert dy[0] < dy[-1] * 0.5          # clustered at the wall
+
+    def test_temporal_correlation(self):
+        cfg = fp.FlatPlateConfig(nx=8, ny=8, nz=4)
+        s0 = fp.snapshot(cfg, jax.random.key(0), 0)
+        s1 = fp.snapshot(cfg, jax.random.key(0), 1)
+        s9 = fp.snapshot(cfg, jax.random.key(0), 40)
+        c1 = float(jnp.corrcoef(s0[1], s1[1])[0, 1])
+        c9 = float(jnp.corrcoef(s0[1], s9[1])[0, 1])
+        assert c1 > 0.9 and c9 < c1          # decorrelates over time
+
+    def test_deterministic(self):
+        cfg = fp.FlatPlateConfig(nx=4, ny=4, nz=2)
+        a = fp.snapshot(cfg, jax.random.key(3), 7)
+        b = fp.snapshot(cfg, jax.random.key(3), 7)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_batch(self):
+        cfg = fp.FlatPlateConfig(nx=4, ny=4, nz=2)
+        batch = fp.snapshot_batch(cfg, jax.random.key(0), 0, 3)
+        assert batch.shape == (3, 4, cfg.n_points)

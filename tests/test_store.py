@@ -1,0 +1,217 @@
+"""TensorStore semantics: unit + hypothesis property tests.
+
+The property test drives the device store with random op sequences and
+checks it against a pure-python dict model (the Redis semantics the paper
+relies on): hash-engine put/get/poll/delete behave like a keyed map; the
+ring engine holds exactly the last ``capacity`` writes; versions and the
+watermark are monotone.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import store as S
+from repro.core.server import StoreServer
+from repro.core.store import TableSpec
+
+
+def _spec(engine="hash", capacity=8, shape=(3,)):
+    return TableSpec("t", shape=shape, capacity=capacity, engine=engine)
+
+
+def _val(x, shape=(3,)):
+    return jnp.full(shape, float(x), jnp.float32)
+
+
+class TestHashEngine:
+    def test_put_get_roundtrip(self):
+        spec = _spec()
+        st_ = S.init_table(spec)
+        st_ = S.put(spec, st_, 42, _val(1.5))
+        v, found = S.get(spec, st_, 42)
+        assert bool(found) and np.allclose(v, 1.5)
+
+    def test_get_missing(self):
+        spec = _spec()
+        st_ = S.init_table(spec)
+        v, found = S.get(spec, st_, 7)
+        assert not bool(found) and np.allclose(v, 0.0)
+
+    def test_same_key_overwrites(self):
+        spec = _spec()
+        st_ = S.init_table(spec)
+        st_ = S.put(spec, st_, 5, _val(1))
+        st_ = S.put(spec, st_, 5, _val(2))
+        v, found = S.get(spec, st_, 5)
+        assert bool(found) and np.allclose(v, 2)
+        assert int(S.valid_count(spec, st_)) == 1
+
+    def test_delete(self):
+        spec = _spec()
+        st_ = S.init_table(spec)
+        st_ = S.put(spec, st_, 5, _val(1))
+        st_ = S.delete(spec, st_, 5)
+        _, found = S.get(spec, st_, 5)
+        assert not bool(found)
+
+    def test_poll(self):
+        spec = _spec()
+        st_ = S.init_table(spec)
+        assert not bool(S.poll(spec, st_, 9))
+        st_ = S.put(spec, st_, 9, _val(0))
+        assert bool(S.poll(spec, st_, 9))
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(["put", "delete"]),
+                              st.integers(0, 30),
+                              st.floats(-5, 5, allow_nan=False)),
+                    min_size=1, max_size=25))
+    def test_matches_dict_model(self, ops):
+        """Hash engine ≡ python dict (keys distinct mod capacity)."""
+        cap = 64  # > key range so no collisions
+        spec = _spec(capacity=cap)
+        st_ = S.init_table(spec)
+        model = {}
+        for op, key, x in ops:
+            if op == "put":
+                st_ = S.put(spec, st_, key, _val(x))
+                model[key] = x
+            else:
+                st_ = S.delete(spec, st_, key)
+                model.pop(key, None)
+        for key in range(31):
+            v, found = S.get(spec, st_, key)
+            assert bool(found) == (key in model)
+            if key in model:
+                assert np.allclose(v, model[key], atol=1e-6)
+        assert int(S.valid_count(spec, st_)) == len(model)
+
+
+class TestRingEngine:
+    def test_window_semantics(self):
+        """Ring holds exactly the last ``capacity`` writes."""
+        spec = _spec(engine="ring", capacity=4)
+        st_ = S.init_table(spec)
+        for i in range(7):
+            st_ = S.put(spec, st_, S.make_key(0, i), _val(i))
+        vals, keys, valid = S.latest(spec, st_, 4)
+        assert np.all(np.asarray(valid))
+        assert sorted(np.asarray(vals)[:, 0].tolist()) == [3, 4, 5, 6]
+
+    def test_latest_order(self):
+        spec = _spec(engine="ring", capacity=8)
+        st_ = S.init_table(spec)
+        for i in range(5):
+            st_ = S.put(spec, st_, S.make_key(0, i), _val(i))
+        vals, _, valid = S.latest(spec, st_, 3)
+        assert np.asarray(vals)[:, 0].tolist() == [4, 3, 2]
+
+    def test_put_many_equals_sequential(self):
+        spec = _spec(engine="ring", capacity=8)
+        a = S.init_table(spec)
+        b = S.init_table(spec)
+        keys = S.make_key(jnp.arange(5), jnp.zeros(5, jnp.int32))
+        vals = jnp.arange(5, dtype=jnp.float32)[:, None].repeat(3, 1)
+        a = S.put_many(spec, a, keys, vals)
+        for i in range(5):
+            b = S.put(spec, b, keys[i], vals[i])
+        assert np.allclose(a.slab, b.slab)
+        assert np.array_equal(np.asarray(a.keys), np.asarray(b.keys))
+        assert int(a.count) == int(b.count)
+
+    def test_watermark_monotone(self):
+        spec = _spec(engine="ring", capacity=2)
+        st_ = S.init_table(spec)
+        last = 0
+        for i in range(6):
+            st_ = S.put(spec, st_, S.make_key(1, i), _val(i))
+            assert int(st_.count) > last
+            last = int(st_.count)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 30), st.integers(2, 8))
+    def test_ring_holds_last_k(self, n_puts, cap):
+        spec = _spec(engine="ring", capacity=cap)
+        st_ = S.init_table(spec)
+        for i in range(n_puts):
+            st_ = S.put(spec, st_, S.make_key(0, i), _val(i))
+        expect = list(range(max(0, n_puts - cap), n_puts))
+        vals, _, valid = S.latest(spec, st_, cap)
+        got = sorted(np.asarray(vals)[np.asarray(valid), 0].tolist())
+        assert got == expect
+
+
+class TestSample:
+    def test_sample_only_valid(self):
+        spec = _spec(engine="ring", capacity=8)
+        st_ = S.init_table(spec)
+        for i in range(3):
+            st_ = S.put(spec, st_, S.make_key(0, i), _val(i + 10))
+        vals, keys, ok = S.sample(spec, st_, jax.random.key(0), 16)
+        assert bool(ok)
+        assert set(np.asarray(vals)[:, 0].tolist()) <= {10.0, 11.0, 12.0}
+
+    def test_sample_empty(self):
+        spec = _spec(engine="ring", capacity=4)
+        st_ = S.init_table(spec)
+        vals, keys, ok = S.sample(spec, st_, jax.random.key(0), 4)
+        assert not bool(ok)
+        assert np.allclose(vals, 0)
+
+
+class TestServer:
+    def test_threadsafe_watermark(self):
+        import threading
+        srv = StoreServer()
+        srv.create_table(_spec(engine="ring", capacity=64))
+
+        def writer(rank):
+            for i in range(10):
+                srv.put("t", S.make_key(rank, i), _val(i))
+
+        threads = [threading.Thread(target=writer, args=(r,))
+                   for r in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert srv.watermark("t") == 40
+
+    def test_wait_watermark_timeout(self):
+        srv = StoreServer()
+        srv.create_table(_spec())
+        assert not srv.wait_watermark("t", 1, timeout=0.05)
+        srv.put("t", 1, _val(0))
+        assert srv.wait_watermark("t", 1, timeout=0.05)
+
+    def test_model_registry(self):
+        srv = StoreServer()
+        srv.set_model("double", lambda p, x: x * p["k"], {"k": 2.0})
+        assert srv.has_model("double")
+        y = srv.run_model("double", jnp.ones(3))
+        assert np.allclose(y, 2.0)
+
+    def test_snapshot_restore(self):
+        srv = StoreServer()
+        srv.create_table(_spec())
+        srv.put("t", 1, _val(5))
+        snap = srv.snapshot()
+        srv.put("t", 1, _val(9))
+        srv.restore(snap)
+        v, found = srv.get("t", 1)
+        assert bool(found) and np.allclose(v, 5)
+
+
+def test_make_key_unique():
+    ranks, steps = np.meshgrid(np.arange(32), np.arange(64))
+    keys = np.asarray(S.make_key(jnp.asarray(ranks.ravel()),
+                                 jnp.asarray(steps.ravel())))
+    assert len(np.unique(keys)) == keys.size
+
+
+def test_name_key_stable():
+    assert S.name_key("x.3.120") == S.name_key("x.3.120")
+    assert S.name_key("a") != S.name_key("b")
