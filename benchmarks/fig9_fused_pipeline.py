@@ -1,0 +1,224 @@
+"""Fig. 9 (beyond-paper): per-verb vs fused in-situ pipeline.
+
+The paper's loose coupling pays one host dispatch per store verb.  The
+fused pipeline (``store.capture_scan`` on the producer side,
+``store.sample_and_step`` on the consumer side) folds k producer steps +
+ring puts — or a gather + the training microstep — into ONE dispatch.
+This benchmark measures both tiers doing *identical math* on identical
+tables and reports
+
+  * wall-clock steps/s (producer) and epochs/s (consumer), and
+  * store dispatches per step (from ``StoreServer.op_count`` — the
+    structural O(k) vs O(1) claim, counted, not asserted),
+
+and writes the machine-readable result to ``BENCH_fused_pipeline.json``
+for the perf trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import StoreServer, TableSpec
+from repro.core import store as S
+
+from .common import Row
+
+SHAPE = (4, 256)
+CAPACITY = 128
+GATHER = 8
+BATCH = 4
+
+
+def _make_server() -> StoreServer:
+    srv = StoreServer()
+    srv.create_table(TableSpec("field", shape=SHAPE, capacity=CAPACITY,
+                               engine="ring"))
+    return srv
+
+
+def _snap(t):
+    """The stand-in solver step: cheap, so dispatch overhead dominates —
+    exactly the regime the fused pipeline targets."""
+    t = jnp.asarray(t, jnp.float32)
+    return jnp.full(SHAPE, 1.0, jnp.float32) * (1.0 + t)
+
+
+_snap_jit = jax.jit(_snap)
+
+
+def _step_fn(carry, t):
+    return carry, S.make_key(0, t), _snap(t)
+
+
+def _producer_per_verb(srv: StoreServer, steps: int, t0: int) -> None:
+    for t in range(t0, t0 + steps):
+        srv.put("field", S.make_key(0, t), _snap_jit(t))
+    jax.block_until_ready(srv.checkout("field").count)
+
+
+def _producer_fused(srv: StoreServer, spec, steps: int, t0: int) -> None:
+    with srv.capture("field") as txn:
+        txn.state, _ = S.capture_scan(spec, txn.state, _step_fn,
+                                      jnp.zeros(()), steps, 1, t0=t0)
+        txn.puts = steps
+    jax.block_until_ready(srv.checkout("field").count)
+
+
+def _micro(w, batch):
+    g = jax.grad(
+        lambda w: jnp.mean((batch.reshape(batch.shape[0], -1) @ w) ** 2))(w)
+    return w - 1e-3 * g
+
+
+_micro_jit = jax.jit(_micro)
+
+
+def _epoch_fn(w, values):
+    batches = values.reshape(GATHER // BATCH, BATCH, *SHAPE)
+
+    def body(w, b):
+        return _micro(w, b), jnp.zeros(())
+
+    w, _ = jax.lax.scan(body, w, batches)
+    return w, jnp.zeros(())
+
+
+def _consumer_per_verb(srv: StoreServer, w, rng):
+    vals, _, _ = srv.sample("field", rng, GATHER)
+    for i in range(GATHER // BATCH):
+        w = _micro_jit(w, vals[i * BATCH:(i + 1) * BATCH])
+    jax.block_until_ready(w)
+    return w
+
+
+def _consumer_fused(srv: StoreServer, spec, w, rng):
+    with srv.capture("field") as txn:
+        w, _, _ = S.sample_and_step(spec, txn.state, rng, GATHER,
+                                    _epoch_fn, w)
+    jax.block_until_ready(w)
+    return w
+
+
+def _bench(fn, reps: int):
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def run(quick: bool = True, json_path: str | None = None,
+        write_json: bool = True):
+    steps = 64 if quick else 256
+    reps = 5 if quick else 11
+    epochs = 8 if quick else 32
+
+    # ---- producer: k per-verb puts vs one capture_scan -------------------
+    srv_v = _make_server()
+    srv_f = _make_server()
+    spec = srv_f.spec("field")
+    _producer_per_verb(srv_v, steps, 0)                       # warm/compile
+    _producer_fused(srv_f, spec, steps, 0)
+
+    # both tiers advance through the same t-stream so the tables stay
+    # identical for the consumer phase
+    clock_v = {"t": steps}
+    clock_f = {"t": steps}
+
+    def verb_run():
+        _producer_per_verb(srv_v, steps, clock_v["t"])
+        clock_v["t"] += steps
+
+    def fused_run():
+        _producer_fused(srv_f, spec, steps, clock_f["t"])
+        clock_f["t"] += steps
+
+    ops0 = srv_v.op_count
+    t_verb = _bench(verb_run, reps)
+    d_verb = (srv_v.op_count - ops0) / (reps * steps)
+
+    ops0 = srv_f.op_count
+    t_fused = _bench(fused_run, reps)
+    d_fused = (srv_f.op_count - ops0) / (reps * steps)
+
+    # ---- consumer: per-verb epoch vs fused sample_and_step ---------------
+    w0 = jnp.zeros((SHAPE[0] * SHAPE[1], 8), jnp.float32)
+    rng = jax.random.key(0)
+    _consumer_per_verb(srv_v, w0, rng)                        # warm/compile
+    _consumer_fused(srv_f, spec, w0, rng)
+
+    ops0 = srv_v.op_count
+    t0 = time.perf_counter()
+    w = w0
+    for e in range(epochs):
+        w = _consumer_per_verb(srv_v, w, jax.random.fold_in(rng, e))
+    t_epoch_verb = (time.perf_counter() - t0) / epochs
+    d_epoch_verb = (srv_v.op_count - ops0) / epochs
+
+    ops0 = srv_f.op_count
+    t0 = time.perf_counter()
+    w = w0
+    for e in range(epochs):
+        w = _consumer_fused(srv_f, spec, w, jax.random.fold_in(rng, e))
+    t_epoch_fused = (time.perf_counter() - t0) / epochs
+    d_epoch_fused = (srv_f.op_count - ops0) / epochs
+
+    result = {
+        "bench": "fused_pipeline",
+        "steps_per_chunk": steps,
+        "producer": {
+            "per_verb": {"steps_per_s": steps / t_verb,
+                         "dispatches_per_step": d_verb},
+            "fused": {"steps_per_s": steps / t_fused,
+                      "dispatches_per_step": d_fused},
+            "speedup": t_verb / t_fused,
+        },
+        "consumer": {
+            # store_dispatches: measured via op_count.  host_dispatches:
+            # store + SGD microsteps (the per-verb loop dispatches each
+            # mini-batch separately; the fused epoch is one dispatch).
+            "per_verb": {"epochs_per_s": 1.0 / t_epoch_verb,
+                         "store_dispatches_per_epoch": d_epoch_verb,
+                         "host_dispatches_per_epoch":
+                             d_epoch_verb + GATHER // BATCH},
+            "fused": {"epochs_per_s": 1.0 / t_epoch_fused,
+                      "store_dispatches_per_epoch": d_epoch_fused,
+                      "host_dispatches_per_epoch": d_epoch_fused},
+            "speedup": t_epoch_verb / t_epoch_fused,
+        },
+    }
+    if write_json:
+        path = Path(json_path) if json_path \
+            else Path("BENCH_fused_pipeline.json")
+        path.write_text(json.dumps(result, indent=2) + "\n")
+
+    prod, cons = result["producer"], result["consumer"]
+    return [
+        Row("fig9/producer_per_verb", t_verb / steps * 1e6,
+            f"steps_per_s={prod['per_verb']['steps_per_s']:.0f};"
+            f"dispatches_per_step={d_verb:.3f}"),
+        Row("fig9/producer_fused", t_fused / steps * 1e6,
+            f"steps_per_s={prod['fused']['steps_per_s']:.0f};"
+            f"dispatches_per_step={d_fused:.4f}"),
+        Row("fig9/producer_speedup", prod["speedup"] * 1e6,
+            f"x={prod['speedup']:.2f}"),
+        Row("fig9/consumer_per_verb_epoch", t_epoch_verb * 1e6,
+            f"host_dispatches_per_epoch={d_epoch_verb + GATHER // BATCH:.2f}"),
+        Row("fig9/consumer_fused_epoch", t_epoch_fused * 1e6,
+            f"host_dispatches_per_epoch={d_epoch_fused:.2f}"),
+        Row("fig9/consumer_speedup", cons["speedup"] * 1e6,
+            f"x={cons['speedup']:.2f}"),
+    ]
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=False))

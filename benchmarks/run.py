@@ -1,19 +1,28 @@
-"""Benchmark entry point: ``python -m benchmarks.run [--full]``.
+"""Benchmark entry point: ``python -m benchmarks.run [--full] [--json]``.
 
 One function per paper table/figure; prints ``name,us_per_call,derived``
 CSV.  Default is the quick profile (CI-friendly); ``--full`` runs the
-paper-fidelity iteration counts.
+paper-fidelity iteration counts.  ``--json`` additionally writes one
+``BENCH_<name>.json`` per bench (rows + wall time) so the perf trajectory
+is machine-readable.
 """
 
 import argparse
+import json
 import sys
 import time
 import traceback
+from dataclasses import asdict
+from pathlib import Path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_<name>.json per bench")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_*.json files")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (fig3,...,table12,roofline)")
     args = ap.parse_args()
@@ -21,8 +30,8 @@ def main() -> None:
 
     from . import (fig3_store_budget, fig4_size_sweep, fig5_weak_scaling,
                    fig6_strong_scaling, fig7_inference_components,
-                   fig8_inference_scaling, roofline_table,
-                   table12_insitu_overhead)
+                   fig8_inference_scaling, fig9_fused_pipeline,
+                   roofline_table, table12_insitu_overhead)
     benches = {
         "fig3": fig3_store_budget.run,
         "fig4": fig4_size_sweep.run,
@@ -30,22 +39,45 @@ def main() -> None:
         "fig6": fig6_strong_scaling.run,
         "fig7": fig7_inference_components.run,
         "fig8": fig8_inference_scaling.run,
+        "fig9": fig9_fused_pipeline.run,
         "table12": table12_insitu_overhead.run,
         "roofline": roofline_table.run,
     }
     if args.only:
         names = args.only.split(",")
+        unknown = [n for n in names if n not in benches]
+        if unknown:
+            ap.error(f"unknown bench name(s): {', '.join(unknown)} "
+                     f"(choose from {', '.join(benches)})")
         benches = {k: v for k, v in benches.items() if k in names}
+    if args.json:
+        Path(args.json_dir).mkdir(parents=True, exist_ok=True)
+    if "fig9" in benches:
+        # fig9's structured result file is opt-in here like every other
+        # BENCH_*.json, and lands in --json-dir, not the invoker's CWD.
+        # (Standalone `python -m benchmarks.fig9_fused_pipeline` still
+        # writes it by default.)
+        benches["fig9"] = (lambda quick: fig9_fused_pipeline.run(
+            quick=quick, write_json=args.json,
+            json_path=str(Path(args.json_dir)
+                          / "BENCH_fused_pipeline.json")))
 
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in benches.items():
         t0 = time.perf_counter()
         try:
+            rows = []
             for row in fn(quick=quick):
+                rows.append(row)
                 print(row.csv(), flush=True)
-            print(f"_meta/{name}/wall_s,{(time.perf_counter()-t0)*1e6:.0f},",
-                  flush=True)
+            wall_s = time.perf_counter() - t0
+            print(f"_meta/{name}/wall_s,{wall_s*1e6:.0f},", flush=True)
+            if args.json:
+                out = Path(args.json_dir) / f"BENCH_{name}.json"
+                out.write_text(json.dumps(
+                    {"bench": name, "quick": quick, "wall_s": wall_s,
+                     "rows": [asdict(r) for r in rows]}, indent=2) + "\n")
         except Exception:
             failures += 1
             print(f"_meta/{name}/ERROR,0,", flush=True)

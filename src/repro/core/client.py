@@ -21,6 +21,7 @@ Every verb is timed into the paper's component buckets:
 
 from __future__ import annotations
 
+import contextlib
 import time
 from typing import Any, Callable, Sequence
 
@@ -62,8 +63,14 @@ class Client:
         self.server.delete(table, S.name_key(name))
 
     def poll_tensor(self, name: str, table: str = "default",
-                    timeout: float = 10.0, interval: float = 0.005) -> bool:
-        """Poll until the key exists (SmartRedis ``poll_tensor``)."""
+                    timeout: float = 10.0, interval: float = 0.001,
+                    max_interval: float = 0.05) -> bool:
+        """Poll until the key exists (SmartRedis ``poll_tensor``).
+
+        Each probe dispatches one device op, so the spin uses exponential
+        backoff (``interval`` doubling up to ``max_interval``) instead of a
+        fixed-rate busy loop hammering the dispatch queue.
+        """
         key = S.name_key(name)
         deadline = time.perf_counter() + timeout
         with self.timers.time("metadata"):
@@ -73,6 +80,7 @@ class Client:
                 if time.perf_counter() >= deadline:
                     return False
                 time.sleep(interval)
+                interval = min(interval * 2.0, max_interval)
 
     # -- rank/step-keyed streaming (the simulation path) ------------------------
 
@@ -95,6 +103,22 @@ class Client:
         keys = S.make_key(ranks, jnp.full((n,), step))
         with self.timers.time("send", payload=values):
             self.server.put_many(table, keys, values)
+
+    # -- fused-capture fast path --------------------------------------------------
+
+    @contextlib.contextmanager
+    def capture(self, table: str = "default"):
+        """Fused in-situ capture transaction (beyond-paper fast path).
+
+        Yields the server's :class:`~repro.core.server.CaptureTxn` under
+        the table's lock: dispatch ONE fused op (``store.capture_scan`` /
+        ``store.sample_and_step`` / a fused epoch) against ``txn.state``,
+        assign the result back, set ``txn.puts`` — then block on outputs
+        after the ``with`` exits.  Replaces O(steps) per-verb calls with
+        one dispatch and one lock round-trip.
+        """
+        with self.server.capture(table) as txn:
+            yield txn
 
     # -- consumer-side loaders ---------------------------------------------------
 

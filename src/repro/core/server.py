@@ -8,13 +8,36 @@ returns as soon as the update is enqueued on the device stream, so the
 producer (like the paper's PHASTA ranks) is blocked only for the enqueue,
 not for the ML consumer.
 
-For *fused in-situ capture* (beyond-paper fast path) a producer step can own
-a table's state directly inside its jit: ``checkout()`` hands the state out,
-``commit()`` swaps the updated state back in.
+Concurrency model (fused-pipeline rework):
+
+* **Per-table locks.** Every table owns its own ``RLock``; a producer
+  streaming into one table never serializes against a consumer reading a
+  different table.  The server-wide lock only guards the registries
+  (table/model/metadata maps), taken briefly and never while dispatching
+  table ops.
+* **Lock-free cached watermark.** A host-side monotonic counter per table
+  is bumped at *dispatch* time (put +1, put_many +n, commit +puts), so
+  ``watermark()`` / ``wait_watermark()`` read a Python int instead of
+  dispatching a device reduction per poll — the consumer's 5 ms spin loop
+  becomes a free memory read with exponential backoff.
+* **Capture transactions.** ``capture(table)`` hands the caller the live
+  ``TableState`` under the table lock; the caller dispatches one *fused*
+  op (``store.capture_scan`` / a fused training epoch) and commits the
+  updated state + put count.  One lock round-trip and one dispatch replace
+  O(steps) verb calls.
+
+Donation safety: ``put``/``put_many``/fused captures donate the previous
+table state, which marks its buffers deleted *at dispatch time*.  Every
+read of the same table therefore dispatches while holding that table's
+lock — the lock orders dispatches, and the device stream executes them in
+dispatch order, so a read enqueued before a donating put always sees live
+buffers.  (Blocking host-side ``.item()``/print on results happens outside
+the lock; returned arrays are fresh outputs, not aliases.)
 """
 
 from __future__ import annotations
 
+import contextlib
 import threading
 import time
 from typing import Any, Callable, Iterable
@@ -26,7 +49,26 @@ from . import store as S
 from .deployment import Colocated, Deployment
 from .telemetry import Timers
 
-__all__ = ["StoreServer"]
+__all__ = ["StoreServer", "CaptureTxn"]
+
+
+class CaptureTxn:
+    """One fused-capture transaction on a single table.
+
+    ``state`` holds the checked-out ``TableState``; assign the updated
+    state back to commit.  Set ``puts`` to the number of put operations
+    the fused dispatch performed so the cached watermark stays exact
+    (``store.capture_emit_count`` computes it for ``capture_scan``).
+    Read-only captures (consumers) simply leave ``state`` untouched.
+    """
+
+    __slots__ = ("spec", "state", "puts", "_orig")
+
+    def __init__(self, spec: S.TableSpec, state: S.TableState):
+        self.spec = spec
+        self.state = state
+        self.puts = 0
+        self._orig = state
 
 
 class StoreServer:
@@ -36,12 +78,20 @@ class StoreServer:
                  timers: Timers | None = None):
         self.deployment = deployment
         self.timers = timers or Timers()
-        self._lock = threading.RLock()
+        self._lock = threading.RLock()           # registries + metadata only
+        self._table_locks: dict[str, threading.RLock] = {}
         self._specs: dict[str, S.TableSpec] = {}
         self._state: dict[str, S.TableState] = {}
+        self._counts: dict[str, int] = {}        # cached watermarks
         self._models: dict[str, tuple[Callable, Any]] = {}
         self._meta: dict[str, Any] = {}          # tiny host-side metadata KV
         self._meta_event = threading.Condition(self._lock)
+        self._ops_lock = threading.Lock()
+        self.op_count = 0                        # dispatched store ops
+
+    def _bump_ops(self, n: int = 1) -> None:
+        with self._ops_lock:
+            self.op_count += n
 
     # -- table management ---------------------------------------------------
 
@@ -53,6 +103,8 @@ class StoreServer:
                 raise ValueError(f"table {spec.name!r} already exists")
             self._specs[spec.name] = spec
             self._state[spec.name] = S.init_table(spec, slab_sharding)
+            self._table_locks[spec.name] = threading.RLock()
+            self._counts[spec.name] = 0
         return spec
 
     def spec(self, table: str) -> S.TableSpec:
@@ -64,15 +116,51 @@ class StoreServer:
     def hbm_bytes(self) -> int:
         return sum(S.table_bytes(sp) for sp in self._specs.values())
 
-    # -- fused-capture escape hatch ------------------------------------------
+    def table_lock(self, table: str) -> threading.RLock:
+        """The per-table lock (dispatch ordering for fused captures)."""
+        return self._table_locks[table]
+
+    # -- fused-capture fast path ---------------------------------------------
 
     def checkout(self, table: str) -> S.TableState:
-        with self._lock:
+        with self._table_locks[table]:
             return self._state[table]
 
-    def commit(self, table: str, new_state: S.TableState) -> None:
-        with self._lock:
+    def commit(self, table: str, new_state: S.TableState,
+               puts: int = 0) -> None:
+        """Swap in a state produced by a fused dispatch.
+
+        ``puts``: how many put ops the dispatch performed — keeps the
+        cached watermark exact without a device read.
+        """
+        with self._table_locks[table]:
             self._state[table] = new_state
+            self._counts[table] += puts
+        self._bump_ops()
+
+    @contextlib.contextmanager
+    def capture(self, table: str):
+        """Checkout → fused dispatch → commit, atomically under the table
+        lock.  Yields a :class:`CaptureTxn`; the body must only *dispatch*
+        (async) device work — block on results after the ``with`` exits.
+
+        An assigned ``txn.state`` commits even if the body then raises:
+        fused ops donate the checked-out state at dispatch time, so
+        rolling back to it would leave the table pointing at deleted
+        buffers.  A body that raises *without* assigning leaves the table
+        untouched.  (Assign the fused op's result to ``txn.state`` in the
+        same statement as the dispatch.)
+        """
+        with self._table_locks[table]:
+            txn = CaptureTxn(self._specs[table], self._state[table])
+            try:
+                yield txn
+            finally:
+                if txn.state is not txn._orig:
+                    self._state[table] = txn.state
+                    self._counts[table] += txn.puts
+        # One capture == one fused dispatch (read-only captures included).
+        self._bump_ops()
 
     # -- verbs ---------------------------------------------------------------
 
@@ -84,80 +172,119 @@ class StoreServer:
         spec = self._specs[table]
         value = self._staged(value)
         key = jax.numpy.asarray(key, S.KEY_DTYPE)
-        with self._lock:
+        with self._table_locks[table]:
             self._state[table] = S.put(spec, self._state[table], key, value)
+            self._counts[table] += 1
+        self._bump_ops()
 
     def put_many(self, table: str, keys, values) -> None:
         spec = self._specs[table]
         values = self._staged(values)
-        with self._lock:
-            self._state[table] = S.put_many(spec, self._state[table], keys, values)
+        keys = jax.numpy.asarray(keys, S.KEY_DTYPE)
+        with self._table_locks[table]:
+            self._state[table] = S.put_many(spec, self._state[table], keys,
+                                            values)
+            self._counts[table] += int(keys.shape[0])
+        self._bump_ops()
 
-    # NOTE on donation safety: ``put``/``put_many`` donate the previous
-    # table state, which marks its buffers deleted *at dispatch time*.
-    # Every read therefore dispatches its op while holding the lock — the
-    # lock orders dispatches, and the device stream executes them in
-    # dispatch order, so a read enqueued before a donating put always sees
-    # live buffers.  (Blocking host-side .item()/print on the result happens
-    # outside the lock; the returned arrays are fresh outputs, not aliases.)
+    def put_stream(self, table: str, keys, values) -> None:
+        """One dispatch for a whole trajectory of sends (fused pipeline)."""
+        spec = self._specs[table]
+        values = self._staged(values)
+        keys = jax.numpy.asarray(keys, S.KEY_DTYPE)
+        n = int(keys.shape[0]) * (int(keys.shape[1]) if keys.ndim == 2 else 1)
+        with self._table_locks[table]:
+            self._state[table] = S.put_stream(spec, self._state[table], keys,
+                                              values)
+            self._counts[table] += n
+        self._bump_ops()
 
     def get(self, table: str, key):
         spec = self._specs[table]
         key = jax.numpy.asarray(key, S.KEY_DTYPE)
-        with self._lock:
-            return S.get(spec, self._state[table], key)
+        with self._table_locks[table]:
+            out = S.get(spec, self._state[table], key)
+        self._bump_ops()
+        return out
 
     def get_many(self, table: str, keys):
         spec = self._specs[table]
-        with self._lock:
-            return S.get_many(spec, self._state[table], keys)
+        with self._table_locks[table]:
+            out = S.get_many(spec, self._state[table], keys)
+        self._bump_ops()
+        return out
 
     def sample(self, table: str, rng, n: int):
         spec = self._specs[table]
-        with self._lock:
-            return S.sample(spec, self._state[table], rng, n)
+        with self._table_locks[table]:
+            out = S.sample(spec, self._state[table], rng, n)
+        self._bump_ops()
+        return out
 
     def latest(self, table: str, n: int):
         spec = self._specs[table]
-        with self._lock:
-            return S.latest(spec, self._state[table], n)
+        with self._table_locks[table]:
+            out = S.latest(spec, self._state[table], n)
+        self._bump_ops()
+        return out
 
     def poll(self, table: str, key) -> bool:
         spec = self._specs[table]
         key = jax.numpy.asarray(key, S.KEY_DTYPE)
-        with self._lock:
-            return bool(S.poll(spec, self._state[table], key))
+        with self._table_locks[table]:
+            hit = S.poll(spec, self._state[table], key)
+        self._bump_ops()
+        return bool(hit)
 
     def delete(self, table: str, key) -> None:
         spec = self._specs[table]
         key = jax.numpy.asarray(key, S.KEY_DTYPE)
-        with self._lock:
+        with self._table_locks[table]:
             self._state[table] = S.delete(spec, self._state[table], key)
+        self._bump_ops()
 
     def watermark(self, table: str) -> int:
-        """Total writes so far — the consumer's freshness signal."""
-        with self._lock:
+        """Total writes so far — the consumer's freshness signal.
+
+        Lock-free: reads the host-side cached counter (updated at dispatch
+        time), so polling never dispatches a device op and never contends
+        with the producer.
+        """
+        return self._counts[table]
+
+    def watermark_device(self, table: str) -> int:
+        """Ground-truth watermark from device state (blocking read; tests
+        assert it always equals the cached ``watermark``)."""
+        with self._table_locks[table]:
             count = jax.numpy.asarray(self._state[table].count).copy()
         return int(count)
 
     def valid_count(self, table: str) -> int:
         spec = self._specs[table]
-        with self._lock:
+        with self._table_locks[table]:
             n = S.valid_count(spec, self._state[table])
+        self._bump_ops()
         return int(n)
 
     def wait_watermark(self, table: str, minimum: int, timeout: float = 60.0,
-                       interval: float = 0.005) -> bool:
+                       interval: float = 0.001,
+                       max_interval: float = 0.05) -> bool:
         """Block until ``watermark >= minimum`` (paper: ML ranks poll the DB
         while waiting for the first snapshot).  Returns False on timeout —
         the caller decides whether to proceed with stale data (straggler
-        mitigation) or abort."""
+        mitigation) or abort.
+
+        Polls the lock-free cached watermark with exponential backoff
+        (``interval`` doubling up to ``max_interval``) — zero device
+        dispatches and zero producer contention while spinning.
+        """
         deadline = time.perf_counter() + timeout
         while time.perf_counter() < deadline:
-            if self.watermark(table) >= minimum:
+            if self._counts[table] >= minimum:
                 return True
             time.sleep(interval)
-        return self.watermark(table) >= minimum
+            interval = min(interval * 2.0, max_interval)
+        return self._counts[table] >= minimum
 
     # -- metadata (host KV, paper's "useful metadata") ------------------------
 
@@ -207,13 +334,20 @@ class StoreServer:
     def snapshot(self) -> dict[str, S.TableState]:
         """Deep snapshot of all table state.  Copies the buffers: later
         ``put``s donate (invalidate) the live state, so a zero-copy
-        snapshot would dangle."""
+        snapshot would dangle.  Tables are snapshotted one at a time under
+        their own locks (per-table consistency)."""
+        snap = {}
         with self._lock:
-            return {name: jax.tree.map(jax.numpy.copy, st)
-                    for name, st in self._state.items()}
+            names = list(self._specs)
+        for name in names:
+            with self._table_locks[name]:
+                snap[name] = jax.tree.map(jax.numpy.copy, self._state[name])
+        return snap
 
     def restore(self, snap: dict[str, S.TableState]) -> None:
-        with self._lock:
-            for name, st in snap.items():
-                if name in self._specs:
+        for name, st in snap.items():
+            if name in self._specs:
+                with self._table_locks[name]:
                     self._state[name] = st
+                    # Re-derive the cached watermark from device truth.
+                    self._counts[name] = int(jax.numpy.asarray(st.count))

@@ -32,6 +32,28 @@ Versions are strictly increasing per-table write stamps (``count``+1), giving
 consumers a total order: ``latest``/``sample`` implement the paper's
 data-loader that "gathers tensors at random" or takes the freshest ones, and
 the scalar ``count`` doubles as the watermark used for epoch gating.
+
+Fused in-situ pipeline (the hot path)
+-------------------------------------
+
+Two access tiers share these ops:
+
+* **Per-verb** (paper-fidelity): every client verb is one host dispatch —
+  flexible, measurable component-by-component, but the driver pays one
+  dispatch plus one lock round-trip per verb.  Use it for control-plane
+  traffic, irregular access, and paper-comparison benchmarks.
+* **Fused** (beyond-paper): ``capture_scan`` folds ``k`` producer steps and
+  their ring puts into a single ``jax.lax.scan`` dispatch; ``put_stream``
+  batches a whole trajectory of sends into one ``put_many``;
+  ``sample_and_step`` runs the consumer's gather *and* its training
+  microstep inside one jit.  One epoch of ``ml.trainer.insitu_train``
+  costs O(1) dispatches instead of O(gather·batches).  Use it whenever the
+  producer/consumer step is itself jit-traceable (the common case).
+
+The gather-side verbs (``get_many`` / ``sample``) route through the Pallas
+package ``repro.kernels.store`` (probe / sample / gather kernels on TPU,
+pure-jnp oracle elsewhere); neither tier materializes an ``[n, capacity]``
+match matrix.
 """
 
 from __future__ import annotations
@@ -39,11 +61,13 @@ from __future__ import annotations
 import zlib
 from dataclasses import dataclass, replace
 from functools import partial
-from typing import Any, NamedTuple, Sequence
+from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..kernels.store import ops as _kops
 
 __all__ = [
     "TableSpec",
@@ -53,6 +77,7 @@ __all__ = [
     "init_table",
     "put",
     "put_many",
+    "put_stream",
     "get",
     "get_many",
     "sample",
@@ -61,6 +86,9 @@ __all__ = [
     "delete",
     "valid_count",
     "table_bytes",
+    "capture_scan",
+    "capture_emit_count",
+    "sample_and_step",
 ]
 
 KEY_DTYPE = jnp.uint32
@@ -183,11 +211,12 @@ def _slot_for_put(spec: TableSpec, state: TableState, key) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Core ops (all pure, jit-compatible; spec is static)
+# Core ops.  Each op has a raw ``*_impl`` (traceable inside larger fused
+# computations — capture_scan, the trainer's fused epoch) and a jitted
+# public wrapper (the per-verb dispatch path).  ``spec`` is always static.
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnums=0, donate_argnums=1)
-def put(spec: TableSpec, state: TableState, key, value) -> TableState:
+def put_impl(spec: TableSpec, state: TableState, key, value) -> TableState:
     """Insert/overwrite one element.  O(1) slab dynamic-update-slice."""
     value = jnp.asarray(value, dtype=spec.dtype)
     if value.shape != spec.shape:
@@ -207,14 +236,22 @@ def put(spec: TableSpec, state: TableState, key, value) -> TableState:
     )
 
 
-@partial(jax.jit, static_argnums=0, donate_argnums=1)
-def put_many(spec: TableSpec, state: TableState, keys, values) -> TableState:
+put = partial(jax.jit, static_argnums=0, donate_argnums=1)(put_impl)
+
+
+def put_many_impl(spec: TableSpec, state: TableState, keys, values) -> TableState:
     """Vectorized put of n elements (one producer step sending all ranks).
 
     ``ring``: consecutive slots from the write pointer.
-    ``hash``: slot = key mod capacity — caller must ensure keys are distinct
-    mod capacity within one batch (the Client's rank/step packing guarantees
-    this for rank-partitioned sends).
+    ``hash``: slot = key mod capacity (the batched path probes the homed
+    slot only — unlike single ``put`` it does not relocate onto an existing
+    slot holding the same key elsewhere).
+
+    Slot collisions within one batch (hash keys equal mod capacity, or a
+    ring batch longer than ``capacity``) resolve deterministically
+    **last-writer-wins**, exactly matching a sequence of single ``put``s;
+    every element still bumps ``count`` (a collision is an overwrite, not a
+    dropped write).
     """
     keys = jnp.asarray(keys, KEY_DTYPE)
     values = jnp.asarray(values, dtype=spec.dtype)
@@ -231,59 +268,121 @@ def put_many(spec: TableSpec, state: TableState, keys, values) -> TableState:
         slots = (keys % jnp.uint32(spec.capacity)).astype(jnp.int32)
         new_ptr = state.ptr
     stamps = state.count + 1 + jnp.arange(n, dtype=jnp.int32)
+    if n > 1:
+        # Deterministic last-writer-wins: redirect all but the last write to
+        # each slot out of bounds (mode="drop").
+        i = jnp.arange(n, dtype=jnp.int32)
+        if spec.engine == "ring":
+            # Ring slots are consecutive mod capacity: element i collides
+            # only with i + capacity, i + 2·capacity, …  → O(n).
+            is_last = i + spec.capacity >= n
+        else:
+            # Hash batches are per-step rank sends (small n); the [n, n]
+            # mask is over the *batch*, never over capacity.
+            later_dup = (slots[None, :] == slots[:, None]) \
+                & (i[None, :] > i[:, None])
+            is_last = ~jnp.any(later_dup, axis=1)
+        slots = jnp.where(is_last, slots, spec.capacity)
     return TableState(
-        slab=state.slab.at[slots].set(values),
-        keys=state.keys.at[slots].set(keys),
-        version=state.version.at[slots].set(stamps),
+        slab=state.slab.at[slots].set(values, mode="drop"),
+        keys=state.keys.at[slots].set(keys, mode="drop"),
+        version=state.version.at[slots].set(stamps, mode="drop"),
         ptr=new_ptr,
         count=state.count + n,
     )
 
 
+put_many = partial(jax.jit, static_argnums=0, donate_argnums=1)(put_many_impl)
+
+
+def put_stream_impl(spec: TableSpec, state: TableState, keys, values
+                    ) -> TableState:
+    """Fold a whole trajectory of sends into one dispatch.
+
+    ``keys [T]`` / ``values [T, *shape]`` — T single-element steps — or
+    ``keys [T, R]`` / ``values [T, R, *shape]`` — T steps of R ranks each.
+    Equivalent to the corresponding sequence of ``put``/``put_many`` calls
+    (time-major order; last-writer-wins on slot collisions), in a single
+    device dispatch instead of T.
+    """
+    keys = jnp.asarray(keys, KEY_DTYPE)
+    values = jnp.asarray(values, dtype=spec.dtype)
+    if keys.ndim == 2:
+        t, r = keys.shape
+        keys = keys.reshape(t * r)
+        values = values.reshape(t * r, *values.shape[2:])
+    return put_many_impl(spec, state, keys, values)
+
+
+put_stream = partial(jax.jit, static_argnums=0, donate_argnums=1)(
+    put_stream_impl)
+
+
 @partial(jax.jit, static_argnums=0)
 def get(spec: TableSpec, state: TableState, key):
-    """Fetch by key.  Returns ``(value, found)``; value is zeros if absent."""
-    match = (state.keys == jnp.asarray(key, KEY_DTYPE)) & (state.version > 0)
-    found = jnp.any(match)
+    """Fetch by key.  Returns ``(value, found)``; value is zeros if absent.
+
+    ``EMPTY_KEY`` is reserved (never found) — same contract as the
+    batched probe path.
+    """
+    key = jnp.asarray(key, KEY_DTYPE)
+    match = (state.keys == key) & (state.version > 0)
+    found = jnp.any(match) & (key != EMPTY_KEY)
     idx = jnp.argmax(match).astype(jnp.int32)
     value = jax.lax.dynamic_index_in_dim(state.slab, idx, 0, keepdims=False)
     value = jnp.where(found, value, jnp.zeros_like(value))
     return value, found
 
 
-@partial(jax.jit, static_argnums=0)
-def get_many(spec: TableSpec, state: TableState, keys):
-    """Vectorized get.  Returns ``(values [n,*shape], founds [n])``."""
+def get_many_impl(spec: TableSpec, state: TableState, keys,
+                  mode: str | None = None):
+    """Vectorized get.  Returns ``(values [n,*shape], founds [n])``.
+
+    Routed through the fused probe+gather kernels (``repro.kernels.store``):
+    a blocked pass over slot metadata resolves each key to its first valid
+    slot, then a row gather fetches the slab — no ``[n, capacity]`` match
+    matrix is ever materialized.  Duplicate keys resolve to the lowest slot
+    (the historical behavior).
+    """
     keys = jnp.asarray(keys, KEY_DTYPE)
-    match = (state.keys[None, :] == keys[:, None]) & (state.version > 0)[None, :]
-    founds = jnp.any(match, axis=1)
-    idx = jnp.argmax(match, axis=1)
-    values = state.slab[idx]
+    idx, founds = _kops.probe_slots(state.keys, state.version, keys, mode)
+    safe = jnp.minimum(idx, spec.capacity - 1)
+    values = _kops.gather_rows(state.slab, safe, mode)
     values = jnp.where(
         founds.reshape((-1,) + (1,) * len(spec.shape)), values, 0
     ).astype(spec.dtype)
     return values, founds
 
 
-@partial(jax.jit, static_argnums=(0, 3))
-def sample(spec: TableSpec, state: TableState, rng, n: int):
+get_many = partial(jax.jit, static_argnums=(0, 3))(get_many_impl)
+
+
+def sample_impl(spec: TableSpec, state: TableState, rng, n: int,
+                mode: str | None = None):
     """Uniformly sample ``n`` valid elements (with replacement).
 
     This is the in-situ data loader: the paper's ML ranks "retrieve multiple
     tensors from the database at random" before each epoch.
     Returns ``(values [n,*shape], keys [n], ok)`` where ``ok`` is False if
     the table is empty (values are zeros then).
+
+    A single pass over slot metadata (cumulative valid count + blocked
+    rank-to-slot search in ``repro.kernels.store``) replaces the former
+    ``-inf``-logits ``categorical``, which materialized an
+    ``[n, capacity]`` Gumbel matrix.
     """
-    valid = state.version > 0
-    nvalid = jnp.sum(valid)
+    nvalid = jnp.sum((state.version > 0).astype(jnp.int32))
     ok = nvalid > 0
-    # Uniform over valid slots; empty table falls back to slot 0 + ok=False.
-    logits = jnp.where(valid, 0.0, -jnp.inf)
-    logits = jnp.where(ok, logits, jnp.zeros_like(logits))
-    slots = jax.random.categorical(rng, logits, shape=(n,))
-    values = jnp.where(ok, state.slab[slots],
+    ranks = jax.random.randint(rng, (n,), 0, jnp.maximum(nvalid, 1))
+    slots = _kops.sample_slots(state.version, ranks, mode)
+    slots = jnp.minimum(slots, spec.capacity - 1)
+    values = _kops.gather_rows(state.slab, slots, mode)
+    values = jnp.where(ok, values,
                        jnp.zeros((n, *spec.shape), spec.dtype))
-    return values, state.keys[slots], ok
+    return values.astype(spec.dtype), state.keys[slots], ok
+
+
+sample = partial(jax.jit, static_argnums=(0, 3, 4))(sample_impl)
 
 
 @partial(jax.jit, static_argnums=(0, 2))
@@ -299,9 +398,11 @@ def latest(spec: TableSpec, state: TableState, n: int):
 
 @partial(jax.jit, static_argnums=0)
 def poll(spec: TableSpec, state: TableState, key) -> jax.Array:
-    """Does ``key`` exist?  (SmartRedis ``poll_tensor`` single check.)"""
-    return jnp.any((state.keys == jnp.asarray(key, KEY_DTYPE))
-                   & (state.version > 0))
+    """Does ``key`` exist?  (SmartRedis ``poll_tensor`` single check.)
+    ``EMPTY_KEY`` is reserved — never reported present."""
+    key = jnp.asarray(key, KEY_DTYPE)
+    return jnp.any((state.keys == key) & (state.version > 0)) \
+        & (key != EMPTY_KEY)
 
 
 @partial(jax.jit, static_argnums=0, donate_argnums=1)
@@ -317,6 +418,67 @@ def delete(spec: TableSpec, state: TableState, key) -> TableState:
 @partial(jax.jit, static_argnums=0)
 def valid_count(spec: TableSpec, state: TableState) -> jax.Array:
     return jnp.sum(state.version > 0)
+
+
+# ---------------------------------------------------------------------------
+# Fused producer/consumer steps (the in-situ capture fast path)
+# ---------------------------------------------------------------------------
+
+def capture_scan_impl(spec: TableSpec, state: TableState,
+                      step_fn: Callable, carry, length: int,
+                      emit_every: int = 1, t0=0):
+    """Fold ``length`` producer steps and their puts into ONE dispatch.
+
+    ``step_fn(carry, t) -> (carry, key, value)`` is the producer's
+    jit-traceable step (solver advance + snapshot).  Steps where
+    ``t % emit_every == 0`` put their value into the table; ``t`` runs over
+    ``t0 .. t0+length-1`` (``t0`` may be a traced array, so chunked drivers
+    reuse one compiled executable across chunks).
+
+    Returns ``(state, carry)``.  The number of puts is static — use
+    ``capture_emit_count`` to bump the server's cached watermark on commit.
+    """
+    def body(sc, t):
+        st, c = sc
+        c, key, value = step_fn(c, t)
+        st = jax.lax.cond(
+            t % emit_every == 0,
+            lambda s: put_impl(spec, s, key, value),
+            lambda s: s,
+            st,
+        )
+        return (st, c), None
+
+    ts = jnp.asarray(t0, jnp.int32) + jnp.arange(length, dtype=jnp.int32)
+    (state, carry), _ = jax.lax.scan(body, (state, carry), ts)
+    return state, carry
+
+
+capture_scan = partial(jax.jit, static_argnums=(0, 2, 4, 5),
+                       donate_argnums=1)(capture_scan_impl)
+
+
+def capture_emit_count(length: int, emit_every: int = 1, t0: int = 0) -> int:
+    """Host-side count of puts a ``capture_scan`` call will perform."""
+    return sum(1 for t in range(t0, t0 + length) if t % emit_every == 0)
+
+
+def sample_and_step_impl(spec: TableSpec, state: TableState, rng, n: int,
+                         step_fn: Callable, carry, mode: str | None = None):
+    """Fused consumer step: gather ``n`` random elements AND run the
+    training microstep ``step_fn(carry, values) -> (carry, aux)`` in one
+    dispatch.  Returns ``(carry, aux, ok)``.
+
+    The table state is only read — call under the table's capture/lock so
+    the dispatch is ordered against donating producer puts.
+    """
+    values, _, ok = sample_impl(spec, state, rng, n, mode)
+    carry, aux = step_fn(carry, values)
+    return carry, aux, ok
+
+
+sample_and_step = partial(jax.jit, static_argnums=(0, 3, 4, 6))(
+    sample_and_step_impl)
 
 
 # Non-jit convenience: functional update preserving NamedTuple type.

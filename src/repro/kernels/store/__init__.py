@@ -1,0 +1,18 @@
+"""Fused TensorStore access kernels (probe / sample / gather).
+
+The hot consumer verbs of the in-situ store — ``get_many`` (key lookup)
+and ``sample`` (uniform gather of valid slots) — are memory-bound passes
+over per-slot metadata followed by a row gather from the slab.  The naive
+jnp formulation materializes an ``[n, capacity]`` match matrix (and the
+``-inf``-logits ``categorical`` does the same internally); these kernels
+replace it with blocked single passes over the slot metadata plus a
+scalar-prefetch row gather, O(n + capacity) memory.
+
+Layout mirrors the other kernel packages (attention / quadconv / ssd):
+``kernel.py`` (Pallas TPU), ``ref.py`` (pure-jnp oracle, also free of
+quadratic intermediates), ``ops.py`` (mode dispatch + padding).
+"""
+
+from .ops import gather_rows, preferred_mode, probe_slots, sample_slots
+
+__all__ = ["probe_slots", "sample_slots", "gather_rows", "preferred_mode"]

@@ -1,0 +1,171 @@
+"""Pallas TPU kernels for fused TensorStore access.
+
+Three kernels, all bounded-memory (no ``[n, capacity]`` materialization):
+
+* ``probe`` — key lookup: one grid step per query block keeps the whole
+  (tiny) slot-metadata vectors in VMEM and folds capacity in ``blk_c``
+  chunks with a running min-slot accumulator; the transient match tile is
+  ``[blk_q, blk_c]``, independent of n and capacity.
+* ``sample`` — valid-slot selection: cumulative valid count over the slot
+  metadata (VPU cumsum), then the same blocked fold counts
+  ``Σ_j [cum_j <= r]`` — a branch-free binary-search equivalent.
+* ``gather`` — the slab row fetch: scalar-prefetched slot indices drive
+  the input ``BlockSpec`` index map, so each grid step DMAs exactly one
+  slab row HBM→VMEM→out (the idiomatic TPU gather; the slab never passes
+  through an intermediate).
+
+On CPU the kernels run under ``interpret=True`` (parity tests); ``ops.py``
+selects the execution mode and handles padding to block multiples.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["probe", "sample", "gather"]
+
+# numpy scalar: inlined as a literal rather than captured as a traced const
+_EMPTY = np.uint32(0xFFFFFFFF)
+
+
+def _pad1(x, mult, fill):
+    pad = (-x.shape[0]) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# probe: first valid slot per query key
+# ---------------------------------------------------------------------------
+
+def _probe_kernel(keys_ref, ver_ref, query_ref, idx_ref, *, blk_c: int,
+                  n_c: int, capacity: int):
+    q = query_ref[0, :]                                   # [blk_q] uint32
+    blk_q = q.shape[0]
+
+    def fold(c, best):
+        ks = keys_ref[0, pl.ds(c * blk_c, blk_c)]          # [blk_c]
+        vs = ver_ref[0, pl.ds(c * blk_c, blk_c)]
+        match = (q[:, None] == ks[None, :]) & (vs > 0)[None, :] \
+            & (q != _EMPTY)[:, None]                       # [blk_q, blk_c]
+        slot = c * blk_c + jax.lax.broadcasted_iota(
+            jnp.int32, (blk_q, blk_c), 1)
+        cand = jnp.where(match, slot, capacity)
+        return jnp.minimum(best, jnp.min(cand, axis=1))
+
+    best = jax.lax.fori_loop(
+        0, n_c, fold, jnp.full((blk_q,), capacity, jnp.int32))
+    idx_ref[0, :] = best
+
+
+@functools.partial(jax.jit, static_argnames=("blk_q", "blk_c", "interpret"))
+def probe(table_keys: jax.Array, version: jax.Array, query: jax.Array,
+          blk_q: int = 128, blk_c: int = 128, interpret: bool = False):
+    """keys u32[C], version i32[C], query u32[n] → idx i32[n] (C = absent)."""
+    capacity = table_keys.shape[0]
+    n = query.shape[0]
+    keys_p = _pad1(table_keys.astype(jnp.uint32), blk_c, _EMPTY)[None, :]
+    ver_p = _pad1(version.astype(jnp.int32), blk_c, 0)[None, :]
+    q_p = _pad1(query.astype(jnp.uint32), blk_q, _EMPTY)
+    g = q_p.shape[0] // blk_q
+    n_c = keys_p.shape[1] // blk_c
+    idx = pl.pallas_call(
+        functools.partial(_probe_kernel, blk_c=blk_c, n_c=n_c,
+                          capacity=capacity),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, keys_p.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((1, ver_p.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((1, blk_q), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, blk_q), jnp.int32),
+        interpret=interpret,
+    )(keys_p, ver_p, q_p.reshape(g, blk_q))
+    return idx.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# sample: slot of the r-th valid entry
+# ---------------------------------------------------------------------------
+
+def _sample_kernel(ver_ref, r_ref, out_ref, *, blk_c: int, n_c: int):
+    valid = (ver_ref[...] > 0).astype(jnp.int32)           # [1, Cp]
+    cum = jnp.cumsum(valid, axis=1)                        # [1, Cp]
+    r = r_ref[0, :]                                        # [blk_q]
+    blk_q = r.shape[0]
+
+    def fold(c, acc):
+        cc = jax.lax.dynamic_slice(cum, (0, c * blk_c), (1, blk_c))[0]
+        tile = (cc[None, :] <= r[:, None]).astype(jnp.int32)
+        return acc + jnp.sum(tile, axis=1)
+
+    out_ref[0, :] = jax.lax.fori_loop(
+        0, n_c, fold, jnp.zeros((blk_q,), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("blk_q", "blk_c", "interpret"))
+def sample(version: jax.Array, ranks: jax.Array, blk_q: int = 128,
+           blk_c: int = 128, interpret: bool = False):
+    """version i32[C], ranks i32[n] → slots i32[n] (r-th valid slot)."""
+    n = ranks.shape[0]
+    ver_p = _pad1(version.astype(jnp.int32), blk_c, 0)[None, :]
+    # Padded rank lanes get -1 → slot 0; they are sliced off below.
+    r_p = _pad1(ranks.astype(jnp.int32), blk_q, -1)
+    g = r_p.shape[0] // blk_q
+    n_c = ver_p.shape[1] // blk_c
+    slots = pl.pallas_call(
+        functools.partial(_sample_kernel, blk_c=blk_c, n_c=n_c),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, ver_p.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((1, blk_q), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, blk_q), jnp.int32),
+        interpret=interpret,
+    )(ver_p, r_p.reshape(g, blk_q))
+    return slots.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# gather: slab row fetch via scalar-prefetched indices
+# ---------------------------------------------------------------------------
+
+def _gather_kernel(idx_ref, slab_ref, out_ref):
+    del idx_ref  # consumed by the BlockSpec index maps
+    out_ref[...] = slab_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather(slab: jax.Array, slots: jax.Array, interpret: bool = False):
+    """slab [C, *elem], slots i32[n] (in-range) → rows [n, *elem]."""
+    capacity = slab.shape[0]
+    elem = slab.shape[1:]
+    n = slots.shape[0]
+    feat = 1
+    for d in elem:
+        feat *= d
+    slab2 = slab.reshape(capacity, max(feat, 1))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, slab2.shape[1]),
+                               lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, slab2.shape[1]),
+                               lambda i, idx_ref: (i, 0)),
+    )
+    rows = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, slab2.shape[1]), slab.dtype),
+        interpret=interpret,
+    )(slots.astype(jnp.int32), slab2)
+    return rows.reshape((n, *elem))

@@ -1,0 +1,61 @@
+"""Public entry points for the store access kernels.
+
+Mode dispatch follows the repo-wide idiom (attention / quadconv / ssd):
+
+* ``"pallas"``    — compiled TPU kernels (default on TPU backends);
+* ``"interpret"`` — the same kernels under the Pallas interpreter
+  (CPU parity tests exercise the real BlockSpec machinery);
+* ``"ref"``       — the pure-jnp oracle (default off-TPU; XLA's native
+  sort/gather are the right tool there).
+
+All three produce bit-identical results: the parity tests in
+``tests/test_store_kernels.py`` assert exact equality, and
+``core.store`` routes ``get_many`` / ``sample`` through these entries.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+from . import ref as _ref
+
+__all__ = ["preferred_mode", "probe_slots", "sample_slots", "gather_rows"]
+
+
+def preferred_mode() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def probe_slots(table_keys: jax.Array, version: jax.Array, query: jax.Array,
+                mode: str | None = None):
+    """First valid slot per query key → ``(idx i32[n], found bool[n])``.
+
+    ``idx == capacity`` (and ``found == False``) where the key is absent.
+    """
+    mode = mode or preferred_mode()
+    query = jnp.asarray(query, jnp.uint32)
+    if mode == "ref":
+        return _ref.probe_slots_ref(table_keys, version, query)
+    idx = _k.probe(table_keys, version, query,
+                   interpret=(mode == "interpret"))
+    return idx, idx < table_keys.shape[0]
+
+
+def sample_slots(version: jax.Array, ranks: jax.Array,
+                 mode: str | None = None) -> jax.Array:
+    """Slot of the ``r``-th valid entry for each rank (``r`` in [0, nvalid))."""
+    mode = mode or preferred_mode()
+    if mode == "ref":
+        return _ref.sample_slots_ref(version, ranks)
+    return _k.sample(version, ranks, interpret=(mode == "interpret"))
+
+
+def gather_rows(slab: jax.Array, slots: jax.Array,
+                mode: str | None = None) -> jax.Array:
+    """``slab[slots]`` row gather; ``slots`` must already be in range."""
+    mode = mode or preferred_mode()
+    if mode == "ref":
+        return _ref.gather_rows_ref(slab, slots)
+    return _k.gather(slab, slots, interpret=(mode == "interpret"))

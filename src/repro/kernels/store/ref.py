@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the store access kernels.
+
+These are *also* the production CPU path (like the other kernel packages'
+refs), so they must share the kernels' complexity contract: no
+``[n, capacity]`` match matrix.  Key probing sorts the slot keys once
+(O(capacity log capacity)) and binary-searches the ``n`` queries
+(O(n log capacity)); sampling maps uniform ranks onto valid slots through
+the cumulative-valid-count vector with the same binary search.
+
+Tie-breaking contract (shared with ``kernel.py``): when several valid
+slots hold the same key, the *lowest* slot index wins — the historical
+``argmax``-of-match behavior of ``core.store.get_many``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["probe_slots_ref", "sample_slots_ref", "gather_rows_ref",
+           "EMPTY_KEY"]
+
+EMPTY_KEY = jnp.uint32(0xFFFFFFFF)
+
+
+def probe_slots_ref(table_keys: jax.Array, version: jax.Array,
+                    query: jax.Array):
+    """First valid slot holding each query key.
+
+    Args:
+      table_keys: uint32[capacity] per-slot keys.
+      version:    int32[capacity]; > 0 where the slot is live.
+      query:      uint32[n] keys to look up (``EMPTY_KEY`` never matches).
+    Returns:
+      ``(idx int32[n], found bool[n])`` — ``idx == capacity`` where absent.
+    """
+    capacity = table_keys.shape[0]
+    valid = version > 0
+    # Tombstoned/empty slots sort to the end (EMPTY_KEY is the max uint32);
+    # stable argsort keeps equal keys in slot order, so side="left" search
+    # lands on the lowest matching slot.
+    masked = jnp.where(valid, table_keys, EMPTY_KEY)
+    order = jnp.argsort(masked)
+    sorted_keys = masked[order]
+    pos = jnp.searchsorted(sorted_keys, query, side="left", method="scan")
+    pos_c = jnp.minimum(pos, capacity - 1)
+    found = (sorted_keys[pos_c] == query) & (query != EMPTY_KEY) \
+        & (pos < capacity)
+    idx = jnp.where(found, order[pos_c], capacity).astype(jnp.int32)
+    return idx, found
+
+
+def sample_slots_ref(version: jax.Array, ranks: jax.Array) -> jax.Array:
+    """Slot index of the ``r``-th valid slot for each rank ``r``.
+
+    ``ranks`` must lie in ``[0, nvalid)`` (the caller draws them uniformly);
+    out-of-range ranks return ``capacity`` (caller clamps/handles).
+    """
+    cum = jnp.cumsum((version > 0).astype(jnp.int32))
+    return jnp.searchsorted(cum, ranks.astype(jnp.int32), side="right",
+                            method="scan").astype(jnp.int32)
+
+
+def gather_rows_ref(slab: jax.Array, slots: jax.Array) -> jax.Array:
+    """Row gather ``slab[slots]`` (slots already clamped in-range)."""
+    return jnp.take(slab, slots, axis=0)

@@ -63,6 +63,8 @@ def _compile_cell(cfg, shape, mesh, rules):
 
 def _cost(compiled):
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):     # older jax: one dict per device
+        ca = ca[0] if ca else {}
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0))}
 

@@ -25,12 +25,19 @@ HW = {
 }
 
 
+def axis_types_kw(n: int) -> dict:
+    """``axis_types=(Auto,)*n`` kwargs only where this jax version has
+    ``jax.sharding.AxisType`` (older versions default to auto anyway)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    return {"axis_types": (axis_type.Auto,) * n} if axis_type is not None \
+        else {}
+
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **axis_types_kw(len(axes)))
 
 
 def make_mesh_for(n_devices: int, model_axis: int = 1, name_data: str = "data",
@@ -40,4 +47,4 @@ def make_mesh_for(n_devices: int, model_axis: int = 1, name_data: str = "data",
         raise ValueError(f"{n_devices} devices, model axis {model_axis}")
     return jax.make_mesh(
         (n_devices // model_axis, model_axis), (name_data, name_model),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        **axis_types_kw(2))

@@ -39,7 +39,11 @@ __all__ = ["save", "save_async", "restore", "latest_step", "Checkpointer",
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path is newer than some supported jax versions;
+    # jax.tree_util.tree_flatten_with_path is the long-stable spelling.
+    flatten = getattr(jax.tree, "flatten_with_path",
+                      jax.tree_util.tree_flatten_with_path)
+    flat, treedef = flatten(tree)
     out = []
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))

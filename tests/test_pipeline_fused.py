@@ -1,0 +1,246 @@
+"""Fused in-situ pipeline: per-table concurrency, cached watermark,
+capture transactions, and the fused trainer epoch."""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Client, StoreServer, TableSpec
+from repro.core import store as S
+
+
+def _val(x, shape=(3,)):
+    return jnp.full(shape, float(x), jnp.float32)
+
+
+def _two_table_server():
+    srv = StoreServer()
+    srv.create_table(TableSpec("a", shape=(3,), capacity=16, engine="ring"))
+    srv.create_table(TableSpec("b", shape=(3,), capacity=16, engine="ring"))
+    return srv
+
+
+class TestPerTableLocks:
+    def test_no_cross_table_contention(self):
+        """A producer writing table 'a' must not block while a consumer
+        holds table 'b' (the old global RLock serialized them)."""
+        srv = _two_table_server()
+        done = threading.Event()
+
+        def writer():
+            for i in range(10):
+                srv.put("a", S.make_key(0, i), _val(i))
+            done.set()
+
+        with srv.table_lock("b"):       # consumer camps on table b
+            t = threading.Thread(target=writer, daemon=True)
+            t.start()
+            assert done.wait(10.0), \
+                "puts to table 'a' blocked by table 'b' lock"
+            t.join(5.0)
+        assert srv.watermark("a") == 10
+
+    def test_watermark_lock_free_under_held_lock(self):
+        """Watermark polling must not need any table lock (cached host
+        counter) — it works even while the producer holds the lock."""
+        srv = _two_table_server()
+        srv.put("a", 1, _val(1))
+        got = []
+
+        def poller():
+            got.append(srv.watermark("a"))
+            got.append(srv.wait_watermark("a", 1, timeout=1.0))
+
+        with srv.table_lock("a"):
+            t = threading.Thread(target=poller, daemon=True)
+            t.start()
+            t.join(5.0)
+        assert got == [1, True]
+
+    def test_same_table_still_serialized(self):
+        srv = _two_table_server()
+        order = []
+
+        def writer():
+            srv.put("a", 99, _val(9))
+            order.append("put")
+
+        with srv.table_lock("a"):
+            t = threading.Thread(target=writer, daemon=True)
+            t.start()
+            time.sleep(0.05)
+            order.append("holder")
+        t.join(5.0)
+        assert order == ["holder", "put"]
+
+
+class TestCachedWatermark:
+    def test_matches_device_after_mixed_ops(self):
+        srv = _two_table_server()
+        srv.put("a", S.make_key(0, 0), _val(0))
+        srv.put_many("a", S.make_key(jnp.arange(3), jnp.ones(3, jnp.int32)),
+                     jnp.ones((3, 3)))
+        srv.put_stream("a",
+                       S.make_key(jnp.arange(2)[:, None].repeat(2, 1),
+                                  jnp.arange(2)[None, :].repeat(2, 0) + 5),
+                       jnp.ones((2, 2, 3)))
+        srv.delete("a", S.make_key(0, 0))    # tombstone ≠ watermark change
+        assert srv.watermark("a") == 8 == srv.watermark_device("a")
+
+    def test_capture_commit_bumps_watermark(self):
+        srv = _two_table_server()
+        spec = srv.spec("a")
+
+        def step_fn(c, t):
+            return c, S.make_key(0, t), jnp.full((3,), t.astype(jnp.float32))
+
+        with srv.capture("a") as txn:
+            txn.state, _ = S.capture_scan(spec, txn.state, step_fn,
+                                          jnp.zeros(()), 9, 3)
+            txn.puts = S.capture_emit_count(9, 3)
+        assert srv.watermark("a") == 3 == srv.watermark_device("a")
+
+    def test_readonly_capture_leaves_state(self):
+        srv = _two_table_server()
+        srv.put("a", 5, _val(5))
+        with srv.capture("a") as txn:
+            vals, founds = S.get_many(spec := srv.spec("a"), txn.state,
+                                      jnp.array([5], jnp.uint32))
+        assert bool(np.asarray(founds)[0])
+        assert srv.watermark("a") == 1
+
+    def test_capture_error_without_assignment_leaves_table(self):
+        srv = _two_table_server()
+        srv.put("a", 5, _val(5))
+        with pytest.raises(RuntimeError):
+            with srv.capture("a") as txn:
+                raise RuntimeError("failed before dispatching anything")
+        v, found = srv.get("a", 5)
+        assert bool(found) and srv.watermark("a") == 1
+
+    def test_capture_error_after_assignment_still_commits(self):
+        """Fused ops donate the checked-out state, so an assigned
+        txn.state must commit even when the body then raises — rolling
+        back would leave the table on deleted buffers."""
+        srv = _two_table_server()
+        srv.put("a", 5, _val(5))
+        spec = srv.spec("a")
+        with pytest.raises(RuntimeError):
+            with srv.capture("a") as txn:
+                txn.state = S.put(spec, txn.state, jnp.uint32(6), _val(6))
+                txn.puts = 1
+                raise RuntimeError("raised after a donating dispatch")
+        v, found = srv.get("a", 6)
+        assert bool(found) and srv.watermark("a") == 2
+        # the donated pre-put state must not be live anywhere
+        v5, found5 = srv.get("a", 5)
+        assert bool(found5) and np.allclose(v5, 5.0)
+
+    def test_restore_rederives_watermark(self):
+        srv = _two_table_server()
+        srv.put("a", 1, _val(1))
+        snap = srv.snapshot()
+        srv.put("a", 2, _val(2))
+        assert srv.watermark("a") == 2
+        srv.restore(snap)
+        assert srv.watermark("a") == 1 == srv.watermark_device("a")
+
+
+class TestBackoff:
+    def test_wait_watermark_backoff_still_bounded(self):
+        srv = _two_table_server()
+        t0 = time.perf_counter()
+        assert not srv.wait_watermark("a", 1, timeout=0.1)
+        assert time.perf_counter() - t0 < 1.0
+        srv.put("a", 1, _val(0))
+        assert srv.wait_watermark("a", 1, timeout=0.1)
+
+    def test_wait_watermark_wakes_promptly(self):
+        srv = _two_table_server()
+
+        def late_put():
+            time.sleep(0.05)
+            srv.put("a", 1, _val(0))
+
+        threading.Thread(target=late_put, daemon=True).start()
+        t0 = time.perf_counter()
+        assert srv.wait_watermark("a", 1, timeout=5.0)
+        # exponential backoff is capped, so the wake lag stays small
+        assert time.perf_counter() - t0 < 1.0
+
+    def test_poll_tensor_backoff(self):
+        srv = _two_table_server()
+        client = Client(srv)
+
+        def late_put():
+            time.sleep(0.05)
+            client.put_tensor("x", _val(1), table="a")
+
+        threading.Thread(target=late_put, daemon=True).start()
+        assert client.poll_tensor("x", table="a", timeout=5.0)
+        assert not client.poll_tensor("missing", table="a", timeout=0.1)
+
+
+class TestFusedTrainer:
+    def test_fused_epoch_one_dispatch_and_converges(self):
+        from repro.ml import autoencoder as ae
+        from repro.ml import trainer as tr
+        from repro.sim import flatplate as fp
+
+        fcfg = fp.FlatPlateConfig(nx=8, ny=8, nz=4)
+        n = fcfg.n_points
+        srv = StoreServer()
+        srv.create_table(TableSpec("field", shape=(4, n), capacity=16,
+                                   engine="ring"))
+        client = Client(srv)
+        key = jax.random.key(0)
+        for i in range(10):
+            client.send_step("field", i, fp.snapshot(fcfg, key, i))
+
+        cfg = tr.TrainerConfig(
+            ae=ae.AEConfig(n_points=n, mode="ref", latent=16, mlp_width=16),
+            epochs=6, gather=6, batch_size=4, lr=1e-3, fused=True)
+        ops_before = srv.op_count
+        state, hist, levels, stats = tr.insitu_train(
+            client, fp.grid_coords(fcfg), cfg)
+        assert len(hist) == 6
+        head = np.mean([h.train_loss for h in hist[:2]])
+        tail = np.mean([h.train_loss for h in hist[-2:]])
+        assert tail < head, (head, tail)
+        # O(1) server dispatches per epoch: 1 capture each, plus the
+        # norm-stats bootstrap sample and the fused-epoch warmup.
+        assert srv.op_count - ops_before <= cfg.epochs + 2
+
+    def test_fused_and_per_verb_agree_on_semantics(self):
+        """Both tiers hold out one tensor, train on the rest, and report
+        finite, decreasing-ish losses from the same store contents."""
+        from repro.ml import autoencoder as ae
+        from repro.ml import trainer as tr
+        from repro.sim import flatplate as fp
+
+        fcfg = fp.FlatPlateConfig(nx=8, ny=8, nz=4)
+        n = fcfg.n_points
+        histories = {}
+        for fused in (True, False):
+            srv = StoreServer()
+            srv.create_table(TableSpec("field", shape=(4, n), capacity=16,
+                                       engine="ring"))
+            client = Client(srv)
+            key = jax.random.key(0)
+            for i in range(10):
+                client.send_step("field", i, fp.snapshot(fcfg, key, i))
+            cfg = tr.TrainerConfig(
+                ae=ae.AEConfig(n_points=n, mode="ref", latent=16,
+                               mlp_width=16),
+                epochs=3, gather=6, batch_size=4, lr=1e-3, fused=fused)
+            _, hist, _, _ = tr.insitu_train(client, fp.grid_coords(fcfg),
+                                            cfg)
+            histories[fused] = hist
+        for hist in histories.values():
+            assert len(hist) == 3
+            assert all(np.isfinite(h.train_loss) and
+                       np.isfinite(h.val_loss) for h in hist)

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import store as S
 from repro.core.server import StoreServer
@@ -88,6 +88,90 @@ class TestHashEngine:
             if key in model:
                 assert np.allclose(v, model[key], atol=1e-6)
         assert int(S.valid_count(spec, st_)) == len(model)
+
+
+class TestPutManyCollisions:
+    """The docstring contract: batched slot collisions resolve
+    last-writer-wins, exactly like the equivalent sequence of ``put``s."""
+
+    def test_hash_distinct_mod_capacity_roundtrip(self):
+        spec = _spec(capacity=8)
+        st_ = S.init_table(spec)
+        keys = jnp.array([1, 2, 3, 12], jnp.uint32)   # distinct mod 8
+        st_ = S.put_many(spec, st_, keys, jnp.stack([_val(i) for i in range(4)]))
+        for i, k in enumerate([1, 2, 3, 12]):
+            v, found = S.get(spec, st_, k)
+            assert bool(found) and np.allclose(v, i), k
+
+    def test_hash_colliding_keys_match_sequential_puts(self):
+        """keys 1 and 9 collide mod 8: the later key must win and the
+        earlier key must read as absent — same as sequential puts."""
+        spec = _spec(capacity=8)
+        a = S.put_many(spec, S.init_table(spec),
+                       jnp.array([1, 9], jnp.uint32),
+                       jnp.stack([_val(1), _val(2)]))
+        b = S.init_table(spec)
+        b = S.put(spec, b, 1, _val(1))
+        b = S.put(spec, b, 9, _val(2))
+        for x, y, name in zip(a, b, a._fields):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), name
+        v, found = S.get(spec, a, 9)
+        assert bool(found) and np.allclose(v, 2)
+        _, found1 = S.get(spec, a, 1)
+        assert not bool(found1)
+        assert int(a.count) == 2          # collisions still bump the watermark
+
+    def test_hash_same_key_twice_in_batch(self):
+        spec = _spec(capacity=8)
+        st_ = S.put_many(spec, S.init_table(spec),
+                         jnp.array([7, 7], jnp.uint32),
+                         jnp.stack([_val(1), _val(2)]))
+        v, found = S.get(spec, st_, 7)
+        assert bool(found) and np.allclose(v, 2)
+        assert int(S.valid_count(spec, st_)) == 1
+
+    def test_ring_batch_longer_than_capacity(self):
+        """A ring batch wrapping the capacity keeps the *last* writes."""
+        spec = _spec(engine="ring", capacity=4)
+        n = 6
+        keys = S.make_key(jnp.zeros(n, jnp.int32), jnp.arange(n))
+        vals = jnp.arange(n, dtype=jnp.float32)[:, None].repeat(3, 1)
+        a = S.put_many(spec, S.init_table(spec), keys, vals)
+        b = S.init_table(spec)
+        for i in range(n):
+            b = S.put(spec, b, keys[i], vals[i])
+        for x, y, name in zip(a, b, a._fields):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), name
+        got = sorted(np.asarray(a.slab)[:, 0].tolist())
+        assert got == [2.0, 3.0, 4.0, 5.0]
+
+
+class TestDeleteSampleInteraction:
+    @pytest.mark.parametrize("engine", ["hash", "ring"])
+    def test_sample_excludes_tombstoned_slots(self, engine):
+        cap = 8
+        spec = _spec(engine=engine, capacity=cap)
+        st_ = S.init_table(spec)
+        keys = [1, 2, 3, 4, 5]
+        for k in keys:
+            st_ = S.put(spec, st_, k, _val(10 + k))
+        st_ = S.delete(spec, st_, 2)
+        st_ = S.delete(spec, st_, 4)
+        vals, skeys, ok = S.sample(spec, st_, jax.random.key(0), 64)
+        assert bool(ok)
+        sampled = set(np.asarray(vals)[:, 0].tolist())
+        assert sampled <= {11.0, 13.0, 15.0}, sampled
+        assert not ({12.0, 14.0} & sampled)
+        assert int(S.valid_count(spec, st_)) == 3
+
+    def test_delete_all_then_sample_not_ok(self):
+        spec = _spec(engine="ring", capacity=4)
+        st_ = S.init_table(spec)
+        st_ = S.put(spec, st_, 3, _val(1))
+        st_ = S.delete(spec, st_, 3)
+        vals, _, ok = S.sample(spec, st_, jax.random.key(1), 4)
+        assert not bool(ok)
+        assert np.allclose(vals, 0)
 
 
 class TestRingEngine:
