@@ -1,0 +1,134 @@
+"""Fig. 10 (beyond-paper): the sharded fused epoch vs mesh size.
+
+The paper's headline result is near-perfect scaling of co-located training
+across nodes.  Our structural version: the trainer's whole epoch — store
+gather, normalization, mini-batch SGD with DDP gradient all-reduce, and
+validation — runs inside ONE ``shard_map`` over a ``data`` mesh axis
+(``ml.trainer.make_sharded_fused_epoch``), so dispatches/epoch stays O(1)
+at any mesh size.  This benchmark measures epochs/s and store
+dispatches/epoch for mesh sizes 1, 2, (4 with ``--full``), with the
+single-device fused tier as the mesh=1 baseline, and writes
+``BENCH_sharded_epoch.json``.
+
+Each mesh size runs in a fresh subprocess: forcing multiple CPU devices
+(``--xla_force_host_platform_device_count``) must happen before the first
+jax call, and a fresh process keeps the timings free of each other's
+compilation caches.  On a single shared CPU the mesh sizes time-slice one
+socket, so epochs/s is NOT expected to scale here — the claim under test
+is the O(1) dispatch count and that the sharded tier stays within a small
+factor of the baseline; real scaling needs real devices.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from .common import Row
+
+_CHILD = """
+    import json, sys, time
+    import jax, jax.numpy as jnp
+    from repro.core import StoreServer, TableSpec
+    from repro.core import store as S
+    from repro.ml import autoencoder as ae, trainer as tr
+    from repro.parallel.sharding import data_mesh
+    from repro.sim import flatplate as fp
+    from repro.train import optimizer as opt
+
+    D, epochs = int(sys.argv[1]), int(sys.argv[2])
+    fcfg = fp.FlatPlateConfig(nx=8, ny=8, nz=4)
+    n = fcfg.n_points
+    srv = StoreServer()
+    srv.create_table(TableSpec("field", shape=(4, n), capacity=16,
+                               engine="ring"))
+    key = jax.random.key(0)
+    for i in range(10):
+        srv.put("field", S.make_key(0, i), fp.snapshot(fcfg, key, i))
+
+    aecfg = ae.AEConfig(n_points=n, mode="ref", latent=16, mlp_width=16)
+    cfg = tr.TrainerConfig(ae=aecfg, gather=6, batch_size=4, lr=1e-3,
+                           mesh=(data_mesh(D) if D > 1 else None))
+    levels = ae.coords_pyramid(aecfg, fp.grid_coords(fcfg))
+    tx = opt.adam(cfg.scaled_lr)
+    state = tr.init_state(cfg, jax.random.key(0), tx)
+    make = tr.make_sharded_fused_epoch if D > 1 else tr.make_fused_epoch
+    epoch_fn = make(cfg, levels, tx, srv.spec("field"))
+    mu, sd = jnp.zeros((4,)), jnp.ones((4,))
+
+    # warm the executable on a throwaway table (timed loop = dispatch only)
+    dummy = S.init_table(srv.spec("field"))
+    jax.block_until_ready(
+        epoch_fn(dummy, state, jax.random.key(0), mu, sd)[1])
+
+    rng = jax.random.key(1)
+    ops0 = srv.op_count
+    t0 = time.perf_counter()
+    for e in range(epochs):
+        rng, k = jax.random.split(rng)
+        with srv.capture("field") as txn:
+            state, metrics = epoch_fn(txn.state, state, k, mu, sd)
+        jax.block_until_ready(state.params)
+    wall = time.perf_counter() - t0
+    print(json.dumps({
+        "mesh": D,
+        "devices": len(jax.devices()),
+        "epochs_per_s": epochs / wall,
+        "dispatches_per_epoch": (srv.op_count - ops0) / epochs,
+        "train_loss": float(metrics[0]),
+    }))
+"""
+
+
+def _run_child(mesh_size: int, epochs: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={mesh_size}"
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_CHILD),
+         str(mesh_size), str(epochs)],
+        capture_output=True, text=True, timeout=900, env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"fig10 child (mesh={mesh_size}) failed:\n{proc.stderr[-4000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def run(quick: bool = True, json_path: str | None = None,
+        write_json: bool = True):
+    mesh_sizes = [1, 2] if quick else [1, 2, 4]
+    epochs = 8 if quick else 24
+    cells = [_run_child(d, epochs) for d in mesh_sizes]
+
+    base = cells[0]
+    result = {
+        "bench": "sharded_epoch",
+        "epochs": epochs,
+        "baseline": "single-device fused tier (mesh=1)",
+        "cells": cells,
+    }
+    if write_json:
+        path = Path(json_path) if json_path \
+            else Path("BENCH_sharded_epoch.json")
+        path.write_text(json.dumps(result, indent=2) + "\n")
+
+    rows = []
+    for c in cells:
+        rel = c["epochs_per_s"] / base["epochs_per_s"]
+        rows.append(Row(
+            f"fig10/mesh{c['mesh']}_epoch", 1e6 / c["epochs_per_s"],
+            f"epochs_per_s={c['epochs_per_s']:.2f};"
+            f"dispatches_per_epoch={c['dispatches_per_epoch']:.2f};"
+            f"vs_baseline={rel:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=False))

@@ -31,7 +31,8 @@ def main() -> None:
     from . import (fig3_store_budget, fig4_size_sweep, fig5_weak_scaling,
                    fig6_strong_scaling, fig7_inference_components,
                    fig8_inference_scaling, fig9_fused_pipeline,
-                   roofline_table, table12_insitu_overhead)
+                   fig10_sharded_epoch, roofline_table,
+                   table12_insitu_overhead)
     benches = {
         "fig3": fig3_store_budget.run,
         "fig4": fig4_size_sweep.run,
@@ -40,6 +41,7 @@ def main() -> None:
         "fig7": fig7_inference_components.run,
         "fig8": fig8_inference_scaling.run,
         "fig9": fig9_fused_pipeline.run,
+        "fig10": fig10_sharded_epoch.run,
         "table12": table12_insitu_overhead.run,
         "roofline": roofline_table.run,
     }
@@ -53,14 +55,19 @@ def main() -> None:
     if args.json:
         Path(args.json_dir).mkdir(parents=True, exist_ok=True)
     if "fig9" in benches:
-        # fig9's structured result file is opt-in here like every other
-        # BENCH_*.json, and lands in --json-dir, not the invoker's CWD.
-        # (Standalone `python -m benchmarks.fig9_fused_pipeline` still
-        # writes it by default.)
+        # fig9/fig10 structured result files are opt-in here like every
+        # other BENCH_*.json, and land in --json-dir, not the invoker's
+        # CWD.  (Standalone `python -m benchmarks.fig9_fused_pipeline` /
+        # `... fig10_sharded_epoch` still writes them by default.)
         benches["fig9"] = (lambda quick: fig9_fused_pipeline.run(
             quick=quick, write_json=args.json,
             json_path=str(Path(args.json_dir)
                           / "BENCH_fused_pipeline.json")))
+    if "fig10" in benches:
+        benches["fig10"] = (lambda quick: fig10_sharded_epoch.run(
+            quick=quick, write_json=args.json,
+            json_path=str(Path(args.json_dir)
+                          / "BENCH_sharded_epoch.json")))
 
     print("name,us_per_call,derived")
     failures = 0

@@ -17,7 +17,7 @@ import re
 from collections import defaultdict
 
 __all__ = ["collective_bytes", "parse_shape_bytes", "count_ops",
-           "COLLECTIVE_OPS"]
+           "assert_collective_free", "COLLECTIVE_OPS"]
 
 COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                   "collective-permute")
@@ -87,3 +87,22 @@ def count_ops(hlo_text: str, op_names=COLLECTIVE_OPS) -> dict[str, int]:
         if m:
             counts[m.group(2)] += 1
     return dict(counts)
+
+
+def assert_collective_free(hlo_text: str, what: str = "computation") -> None:
+    """Assert a compiled (post-SPMD) HLO module contains NO collective ops.
+
+    This is the structural form of the paper's "all data transfer is
+    contained within each node": a co-located store put — per-verb or the
+    fused ``capture_scan`` path — must lower to pure local
+    dynamic-update-slices, so any ``all-reduce``/``all-gather``/… in its
+    optimized HLO is a deployment-alignment regression.  Raises
+    ``AssertionError`` naming the offending ops with their byte counts
+    (from :func:`collective_bytes`); the roofline check and the tier-1
+    zero-collective tests both route through this.
+    """
+    counts = count_ops(hlo_text)
+    if counts:
+        raise AssertionError(
+            f"{what} contains collectives: {counts} "
+            f"(bytes: {collective_bytes(hlo_text)})")

@@ -120,6 +120,43 @@ class Client:
         with self.server.capture(table) as txn:
             yield txn
 
+    def capture_scan(self, table: str, step_fn, carry, length: int,
+                     emit_every: int = 1, t0=0, n_ranks: int | None = None):
+        """Fold ``length`` producer steps + their ring puts into ONE
+        dispatch under one table-lock round-trip (the fused producer tier).
+
+        ``n_ranks=None``: the single-producer form —
+        ``step_fn(carry, t) -> (carry, key, value)``.  With ``n_ranks=R``
+        the multi-producer form: ``step_fn(carry_r, rank, t)`` is vmapped
+        over the leading ``[R]`` axis of ``carry`` and every emitting step
+        interleaves all R snapshots into the ring (see
+        ``store.capture_scan_multi``).  ``t0`` is an int or (multi-
+        producer) a *concrete* per-rank ``[R]`` array of clock offsets —
+        the put count is computed on the host from rank 0's clock, so a
+        non-int ``t0`` costs one blocking read here; the cached watermark
+        is bumped by the exact static put count.  Returns the new carry
+        (the dispatch is async — block on it or on a later read when
+        ordering matters).
+        """
+        spec = self.server.spec(table)
+        t0_gate = int(jnp.reshape(jnp.asarray(t0), (-1,))[0]) \
+            if not isinstance(t0, int) else t0
+        with self.timers.time("send"):
+            with self.capture(table) as txn:
+                if n_ranks is None:
+                    txn.state, carry = S.capture_scan(
+                        spec, txn.state, step_fn, carry, length, emit_every,
+                        t0=t0)
+                    txn.puts = S.capture_emit_count(length, emit_every,
+                                                    t0_gate)
+                else:
+                    txn.state, carry = S.capture_scan_multi(
+                        spec, txn.state, step_fn, carry, length, n_ranks,
+                        emit_every, t0=t0)
+                    txn.puts = S.capture_emit_count_multi(
+                        n_ranks, length, emit_every, t0_gate)
+        return carry
+
     # -- consumer-side loaders ---------------------------------------------------
 
     def sample_batch(self, table: str, n: int, rng):

@@ -243,6 +243,15 @@ class StoreServer:
             self._state[table] = S.delete(spec, self._state[table], key)
         self._bump_ops()
 
+    def stats(self) -> dict:
+        """Telemetry snapshot: dispatched-op count plus every table's
+        cached watermark.  ``op_count`` counts host→device dispatches (one
+        per verb, one per fused capture) — the benchmarks' O(k)-vs-O(1)
+        dispatch claims are measured from deltas of this dict."""
+        with self._lock:
+            marks = dict(self._counts)
+        return {"op_count": self.op_count, "watermarks": marks}
+
     def watermark(self, table: str) -> int:
         """Total writes so far — the consumer's freshness signal.
 

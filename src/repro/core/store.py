@@ -43,12 +43,19 @@ Two access tiers share these ops:
   dispatch plus one lock round-trip per verb.  Use it for control-plane
   traffic, irregular access, and paper-comparison benchmarks.
 * **Fused** (beyond-paper): ``capture_scan`` folds ``k`` producer steps and
-  their ring puts into a single ``jax.lax.scan`` dispatch; ``put_stream``
-  batches a whole trajectory of sends into one ``put_many``;
+  their ring puts into a single ``jax.lax.scan`` dispatch
+  (``capture_scan_multi`` is the R-rank form: per-rank ``t0`` clocks, all
+  ranks' snapshots interleaved into the ring each emitting step);
+  ``put_stream`` batches a whole trajectory of sends into one ``put_many``;
   ``sample_and_step`` runs the consumer's gather *and* its training
   microstep inside one jit.  One epoch of ``ml.trainer.insitu_train``
   costs O(1) dispatches instead of O(gather·batches).  Use it whenever the
   producer/consumer step is itself jit-traceable (the common case).
+
+Everywhere a fused op batches writes, slot collisions keep the per-verb
+semantics: **last-writer-wins** in trace order, with every overwrite still
+bumping ``count`` — a fused trajectory is byte-identical to replaying its
+verbs one dispatch at a time.
 
 The gather-side verbs (``get_many`` / ``sample``) route through the Pallas
 package ``repro.kernels.store`` (probe / sample / gather kernels on TPU,
@@ -87,7 +94,9 @@ __all__ = [
     "valid_count",
     "table_bytes",
     "capture_scan",
+    "capture_scan_multi",
     "capture_emit_count",
+    "capture_emit_count_multi",
     "sample_and_step",
 ]
 
@@ -435,6 +444,13 @@ def capture_scan_impl(spec: TableSpec, state: TableState,
     ``t0 .. t0+length-1`` (``t0`` may be a traced array, so chunked drivers
     reuse one compiled executable across chunks).
 
+    Emitted puts land in ring order exactly as the equivalent sequence of
+    single ``put`` verbs would; if more than ``capacity`` steps emit within
+    one call, slot collisions resolve **last-writer-wins** (the overwrite
+    still bumps ``count``), identical to the sequential reference.
+
+    The multi-rank form is :func:`capture_scan_multi`.
+
     Returns ``(state, carry)``.  The number of puts is static — use
     ``capture_emit_count`` to bump the server's cached watermark on commit.
     """
@@ -461,6 +477,65 @@ capture_scan = partial(jax.jit, static_argnums=(0, 2, 4, 5),
 def capture_emit_count(length: int, emit_every: int = 1, t0: int = 0) -> int:
     """Host-side count of puts a ``capture_scan`` call will perform."""
     return sum(1 for t in range(t0, t0 + length) if t % emit_every == 0)
+
+
+def capture_scan_multi_impl(spec: TableSpec, state: TableState,
+                            step_fn: Callable, carry, length: int,
+                            n_ranks: int, emit_every: int = 1, t0=0):
+    """Multi-producer :func:`capture_scan`: ``n_ranks`` producers advance in
+    lockstep for ``length`` steps inside ONE dispatch.
+
+    ``step_fn(carry_r, rank, t) -> (carry_r, key, value)`` is a *single
+    rank's* jit-traceable step; it is ``vmap``-ped over the leading ``[R]``
+    axis of ``carry`` (every leaf of the carry pytree stacks the per-rank
+    solver states).
+
+    ``t0`` may be a scalar or a per-rank ``[R]`` array: each rank's clock
+    runs over ``t0_r .. t0_r+length-1``, so restarted or staggered ranks
+    interleave their keys into the same ring.  Emission is gated on rank
+    0's clock (``(t0_0 + i) % emit_every == 0``): the paper's simulation
+    ranks send each sampled step together, so staggered ``t0`` offsets
+    shift the *keys*, never the cadence.
+
+    Each emitting step writes all ``n_ranks`` snapshots with one
+    ``put_many`` — rank-major within the step, byte-identical to ``R``
+    sequential per-verb ``put`` calls (including ring wrap-around and
+    last-writer-wins slot collisions when ``R`` exceeds ``capacity``).
+
+    Returns ``(state, carry)``.  The put count is static — commit with
+    ``puts=capture_emit_count_multi(...)`` to keep the server's cached
+    watermark exact.
+    """
+    ranks = jnp.arange(n_ranks, dtype=jnp.int32)
+    t0_arr = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (n_ranks,))
+
+    def body(sc, i):
+        st, c = sc
+        ts = t0_arr + i
+        c, keys, values = jax.vmap(step_fn, in_axes=(0, 0, 0))(c, ranks, ts)
+        st = jax.lax.cond(
+            ts[0] % emit_every == 0,
+            lambda s: put_many_impl(spec, s, keys, values),
+            lambda s: s,
+            st,
+        )
+        return (st, c), None
+
+    steps = jnp.arange(length, dtype=jnp.int32)
+    (state, carry), _ = jax.lax.scan(body, (state, carry), steps)
+    return state, carry
+
+
+capture_scan_multi = partial(jax.jit, static_argnums=(0, 2, 4, 5, 6),
+                             donate_argnums=1)(capture_scan_multi_impl)
+
+
+def capture_emit_count_multi(n_ranks: int, length: int, emit_every: int = 1,
+                             t0: int = 0) -> int:
+    """Host-side count of puts a ``capture_scan_multi`` call will perform.
+
+    ``t0`` is rank 0's start offset (the emission gate's clock)."""
+    return n_ranks * capture_emit_count(length, emit_every, t0)
 
 
 def sample_and_step_impl(spec: TableSpec, state: TableState, rng, n: int,

@@ -13,7 +13,12 @@ paper-ratio benchmarks) the producer runs the paper-fidelity per-verb loop
 — one ``send_step`` dispatch per send.  Otherwise it runs the fused
 capture pipeline: ``store.capture_scan`` folds a whole chunk of solver
 steps *and* their ring puts into one dispatch under one table-lock
-round-trip (``Client.capture``), so the send cost is pure enqueue.
+round-trip (``Client.capture``), so the send cost is pure enqueue.  With
+``--producers R > 1`` the fused tier switches to the multi-producer form
+(``store.capture_scan_multi``): R simulation ranks advance in lockstep
+inside the same dispatch and interleave their snapshots into the ring
+each emitting step — the paper's n-sim-ranks-per-node topology with still
+O(1) dispatches per chunk.
 """
 
 from __future__ import annotations
@@ -36,12 +41,16 @@ def run(epochs: int = 40, sim_steps: int = 200, points: str = "small",
         producer: str = "flatplate", send_every: int = 2,
         capacity: int = 24, gather: int = 6, latent: int = 16,
         lr: float = 1e-3, compute_s: float = 0.0, seed: int = 0,
-        verbose: bool = True):
+        producers: int = 1, verbose: bool = True):
     """``compute_s``: emulated PDE-integration cost per step (the paper's
     reproducer sleeps to stand in for the solver; our synthetic producer
     costs ~9 ms/step vs PHASTA's ~500 s, so overhead *ratios* against the
     solver need the emulation — the absolute send cost is measured
-    either way)."""
+    either way).  ``producers``: simulation ranks sharing the fused
+    capture (>1 requires the fused tier, i.e. ``compute_s == 0``)."""
+    if producers > 1 and compute_s:
+        raise ValueError("multi-producer capture requires the fused tier "
+                         "(compute_s == 0)")
     if points == "small":
         fcfg = fp.FlatPlateConfig(nx=8, ny=8, nz=4)
     else:
@@ -91,9 +100,12 @@ def run(epochs: int = 40, sim_steps: int = 200, points: str = "small",
 
         # -- fused tier: capture_scan folds a chunk of solver steps + ring
         # puts into ONE dispatch; t0 is traced so every full chunk reuses
-        # the same compiled executable.
+        # the same compiled executable.  producers > 1 uses the
+        # multi-producer form: R ranks advance in lockstep, all R
+        # snapshots interleave into the ring each emitting step.
         spec = client.server.spec("field")
         rank = client.rank
+        R = producers
 
         def step_fn(carry, t):
             if producer == "spectral":
@@ -103,8 +115,21 @@ def run(epochs: int = 40, sim_steps: int = 200, points: str = "small",
                 snap = fp.snapshot(fcfg, key, t)
             return carry, S.make_key(rank, t), snap
 
-        carry = sp.random_turbulence(ncfg, key) if producer == "spectral" \
-            else jnp.zeros(())
+        def step_fn_multi(carry_r, rnk, t):
+            if producer == "spectral":
+                carry_r = sp.step(ncfg, carry_r)
+                snap = _fit_points(sp.snapshot(ncfg, carry_r))
+            else:
+                snap = fp.snapshot(fcfg, jax.random.fold_in(key, rnk), t)
+            return carry_r, S.make_key(rnk, t), snap
+
+        if R == 1:
+            carry = sp.random_turbulence(ncfg, key) \
+                if producer == "spectral" else jnp.zeros(())
+        else:
+            carry = jax.vmap(lambda r: sp.random_turbulence(
+                ncfg, jax.random.fold_in(key, r)))(jnp.arange(R)) \
+                if producer == "spectral" else jnp.zeros((R,))
         chunk = max(8 * send_every, 8)
         # Warm the capture executable (every distinct chunk length — the
         # tail chunk compiles separately since length is static) on a
@@ -114,8 +139,14 @@ def run(epochs: int = 40, sim_steps: int = 200, points: str = "small",
                    for base in range(0, sim_steps, chunk)}
         with client.timers.time("jit_compile"):
             for wk in sorted(lengths):
-                wst, _ = S.capture_scan(spec, S.init_table(spec), step_fn,
-                                        carry, wk, send_every, t0=0)
+                if R == 1:
+                    wst, _ = S.capture_scan(spec, S.init_table(spec),
+                                            step_fn, carry, wk, send_every,
+                                            t0=0)
+                else:
+                    wst, _ = S.capture_scan_multi(
+                        spec, S.init_table(spec), step_fn_multi, carry, wk,
+                        R, send_every, t0=0)
                 jax.block_until_ready(wst.count)
         steps = 0
         srv = client.server
@@ -125,17 +156,13 @@ def run(epochs: int = 40, sim_steps: int = 200, points: str = "small",
             k = min(chunk, sim_steps - base)
             # The ring puts ride the solver dispatch (that is the point of
             # the fused tier), so the chunk is charged to equation_solution
-            # and "send" counts only the host-side commit bookkeeping.
+            # and "send" counts only the enqueue + commit bookkeeping
+            # (Client.capture_scan times it into the send bucket).
             with client.timers.time("equation_solution") as box:
-                with srv.table_lock("field"):
-                    new_state, carry = S.capture_scan(
-                        spec, srv.checkout("field"), step_fn, carry, k,
-                        send_every, t0=base)
-                    with client.timers.time("send"):
-                        srv.commit("field", new_state,
-                                   puts=S.capture_emit_count(k, send_every,
-                                                             base))
-                box[0] = new_state.count     # block on the chunk
+                carry = client.capture_scan(
+                    "field", step_fn if R == 1 else step_fn_multi, carry, k,
+                    send_every, t0=base, n_ranks=None if R == 1 else R)
+                box[0] = srv.checkout("field").count  # block on the chunk
             steps += k
         client.put_metadata("sim_done", True)
         return steps
@@ -203,9 +230,12 @@ def main() -> None:
     ap.add_argument("--producer", choices=["flatplate", "spectral"],
                     default="flatplate")
     ap.add_argument("--points", choices=["small", "medium"], default="small")
+    ap.add_argument("--producers", type=int, default=1,
+                    help="simulation ranks sharing the fused capture")
     args = ap.parse_args()
     run(epochs=args.epochs, sim_steps=args.sim_steps,
-        producer=args.producer, points=args.points)
+        producer=args.producer, points=args.points,
+        producers=args.producers)
 
 
 if __name__ == "__main__":

@@ -39,7 +39,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["DEFAULT_RULES", "use_mesh", "current_mesh", "spec_for", "shard",
            "sharding_for", "fitted_sharding", "logical_sharding", "ParamSpec",
-           "init_params", "param_specs_to_shardings", "param_axes"]
+           "init_params", "param_specs_to_shardings", "param_axes",
+           "data_mesh"]
 
 # logical axis -> mesh axis name(s)
 DEFAULT_RULES: dict[str, Any] = {
@@ -168,6 +169,24 @@ def shard_fit(x: jax.Array, *axes: str | None) -> jax.Array:
         return x
     sh = fitted_sharding(mesh, x.shape, axes, _current_rules())
     return jax.lax.with_sharding_constraint(x, sh)
+
+
+# ---------------------------------------------------------------------------
+# DDP helpers (the sharded fused epoch's mesh plumbing)
+# ---------------------------------------------------------------------------
+
+def data_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:
+    """A 1-D mesh over ``axis`` for pure data parallelism.
+
+    ``n_devices`` defaults to every visible device.  This is the mesh the
+    sharded fused epoch (``ml.trainer.make_sharded_fused_epoch``) runs its
+    single ``shard_map`` over; on CPU, force multiple devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the
+    first jax call.
+    """
+    from ..launch.mesh import axis_types_kw
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    return jax.make_mesh((n,), (axis,), **axis_types_kw(1))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,30 @@
+"""Docs stay truthful: the link/import checker must pass, and the
+quickstart's entry points must exist (the CI docs job runs the same
+checker standalone)."""
+
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_docs_check_passes():
+    sys.path.insert(0, str(REPO / "tools"))
+    try:
+        import check_docs
+        assert check_docs.main() == 0
+    finally:
+        sys.path.remove(str(REPO / "tools"))
+
+
+def test_docs_exist():
+    assert (REPO / "README.md").exists()
+    assert (REPO / "docs" / "architecture.md").exists()
+    assert (REPO / "docs" / "benchmarks.md").exists()
+
+
+def test_quickstart_entry_points_import():
+    """The modules the README tells users to run must import."""
+    import importlib
+    for mod in ("repro.launch.insitu", "benchmarks.run"):
+        importlib.import_module(mod)

@@ -1,0 +1,153 @@
+"""Multi-producer ``capture_scan``: R ranks advancing in lockstep inside
+one dispatch must be byte-identical to the sequential per-verb reference
+(R single puts per emitting step), including ring wrap-around,
+last-writer-wins collisions, per-rank t0 staggering, and the committed
+watermark."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Client, StoreServer, TableSpec
+from repro.core import store as S
+
+
+def _mk_step_fn():
+    def step_fn(carry, rank, t):
+        val = jnp.full((2,), t.astype(jnp.float32) * 10.0
+                       + rank.astype(jnp.float32))
+        return carry + 1.0, S.make_key(rank, t), val
+    return step_fn
+
+
+def _sequential_ref(spec, n_ranks, length, emit_every, t0=0):
+    """The per-verb reference: for each emitting step, rank-major puts."""
+    st = S.init_table(spec)
+    t0s = np.broadcast_to(np.asarray(t0), (n_ranks,))
+    for i in range(length):
+        if (int(t0s[0]) + i) % emit_every == 0:
+            for r in range(n_ranks):
+                t = int(t0s[r]) + i
+                st = S.put(spec, st, S.make_key(r, t),
+                           jnp.full((2,), float(t * 10 + r)))
+    return st
+
+
+def _assert_state_equal(a, b):
+    for x, y, name in zip(a, b, a._fields):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), name)
+
+
+class TestCaptureScanMulti:
+    def test_equals_sequential_reference(self):
+        spec = TableSpec("t", shape=(2,), capacity=16, engine="ring")
+        R, T, E = 3, 7, 2
+        got, carry = S.capture_scan_multi(
+            spec, S.init_table(spec), _mk_step_fn(), jnp.zeros((R,)), T, R, E)
+        _assert_state_equal(got, _sequential_ref(spec, R, T, E))
+        assert int(got.count) == S.capture_emit_count_multi(R, T, E)
+        np.testing.assert_array_equal(np.asarray(carry), np.full((R,), T))
+
+    def test_ring_wraparound(self):
+        """More emitted puts than capacity: the ring must hold exactly the
+        last ``capacity`` writes in sequential order."""
+        spec = TableSpec("t", shape=(2,), capacity=4, engine="ring")
+        R, T = 3, 5                       # 15 puts through a 4-slot ring
+        got, _ = S.capture_scan_multi(
+            spec, S.init_table(spec), _mk_step_fn(), jnp.zeros((R,)), T, R, 1)
+        _assert_state_equal(got, _sequential_ref(spec, R, T, 1))
+
+    def test_collision_ordering_ranks_exceed_capacity(self):
+        """R > capacity: one emitting step alone wraps the ring, so the
+        intra-batch last-writer-wins path must match R sequential puts."""
+        spec = TableSpec("t", shape=(2,), capacity=3, engine="ring")
+        R, T = 5, 2
+        got, _ = S.capture_scan_multi(
+            spec, S.init_table(spec), _mk_step_fn(), jnp.zeros((R,)), T, R, 1)
+        _assert_state_equal(got, _sequential_ref(spec, R, T, 1))
+
+    def test_per_rank_t0_staggering(self):
+        """Staggered per-rank clocks interleave distinct keys; the gate
+        runs on rank 0's clock."""
+        spec = TableSpec("t", shape=(2,), capacity=32, engine="ring")
+        R, T, E = 2, 6, 2
+        t0 = jnp.array([0, 100], jnp.int32)
+        got, _ = S.capture_scan_multi(
+            spec, S.init_table(spec), _mk_step_fn(), jnp.zeros((R,)), T, R,
+            E, t0=t0)
+        _assert_state_equal(got, _sequential_ref(spec, R, T, E,
+                                                 t0=np.array([0, 100])))
+        # rank 1's staggered keys are present under its own clock
+        v, found = S.get(spec, got, S.make_key(1, 102))
+        assert bool(found) and np.allclose(v, 1021.0)
+
+    def test_chunked_equals_whole(self):
+        """Chunked multi-producer capture (carrying t0 forward) ≡ one long
+        capture — the chunked driver's invariant."""
+        spec = TableSpec("t", shape=(2,), capacity=16, engine="ring")
+        R, E = 2, 3
+        step_fn = _mk_step_fn()
+        whole, _ = S.capture_scan_multi(
+            spec, S.init_table(spec), step_fn, jnp.zeros((R,)), 12, R, E)
+        chunked = S.init_table(spec)
+        carry = jnp.zeros((R,))
+        for base in (0, 6):
+            chunked, carry = S.capture_scan_multi(
+                spec, chunked, step_fn, carry, 6, R, E, t0=base)
+        _assert_state_equal(whole, chunked)
+
+    def test_single_rank_degenerates_to_capture_scan(self):
+        spec = TableSpec("t", shape=(2,), capacity=8, engine="ring")
+
+        def single(carry, t):
+            return carry + 1.0, S.make_key(0, t), \
+                jnp.full((2,), t.astype(jnp.float32) * 10.0)
+
+        a, _ = S.capture_scan(spec, S.init_table(spec), single,
+                              jnp.zeros(()), 6, 2)
+        b, _ = S.capture_scan_multi(spec, S.init_table(spec), _mk_step_fn(),
+                                    jnp.zeros((1,)), 6, 1, 2)
+        _assert_state_equal(a, b)
+
+
+class TestClientCaptureScan:
+    def test_commit_bumps_watermark_multi(self):
+        srv = StoreServer()
+        srv.create_table(TableSpec("f", shape=(2,), capacity=32,
+                                   engine="ring"))
+        client = Client(srv)
+        carry = client.capture_scan("f", _mk_step_fn(), jnp.zeros((3,)), 8,
+                                    emit_every=2, n_ranks=3)
+        want = S.capture_emit_count_multi(3, 8, 2)
+        assert srv.watermark("f") == want == srv.watermark_device("f")
+        np.testing.assert_array_equal(np.asarray(carry), np.full((3,), 8.0))
+
+    def test_chunked_driver_via_client(self):
+        """Two client chunks == one direct capture on the same key stream."""
+        spec = TableSpec("f", shape=(2,), capacity=16, engine="ring")
+        srv = StoreServer()
+        srv.create_table(spec)
+        client = Client(srv)
+        step_fn = _mk_step_fn()
+        carry = jnp.zeros((2,))
+        for base in (0, 4):
+            carry = client.capture_scan("f", step_fn, carry, 4,
+                                        emit_every=2, t0=base, n_ranks=2)
+        whole, _ = S.capture_scan_multi(
+            spec, S.init_table(spec), step_fn, jnp.zeros((2,)), 8, 2, 2)
+        got = srv.checkout("f")
+        _assert_state_equal(got, whole)
+        assert srv.watermark("f") == int(whole.count)
+
+    def test_single_producer_client_path(self):
+        srv = StoreServer()
+        srv.create_table(TableSpec("f", shape=(2,), capacity=8,
+                                   engine="ring"))
+        client = Client(srv)
+
+        def single(carry, t):
+            return carry, S.make_key(0, t), \
+                jnp.full((2,), t.astype(jnp.float32))
+
+        client.capture_scan("f", single, jnp.zeros(()), 5, emit_every=1)
+        assert srv.watermark("f") == 5 == srv.watermark_device("f")

@@ -134,6 +134,45 @@ def test_colocated_put_has_zero_collectives():
 
 
 @pytest.mark.slow
+def test_colocated_fused_put_path_collective_free():
+    """Extends the zero-collective proof to the FUSED tier: a whole
+    ``capture_scan`` chunk (k solver steps + k ring puts in one dispatch)
+    against a co-located slab-sharded table must also compile to zero
+    collectives — fusing the producer must not introduce any resharding."""
+    run_subprocess("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import store as S
+        from repro.core.store import TableSpec
+        from repro.analysis.hlo import assert_collective_free
+        from repro.launch.mesh import axis_types_kw
+        mesh = jax.make_mesh((8,), ("data",), **axis_types_kw(1))
+        spec = TableSpec("f", shape=(64, 128), capacity=4, engine="ring")
+        slab_sh = NamedSharding(mesh, P(None, "data", None))
+        state = S.init_table(spec, slab_sh)
+        elem_sh = NamedSharding(mesh, P("data", None))
+
+        def step_fn(carry, t):
+            # element dims carry the SAME sharding as the slab (co-located)
+            snap = jax.lax.with_sharding_constraint(
+                carry * (1.0 + t.astype(jnp.float32)), elem_sh)
+            return carry, S.make_key(0, t), snap
+
+        st_abs = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                           sharding=a.sharding), state)
+        carry = jax.ShapeDtypeStruct((64, 128), jnp.float32,
+                                     sharding=elem_sh)
+        lowered = jax.jit(
+            lambda st, c: S.capture_scan_impl(spec, st, step_fn, c, 8, 2),
+            donate_argnums=0).lower(st_abs, carry)
+        assert_collective_free(lowered.compile().as_text(),
+                               "co-located fused capture_scan")
+        print("FUSED_ZERO_COLLECTIVE_OK")
+    """, n_devices=8)
+
+
+@pytest.mark.slow
 def test_compressed_allreduce_matches_mean():
     run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np

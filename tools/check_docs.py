@@ -1,0 +1,125 @@
+"""Docs rot check: internal links resolve, code references import.
+
+Run from the repo root (CI docs job / tests/test_docs.py):
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Checks over ``README.md`` and ``docs/*.md``:
+
+1. every relative markdown link ``[text](path)`` points at an existing
+   file (external ``http``/``mailto`` links and pure anchors are skipped);
+2. every inline-code repo path (a backticked token containing ``/``)
+   exists on disk;
+3. every inline-code dotted reference into the package (``repro.x.y`` or
+   a known subpackage like ``ml.trainer.make_fused_epoch``) imports, and
+   trailing attributes resolve via ``getattr`` — so renaming an API
+   breaks the docs build, not the reader.
+"""
+
+from __future__ import annotations
+
+import importlib
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+#: first segments that implicitly root at ``repro.``
+_SUBPACKAGES = ("core", "ml", "sim", "parallel", "analysis", "launch",
+                "kernels", "train", "serve", "models", "configs", "data")
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_RE = re.compile(r"`([^`\n]+)`")
+_DOTTED_RE = re.compile(r"^[A-Za-z_][\w.]*$")
+
+
+def doc_files() -> list[Path]:
+    return [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+
+def check_links(path: Path, text: str, errors: list[str]) -> None:
+    for m in _LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:
+            continue
+        if not (path.parent / target).exists():
+            errors.append(f"{path.name}: broken link -> {target}")
+
+
+def _strip_fences(text: str) -> str:
+    """Remove fenced code blocks (their contents are examples, not
+    references — the inline-code checks below would false-positive on
+    shell flags and JSON)."""
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+def check_inline_code(path: Path, text: str, errors: list[str]) -> None:
+    for m in _CODE_RE.finditer(_strip_fences(text)):
+        token = m.group(1).split()[0] if m.group(1).split() else ""
+        if not token or any(c in token for c in "{}<>*$\"'"):
+            continue
+        if "/" in token:
+            if not (REPO / token).exists():
+                errors.append(f"{path.name}: missing repo path -> {token}")
+            continue
+        if "." in token and _DOTTED_RE.match(token):
+            root = token.split(".", 1)[0]
+            if root == "repro":
+                dotted = token
+            elif root in _SUBPACKAGES:
+                dotted = "repro." + token
+            else:
+                continue
+            err = _resolve_dotted(dotted)
+            if err:
+                errors.append(f"{path.name}: {err} (from `{token}`)")
+
+
+def _resolve_dotted(dotted: str) -> str | None:
+    """Import the longest module prefix of ``dotted``, then getattr the
+    rest.  Returns an error string or None."""
+    parts = dotted.split(".")
+    mod, idx = None, 0
+    for i in range(len(parts), 0, -1):
+        try:
+            mod = importlib.import_module(".".join(parts[:i]))
+            idx = i
+            break
+        except ImportError:
+            continue
+    if mod is None:
+        return f"cannot import any prefix of {dotted}"
+    obj = mod
+    for attr in parts[idx:]:
+        try:
+            obj = getattr(obj, attr)
+        except AttributeError:
+            return f"{'.'.join(parts[:idx])} has no attribute " \
+                   f"{'.'.join(parts[idx:])}"
+    return None
+
+
+def main() -> int:
+    errors: list[str] = []
+    for path in doc_files():
+        if not path.exists():
+            errors.append(f"missing doc file: {path.relative_to(REPO)}")
+            continue
+        text = path.read_text()
+        check_links(path, text, errors)
+        check_inline_code(path, text, errors)
+    if errors:
+        print("docs check FAILED:")
+        for e in errors:
+            print(" -", e)
+        return 1
+    print(f"docs check OK ({len(doc_files())} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
