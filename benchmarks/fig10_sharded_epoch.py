@@ -5,10 +5,11 @@ across nodes.  Our structural version: the trainer's whole epoch — store
 gather, normalization, mini-batch SGD with DDP gradient all-reduce, and
 validation — runs inside ONE ``shard_map`` over a ``data`` mesh axis
 (``ml.trainer.make_sharded_fused_epoch``), so dispatches/epoch stays O(1)
-at any mesh size.  This benchmark measures epochs/s and store
-dispatches/epoch for mesh sizes 1, 2, (4 with ``--full``), with the
-single-device fused tier as the mesh=1 baseline, and writes
-``BENCH_sharded_epoch.json``.
+at any mesh size.  This benchmark declares ONE ``InSituSession``
+(flat-plate producer + trainer) and runs it unmodified at mesh sizes 1,
+2, (4 with ``--full``) — the session plan resolves the fused tier at
+mesh 1 and the sharded-fused tier beyond — measuring epochs/s and store
+dispatches/epoch, and writes ``BENCH_sharded_epoch.json``.
 
 Each mesh size runs in a fresh subprocess: forcing multiple CPU devices
 (``--xla_force_host_platform_device_count``) must happen before the first
@@ -31,55 +32,49 @@ from pathlib import Path
 from .common import Row
 
 _CHILD = """
-    import json, sys, time
+    import json, sys
     import jax, jax.numpy as jnp
-    from repro.core import StoreServer, TableSpec
+    from repro.core import TableSpec
     from repro.core import store as S
+    from repro.insitu import InSituSession, Producer, TrainerConsumer
     from repro.ml import autoencoder as ae, trainer as tr
     from repro.parallel.sharding import data_mesh
     from repro.sim import flatplate as fp
-    from repro.train import optimizer as opt
 
     D, epochs = int(sys.argv[1]), int(sys.argv[2])
     fcfg = fp.FlatPlateConfig(nx=8, ny=8, nz=4)
     n = fcfg.n_points
-    srv = StoreServer()
-    srv.create_table(TableSpec("field", shape=(4, n), capacity=16,
-                               engine="ring"))
     key = jax.random.key(0)
-    for i in range(10):
-        srv.put("field", S.make_key(0, i), fp.snapshot(fcfg, key, i))
+
+    def step_fn(carry, rank, t):
+        return carry, S.make_key(rank, t), fp.snapshot(fcfg, key, t)
 
     aecfg = ae.AEConfig(n_points=n, mode="ref", latent=16, mlp_width=16)
-    cfg = tr.TrainerConfig(ae=aecfg, gather=6, batch_size=4, lr=1e-3,
-                           mesh=(data_mesh(D) if D > 1 else None))
-    levels = ae.coords_pyramid(aecfg, fp.grid_coords(fcfg))
-    tx = opt.adam(cfg.scaled_lr)
-    state = tr.init_state(cfg, jax.random.key(0), tx)
-    make = tr.make_sharded_fused_epoch if D > 1 else tr.make_fused_epoch
-    epoch_fn = make(cfg, levels, tx, srv.spec("field"))
-    mu, sd = jnp.zeros((4,)), jnp.ones((4,))
-
-    # warm the executable on a throwaway table (timed loop = dispatch only)
-    dummy = S.init_table(srv.spec("field"))
-    jax.block_until_ready(
-        epoch_fn(dummy, state, jax.random.key(0), mu, sd)[1])
-
-    rng = jax.random.key(1)
-    ops0 = srv.op_count
-    t0 = time.perf_counter()
-    for e in range(epochs):
-        rng, k = jax.random.split(rng)
-        with srv.capture("field") as txn:
-            state, metrics = epoch_fn(txn.state, state, k, mu, sd)
-        jax.block_until_ready(state.params)
-    wall = time.perf_counter() - t0
+    cfg = tr.TrainerConfig(ae=aecfg, epochs=epochs, gather=6, batch_size=4,
+                           lr=1e-3, mesh=(data_mesh(D) if D > 1 else None))
+    # the same declaration at every mesh size; the plan picks the tier
+    session = InSituSession(
+        tables=[TableSpec("field", shape=(4, n), capacity=16,
+                          engine="ring")],
+        components=[
+            Producer(step_fn, table="field", steps=10, carry=jnp.zeros(()),
+                     emit_every=1),
+            TrainerConsumer(cfg, fp.grid_coords(fcfg)),
+        ])
+    plan = session.plan()
+    res = session.run(plan=plan, sequential=True, max_wall_s=900)
+    assert res.ok, {k: v.error for k, v in res.run.components.items()}
+    out = res.output("trainer")
+    wall = res.run.timers.total("total_training")
     print(json.dumps({
         "mesh": D,
         "devices": len(jax.devices()),
+        "tier": plan.component("trainer").tier,
         "epochs_per_s": epochs / wall,
-        "dispatches_per_epoch": (srv.op_count - ops0) / epochs,
-        "train_loss": float(metrics[0]),
+        # measured store dispatches minus the one-off norm bootstrap
+        "dispatches_per_epoch":
+            (res.op_delta("trainer") - 1) / epochs,
+        "train_loss": out.history[-1].train_loss,
     }))
 """
 

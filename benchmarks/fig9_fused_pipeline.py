@@ -1,15 +1,16 @@
 """Fig. 9 (beyond-paper): per-verb vs fused in-situ pipeline.
 
-The paper's loose coupling pays one host dispatch per store verb.  The
-fused pipeline (``store.capture_scan`` on the producer side,
-``store.sample_and_step`` on the consumer side) folds k producer steps +
-ring puts — or a gather + the training microstep — into ONE dispatch.
-This benchmark measures both tiers doing *identical math* on identical
-tables and reports
+The paper's loose coupling pays one host dispatch per store verb; the
+fused tiers fold whole chunks of producer steps — or whole training
+epochs — into single dispatches.  This benchmark declares the SAME
+``InSituSession`` twice (a flat-plate producer + a QuadConv-autoencoder
+trainer) and forces it through the per-verb and fused points of the tier
+grid, reporting
 
-  * wall-clock steps/s (producer) and epochs/s (consumer), and
-  * store dispatches per step (from ``StoreServer.op_count`` — the
-    structural O(k) vs O(1) claim, counted, not asserted),
+  * producer steps/s and consumer epochs/s per tier, and
+  * store dispatches per step / per epoch, measured from the session's
+    per-component op deltas (the structural O(k)-vs-O(1) claim, counted
+    not asserted) and cross-checked against ``plan.explain()``,
 
 and writes the machine-readable result to ``BENCH_fused_pipeline.json``
 for the perf trajectory.
@@ -18,181 +19,118 @@ for the perf trajectory.
 from __future__ import annotations
 
 import json
-import time
 from pathlib import Path
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import StoreServer, TableSpec
+from repro.core import TableSpec
 from repro.core import store as S
+from repro.insitu import InSituSession, Producer, TrainerConsumer
+from repro.ml import autoencoder as ae
+from repro.ml import trainer as tr
+from repro.sim import flatplate as fp
 
 from .common import Row
 
-SHAPE = (4, 256)
-CAPACITY = 128
-GATHER = 8
+FCFG = fp.FlatPlateConfig(nx=8, ny=8, nz=4)
+CAPACITY = 24
+GATHER = 6
 BATCH = 4
 
 
-def _make_server() -> StoreServer:
-    srv = StoreServer()
-    srv.create_table(TableSpec("field", shape=SHAPE, capacity=CAPACITY,
-                               engine="ring"))
-    return srv
-
-
-def _snap(t):
-    """The stand-in solver step: cheap, so dispatch overhead dominates —
+def _step_fn(carry, rank, t):
+    """Cheap stand-in solver step, so dispatch overhead dominates —
     exactly the regime the fused pipeline targets."""
-    t = jnp.asarray(t, jnp.float32)
-    return jnp.full(SHAPE, 1.0, jnp.float32) * (1.0 + t)
+    snap = jnp.full((4, FCFG.n_points), 1.0, jnp.float32) \
+        * (1.0 + jnp.asarray(t, jnp.float32))
+    return carry, S.make_key(rank, t), snap
 
 
-_snap_jit = jax.jit(_snap)
+def _session(producer_tier: str, trainer_tier: str, steps: int,
+             epochs: int) -> InSituSession:
+    cfg = tr.TrainerConfig(
+        ae=ae.AEConfig(n_points=FCFG.n_points, mode="ref", latent=16,
+                       mlp_width=16),
+        epochs=epochs, gather=GATHER, batch_size=BATCH, lr=1e-3,
+        fused=(trainer_tier != "per_verb"))
+    return InSituSession(
+        tables=[TableSpec("field", shape=(4, FCFG.n_points),
+                          capacity=CAPACITY, engine="ring")],
+        components=[
+            Producer(_step_fn, table="field", steps=steps,
+                     carry=jnp.zeros(()), emit_every=1, tier=producer_tier),
+            TrainerConsumer(cfg, fp.grid_coords(FCFG), tier=trainer_tier),
+        ])
 
 
-def _step_fn(carry, t):
-    return carry, S.make_key(0, t), _snap(t)
-
-
-def _producer_per_verb(srv: StoreServer, steps: int, t0: int) -> None:
-    for t in range(t0, t0 + steps):
-        srv.put("field", S.make_key(0, t), _snap_jit(t))
-    jax.block_until_ready(srv.checkout("field").count)
-
-
-def _producer_fused(srv: StoreServer, spec, steps: int, t0: int) -> None:
-    with srv.capture("field") as txn:
-        txn.state, _ = S.capture_scan(spec, txn.state, _step_fn,
-                                      jnp.zeros(()), steps, 1, t0=t0)
-        txn.puts = steps
-    jax.block_until_ready(srv.checkout("field").count)
-
-
-def _micro(w, batch):
-    g = jax.grad(
-        lambda w: jnp.mean((batch.reshape(batch.shape[0], -1) @ w) ** 2))(w)
-    return w - 1e-3 * g
-
-
-_micro_jit = jax.jit(_micro)
-
-
-def _epoch_fn(w, values):
-    batches = values.reshape(GATHER // BATCH, BATCH, *SHAPE)
-
-    def body(w, b):
-        return _micro(w, b), jnp.zeros(())
-
-    w, _ = jax.lax.scan(body, w, batches)
-    return w, jnp.zeros(())
-
-
-def _consumer_per_verb(srv: StoreServer, w, rng):
-    vals, _, _ = srv.sample("field", rng, GATHER)
-    for i in range(GATHER // BATCH):
-        w = _micro_jit(w, vals[i * BATCH:(i + 1) * BATCH])
-    jax.block_until_ready(w)
-    return w
-
-
-def _consumer_fused(srv: StoreServer, spec, w, rng):
-    with srv.capture("field") as txn:
-        w, _, _ = S.sample_and_step(spec, txn.state, rng, GATHER,
-                                    _epoch_fn, w)
-    jax.block_until_ready(w)
-    return w
-
-
-def _bench(fn, reps: int):
-    times = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+def _measure(producer_tier: str, trainer_tier: str, steps: int,
+             epochs: int) -> dict:
+    session = _session(producer_tier, trainer_tier, steps, epochs)
+    plan = session.plan()
+    res = session.run(plan=plan, sequential=True, max_wall_s=1200)
+    assert res.ok, {k: v.error for k, v in res.run.components.items()
+                    if v.error}
+    t = res.run.timers
+    # producer cost = solver + send enqueue/commit (compile is bucketed
+    # separately); consumer cost = the trainer's epoch-loop wall.
+    prod_s = t.total("equation_solution") + t.total("send")
+    train_s = t.total("total_training")
+    d_prod = res.op_delta("producer")
+    d_train = res.op_delta("trainer")
+    explain = plan.explain()["components"]
+    assert d_prod == plan.component("producer").store_dispatches
+    assert d_train == plan.component("trainer").store_dispatches
+    n_batches = -(-(GATHER - 1) // BATCH)
+    host_per_epoch = 1.0 if trainer_tier != "per_verb" \
+        else 1 + 1 + n_batches + 1   # sample + prep + micros + validate
+    return {
+        "steps_per_s": steps / max(prod_s, 1e-9),
+        "epochs_per_s": epochs / max(train_s, 1e-9),
+        "dispatches_per_step": explain["producer"]["dispatches_per_step"],
+        # measured store dispatches, minus the one-off norm bootstrap
+        "store_dispatches_per_epoch": (d_train - 1) / epochs,
+        "host_dispatches_per_epoch": host_per_epoch,
+    }
 
 
 def run(quick: bool = True, json_path: str | None = None,
-        write_json: bool = True):
-    steps = 64 if quick else 256
-    reps = 5 if quick else 11
-    epochs = 8 if quick else 32
+        write_json: bool = True, smoke: bool = False):
+    if smoke:
+        steps, epochs = 32, 3
+    elif quick:
+        steps, epochs = 64, 8
+    else:
+        steps, epochs = 256, 24
 
-    # ---- producer: k per-verb puts vs one capture_scan -------------------
-    srv_v = _make_server()
-    srv_f = _make_server()
-    spec = srv_f.spec("field")
-    _producer_per_verb(srv_v, steps, 0)                       # warm/compile
-    _producer_fused(srv_f, spec, steps, 0)
-
-    # both tiers advance through the same t-stream so the tables stay
-    # identical for the consumer phase
-    clock_v = {"t": steps}
-    clock_f = {"t": steps}
-
-    def verb_run():
-        _producer_per_verb(srv_v, steps, clock_v["t"])
-        clock_v["t"] += steps
-
-    def fused_run():
-        _producer_fused(srv_f, spec, steps, clock_f["t"])
-        clock_f["t"] += steps
-
-    ops0 = srv_v.op_count
-    t_verb = _bench(verb_run, reps)
-    d_verb = (srv_v.op_count - ops0) / (reps * steps)
-
-    ops0 = srv_f.op_count
-    t_fused = _bench(fused_run, reps)
-    d_fused = (srv_f.op_count - ops0) / (reps * steps)
-
-    # ---- consumer: per-verb epoch vs fused sample_and_step ---------------
-    w0 = jnp.zeros((SHAPE[0] * SHAPE[1], 8), jnp.float32)
-    rng = jax.random.key(0)
-    _consumer_per_verb(srv_v, w0, rng)                        # warm/compile
-    _consumer_fused(srv_f, spec, w0, rng)
-
-    ops0 = srv_v.op_count
-    t0 = time.perf_counter()
-    w = w0
-    for e in range(epochs):
-        w = _consumer_per_verb(srv_v, w, jax.random.fold_in(rng, e))
-    t_epoch_verb = (time.perf_counter() - t0) / epochs
-    d_epoch_verb = (srv_v.op_count - ops0) / epochs
-
-    ops0 = srv_f.op_count
-    t0 = time.perf_counter()
-    w = w0
-    for e in range(epochs):
-        w = _consumer_fused(srv_f, spec, w, jax.random.fold_in(rng, e))
-    t_epoch_fused = (time.perf_counter() - t0) / epochs
-    d_epoch_fused = (srv_f.op_count - ops0) / epochs
+    verb = _measure("per_verb", "per_verb", steps, epochs)
+    fused = _measure("capture_scan", "fused", steps, epochs)
 
     result = {
         "bench": "fused_pipeline",
-        "steps_per_chunk": steps,
+        "api": "insitu_session",
+        "steps": steps,
+        "epochs": epochs,
         "producer": {
-            "per_verb": {"steps_per_s": steps / t_verb,
-                         "dispatches_per_step": d_verb},
-            "fused": {"steps_per_s": steps / t_fused,
-                      "dispatches_per_step": d_fused},
-            "speedup": t_verb / t_fused,
+            "per_verb": {"steps_per_s": verb["steps_per_s"],
+                         "dispatches_per_step":
+                             verb["dispatches_per_step"]},
+            "fused": {"steps_per_s": fused["steps_per_s"],
+                      "dispatches_per_step":
+                          fused["dispatches_per_step"]},
+            "speedup": fused["steps_per_s"] / verb["steps_per_s"],
         },
         "consumer": {
-            # store_dispatches: measured via op_count.  host_dispatches:
-            # store + SGD microsteps (the per-verb loop dispatches each
-            # mini-batch separately; the fused epoch is one dispatch).
-            "per_verb": {"epochs_per_s": 1.0 / t_epoch_verb,
-                         "store_dispatches_per_epoch": d_epoch_verb,
+            "per_verb": {"epochs_per_s": verb["epochs_per_s"],
+                         "store_dispatches_per_epoch":
+                             verb["store_dispatches_per_epoch"],
                          "host_dispatches_per_epoch":
-                             d_epoch_verb + GATHER // BATCH},
-            "fused": {"epochs_per_s": 1.0 / t_epoch_fused,
-                      "store_dispatches_per_epoch": d_epoch_fused,
-                      "host_dispatches_per_epoch": d_epoch_fused},
-            "speedup": t_epoch_verb / t_epoch_fused,
+                             verb["host_dispatches_per_epoch"]},
+            "fused": {"epochs_per_s": fused["epochs_per_s"],
+                      "store_dispatches_per_epoch":
+                          fused["store_dispatches_per_epoch"],
+                      "host_dispatches_per_epoch":
+                          fused["host_dispatches_per_epoch"]},
+            "speedup": fused["epochs_per_s"] / verb["epochs_per_s"],
         },
     }
     if write_json:
@@ -202,18 +140,26 @@ def run(quick: bool = True, json_path: str | None = None,
 
     prod, cons = result["producer"], result["consumer"]
     return [
-        Row("fig9/producer_per_verb", t_verb / steps * 1e6,
+        Row("fig9/producer_per_verb",
+            1e6 / prod["per_verb"]["steps_per_s"],
             f"steps_per_s={prod['per_verb']['steps_per_s']:.0f};"
-            f"dispatches_per_step={d_verb:.3f}"),
-        Row("fig9/producer_fused", t_fused / steps * 1e6,
+            f"dispatches_per_step="
+            f"{prod['per_verb']['dispatches_per_step']:.3f}"),
+        Row("fig9/producer_fused",
+            1e6 / prod["fused"]["steps_per_s"],
             f"steps_per_s={prod['fused']['steps_per_s']:.0f};"
-            f"dispatches_per_step={d_fused:.4f}"),
+            f"dispatches_per_step="
+            f"{prod['fused']['dispatches_per_step']:.4f}"),
         Row("fig9/producer_speedup", prod["speedup"] * 1e6,
             f"x={prod['speedup']:.2f}"),
-        Row("fig9/consumer_per_verb_epoch", t_epoch_verb * 1e6,
-            f"host_dispatches_per_epoch={d_epoch_verb + GATHER // BATCH:.2f}"),
-        Row("fig9/consumer_fused_epoch", t_epoch_fused * 1e6,
-            f"host_dispatches_per_epoch={d_epoch_fused:.2f}"),
+        Row("fig9/consumer_per_verb_epoch",
+            1e6 / cons["per_verb"]["epochs_per_s"],
+            f"host_dispatches_per_epoch="
+            f"{cons['per_verb']['host_dispatches_per_epoch']:.2f}"),
+        Row("fig9/consumer_fused_epoch",
+            1e6 / cons["fused"]["epochs_per_s"],
+            f"host_dispatches_per_epoch="
+            f"{cons['fused']['host_dispatches_per_epoch']:.2f}"),
         Row("fig9/consumer_speedup", cons["speedup"] * 1e6,
             f"x={cons['speedup']:.2f}"),
     ]

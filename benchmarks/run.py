@@ -2,7 +2,9 @@
 
 One function per paper table/figure; prints ``name,us_per_call,derived``
 CSV.  Default is the quick profile (CI-friendly); ``--full`` runs the
-paper-fidelity iteration counts.  ``--json`` additionally writes one
+paper-fidelity iteration counts; ``--smoke`` runs only the session-API
+pipeline bench (fig9) at minimal counts — the CI regression gate pairs it
+with ``tools/check_bench.py``.  ``--json`` additionally writes one
 ``BENCH_<name>.json`` per bench (rows + wall time) so the perf trajectory
 is machine-readable.
 """
@@ -19,6 +21,9 @@ from pathlib import Path
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal session-API run (fig9 only) for the CI "
+                         "bench gate")
     ap.add_argument("--json", action="store_true",
                     help="also write BENCH_<name>.json per bench")
     ap.add_argument("--json-dir", default=".",
@@ -26,6 +31,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (fig3,...,table12,roofline)")
     args = ap.parse_args()
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
     quick = not args.full
 
     from . import (fig3_store_budget, fig4_size_sweep, fig5_weak_scaling,
@@ -45,6 +52,8 @@ def main() -> None:
         "table12": table12_insitu_overhead.run,
         "roofline": roofline_table.run,
     }
+    if args.smoke:
+        benches = {k: v for k, v in benches.items() if k == "fig9"}
     if args.only:
         names = args.only.split(",")
         unknown = [n for n in names if n not in benches]
@@ -60,7 +69,7 @@ def main() -> None:
         # CWD.  (Standalone `python -m benchmarks.fig9_fused_pipeline` /
         # `... fig10_sharded_epoch` still writes them by default.)
         benches["fig9"] = (lambda quick: fig9_fused_pipeline.run(
-            quick=quick, write_json=args.json,
+            quick=quick, smoke=args.smoke, write_json=args.json,
             json_path=str(Path(args.json_dir)
                           / "BENCH_fused_pipeline.json")))
     if "fig10" in benches:

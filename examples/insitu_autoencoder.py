@@ -3,27 +3,33 @@ autoencoder from a live flow simulation, then in-situ inference.
 
 Run:  PYTHONPATH=src python examples/insitu_autoencoder.py [--epochs 150]
 
-This is the paper's headline experiment at laptop scale:
-  * producer: synthetic turbulent flat-plate snapshots (or --producer
-    spectral for the pseudo-spectral NS solver) on a wall-stretched
-    non-uniform grid, streamed to the co-located store every 2 steps;
-  * consumer: QuadConv autoencoder (2 blocks, 5-layer filter MLPs, latent
-    per --latent) trained with Adam/MSE on batches sampled from the store,
-    validation on one held-out tensor per epoch (paper protocol);
-  * after training: the encoder is registered in the store's model registry
-    and the simulation encodes subsequent snapshots at runtime — the
-    paper's "richer time history" use-case;
-  * prints the Tables-1/2-style overhead report and the convergence curve
-    (paper Fig. 10 analogue).
+This is the paper's headline experiment at laptop scale, as one
+declarative session (the ~10 lines below): a producer streaming synthetic
+turbulent flat-plate snapshots (or ``--producer spectral`` for the
+pseudo-spectral NS solver) into the co-located store, the QuadConv
+autoencoder trainer consuming them asynchronously, and an inference
+component encoding post-training snapshots with the freshly registered
+encoder (the paper's "richer time history" use-case).  The session's plan
+picks the fused tiers — chunked ``capture_scan`` producers, one-dispatch
+epochs — and prints the Tables-1/2-style overhead report.
 
 A few hundred epochs on the small grid takes a few minutes on CPU and the
-loss drops >10x; the paper's 2-orders-of-magnitude drop needs its 500-epoch
-/ 36M-element setup.
+loss drops >10x; the paper's 2-orders-of-magnitude drop needs its
+500-epoch / 36M-element setup.
 """
 
 import argparse
 
-from repro.launch.insitu import run
+import jax
+import jax.numpy as jnp
+
+from repro.core import TableSpec
+from repro.core.store import make_key
+from repro.insitu import InferenceConsumer, InSituSession, TrainerConsumer, \
+    Producer
+from repro.ml import autoencoder as ae
+from repro.ml import trainer as tr
+from repro.sim import flatplate as fp
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -34,5 +40,43 @@ if __name__ == "__main__":
                     default="flatplate")
     ap.add_argument("--points", choices=["small", "medium"], default="small")
     args = ap.parse_args()
-    run(epochs=args.epochs, sim_steps=args.sim_steps, latent=args.latent,
-        producer=args.producer, points=args.points)
+
+    if args.producer == "spectral" or args.points == "medium":
+        # the launcher knows how to build the fancier producers
+        from repro.launch.insitu import run
+        run(epochs=args.epochs, sim_steps=args.sim_steps,
+            latent=args.latent, producer=args.producer, points=args.points)
+        raise SystemExit(0)
+
+    fcfg = fp.FlatPlateConfig(nx=8, ny=8, nz=4)
+    cfg = tr.TrainerConfig(
+        ae=ae.AEConfig(n_points=fcfg.n_points, latent=args.latent,
+                       mlp_width=16, mode="ref"),
+        epochs=args.epochs, gather=6, batch_size=4, lr=1e-3)
+
+    def sim_step(carry, rank, t):
+        return carry, make_key(rank, t), fp.snapshot(fcfg,
+                                                     jax.random.key(0), t)
+
+    def feed(client, step):
+        mu, sd = client.get_metadata("norm_stats")
+        snap = fp.snapshot(fcfg, jax.random.key(0), args.sim_steps + step)
+        return (snap.T[None] - mu) / sd
+
+    session = InSituSession(
+        tables=[TableSpec("field", shape=(4, fcfg.n_points), capacity=24,
+                          engine="ring")],
+        components=[
+            Producer(sim_step, table="field", steps=args.sim_steps,
+                     carry=jnp.zeros(()), emit_every=2),
+            TrainerConsumer(cfg, fp.grid_coords(fcfg), model_key="encoder"),
+            InferenceConsumer("encoder", feed, steps=5),
+        ])
+    print(session.plan().describe(), "\n")
+    result = session.run(max_wall_s=3600, verbose=True)
+    assert result.ok, result.run.components
+    z = result.output("inference").last
+    cf = ae.compression_factor(cfg.ae)
+    print(f"\nin-situ inference: latent {z.shape}, compression {cf:.0f}x")
+    print("\n" + result.run.timers.table(
+        "In-situ component overheads (paper Tables 1-2 analogue)"))

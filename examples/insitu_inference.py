@@ -3,49 +3,56 @@ model through the store at runtime, staying agnostic of its structure.
 
 Run:  PYTHONPATH=src python examples/insitu_inference.py
 
-* Loads ResNet50 (the paper's benchmark model) into the ModelRegistry.
-* A reproducer loop emulates the solver: integrate (sleep) → send inference
-  data → run_model → retrieve predictions, every step.
-* Compares the paper's 3-step protocol against the in-line (LibTorch
-  analogue) call and our fused registry path, reproducing Fig. 7's
-  trade-off: the loosely-coupled path costs more per call, but the
-  integration is ~5 lines and framework-agnostic.
+* Loads ResNet50 (the paper's benchmark model) into the model registry.
+* Declares the same ``InferenceConsumer`` twice — once forced onto the
+  paper's three-step protocol (put → run_model → get, each one client
+  call through scratch tables), once on the fused registry tier — and
+  lets the session plan run each.
+* Compares both against the in-line (LibTorch analogue) call,
+  reproducing Fig. 7's trade-off: the loosely-coupled path costs more
+  per call, but the integration is ~5 lines and framework-agnostic.
 """
 
-import time
-
 import jax
-import jax.numpy as jnp
 
-from repro.core import Client, StoreServer, TableSpec
 from repro.core.telemetry import Timers
+from repro.insitu import InferenceConsumer, InSituSession
 from repro.ml.resnet import apply_resnet50, init_resnet50
-from repro.sim.reproducer import ReproducerConfig, run_inference
 
 BATCH = 2
+ITERS = 5
 
 print("initializing ResNet50 (paper's inference benchmark model)...")
 params = init_resnet50(jax.random.key(0))
-server = StoreServer()
-client = Client(server)
-client.set_model("resnet50", apply_resnet50, params)
-
 x = jax.random.normal(jax.random.key(1), (BATCH, 3, 224, 224))
-cfg = ReproducerConfig(n_ranks=1, iterations=5, warmup=1, compute_s=0.02)
+
+
+def run_tier(tier: str) -> Timers:
+    session = InSituSession(components=[
+        InferenceConsumer("resnet50", lambda client, step: x,
+                          steps=ITERS, wait_meta=None, tier=tier),
+    ])
+    # no trainer in this session: preload the model into the registry
+    result = session.run(max_wall_s=600, sequential=True,
+                         preload=lambda server: server.set_model(
+                             "resnet50", apply_resnet50, params))
+    assert result.ok, result.run.components
+    return result.run.timers
+
 
 print(f"\n-- three-step protocol (paper Fig. 1b), batch={BATCH} --")
-timers = run_inference(cfg, server, "resnet50", x, fused=False)
+timers = run_tier("three_step")
 print(timers.table())
 
 print("\n-- fused registry path (beyond-paper single dispatch) --")
-timers_fused = run_inference(cfg, server, "resnet50", x, fused=True)
+timers_fused = run_tier("fused_registry")
 print(timers_fused.table())
 
 print("\n-- in-line baseline (tightly-coupled LibTorch analogue) --")
 inline = jax.jit(apply_resnet50)
 t = Timers()
 jax.block_until_ready(inline(params, x))
-for _ in range(5):
+for _ in range(ITERS):
     with t.time("inline_eval") as box:
         box[0] = inline(params, x)
 print(t.table())

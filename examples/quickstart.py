@@ -1,69 +1,78 @@
-"""Quickstart: the in-situ coupling API in ~60 lines.
+"""Quickstart: the declarative in-situ coupling API in ~60 lines.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 
-Shows the four framework components from paper Fig. 1 — producer, consumer,
-in-memory TensorStore, Client — and both coupling modes:
-  * in-situ training data flow (send/sample through the store),
-  * in-situ inference (the 3-step put/run/get protocol + the fused path).
+The paper's pitch is that coupling simulation and ML is "a single call …
+each requiring a single line of code".  Here that call is an
+``InSituSession``: declare *what* runs (producer / trainer / inference
+components plus tables), ask the plan how it *will* run, then run it.
+The raw SmartRedis-style verbs remain available underneath for
+control-plane traffic (shown at the end).
 """
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import Client, InSituDriver, StoreServer, TableSpec
+from repro.core import Client, StoreServer, TableSpec
 from repro.core.store import make_key
+from repro.insitu import InSituSession, Producer, TrainerConsumer
+from repro.ml import autoencoder as ae
+from repro.ml import trainer as tr
+from repro.sim import flatplate as fp
 
-# --- 1. deploy the "database": a device-resident tensor store --------------
+# --- 1. declare the whole workflow: tables + components --------------------
+fcfg = fp.FlatPlateConfig(nx=8, ny=8, nz=4)
+
+
+def sim_step(carry, rank, t):
+    """One solver step: advance, return (carry, key, snapshot)."""
+    return carry, make_key(rank, t), fp.snapshot(fcfg, jax.random.key(0), t)
+
+
+cfg = tr.TrainerConfig(
+    ae=ae.AEConfig(n_points=fcfg.n_points, mode="ref", latent=16,
+                   mlp_width=16),
+    epochs=3, gather=6, batch_size=4, lr=1e-3)
+
+session = InSituSession(
+    tables=[TableSpec("field", shape=(4, fcfg.n_points), capacity=16,
+                      engine="ring")],
+    components=[
+        Producer(sim_step, table="field", steps=24, carry=jnp.zeros(()),
+                 emit_every=2),
+        TrainerConsumer(cfg, fp.grid_coords(fcfg), model_key="encoder"),
+    ])
+
+# --- 2. the plan says HOW it will run (tiers picked, dispatches predicted) -
+plan = session.plan()
+print(plan.describe())
+print("predicted store dispatches:", plan.store_dispatches)
+
+# --- 3. run it: producer thread + trainer thread, coupled via the store ----
+result = session.run(max_wall_s=300)
+assert result.ok, result.run.components
+trained = result.output("trainer")
+print(f"trained {trained.steps} epochs, "
+      f"final val relF {trained.history[-1].val_rel_error:.3f}")
+print("measured store dispatches:", result.server.stats()["op_count"])
+
+# --- 4. in-situ inference with the registered model ------------------------
+client = result.client()
+mu, sd = client.get_metadata("norm_stats")
+x = (fp.snapshot(fcfg, jax.random.key(0), 99).T[None] - mu) / sd
+z = client.infer("encoder", x)                  # fused: one dispatch
+print("encoded latent:", z.shape)
+
+# --- 5. the per-verb layer underneath (SmartRedis-style, for control plane)
 server = StoreServer()
-server.create_table(TableSpec("field", shape=(256,), capacity=8,
-                              engine="ring"))   # streaming snapshots
 server.create_table(TableSpec("named", shape=(4,), capacity=16,
-                              engine="hash"))   # named tensors
-
-# --- 2. a producer rank sends its per-step contribution --------------------
-sim = Client(server, rank=0)
-for step in range(12):
-    snapshot = jnp.sin(jnp.linspace(0, 3.14, 256) * (step + 1))
-    sim.send_step("field", step, snapshot)       # one line, like SmartRedis
-print("watermark after 12 sends:", sim.watermark("field"))
-
-# --- 3. a consumer rank samples a training batch ---------------------------
-ml = Client(server, rank=1)
-batch, keys, ok = ml.sample_batch("field", n=4, rng=jax.random.key(0))
-print("sampled batch:", batch.shape, "ok:", bool(ok))
-latest, _, _ = ml.latest_batch("field", n=2)
-print("two freshest snapshots, first values:", latest[:, 0])
-
-# --- 4. named tensors + metadata -------------------------------------------
+                              engine="hash"))
+sim, ml = Client(server, rank=0), Client(server, rank=1)
 sim.put_tensor("bc.inflow", jnp.array([1.0, 0.0, 0.0, 0.5]), table="named")
 val, found = ml.get_tensor("bc.inflow", table="named")
 print("named tensor roundtrip:", bool(found), val)
 sim.put_metadata("re_tau", 400.0)
 print("metadata:", ml.get_metadata("re_tau"))
 
-# --- 5. in-situ inference: the model lives in the store --------------------
-def tiny_model(params, x):
-    return jnp.tanh(x @ params["w"])
-
-ml.set_model("surrogate", tiny_model,
-             {"w": jax.random.normal(jax.random.key(1), (256, 8)) * 0.1})
-
-# paper's 3-step protocol (each step one call):
-server.create_table(TableSpec("infer_in", shape=(1, 256), capacity=2,
-                              engine="hash"))
-server.create_table(TableSpec("infer_out", shape=(1, 8), capacity=2,
-                              engine="hash"))
-x = snapshot[None]
-sim.put_tensor("x", x, table="infer_in")                       # 1) send
-sim.run_model("surrogate", inputs=["x"], outputs=["y"],
-              table="infer_in", out_table="infer_out")         # 2) evaluate
-y, _ = sim.get_tensor("y", table="infer_out")                  # 3) retrieve
-print("3-step inference:", y.shape)
-
-# fused fast path (beyond-paper: one dispatch, still model-agnostic):
-y2 = sim.infer("surrogate", x)
-print("fused inference matches:", bool(jnp.allclose(y, y2, atol=1e-6)))
-
 print("\ncomponent timers:")
-print(sim.timers.table())
+print(result.run.timers.table())

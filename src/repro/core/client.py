@@ -121,7 +121,8 @@ class Client:
             yield txn
 
     def capture_scan(self, table: str, step_fn, carry, length: int,
-                     emit_every: int = 1, t0=0, n_ranks: int | None = None):
+                     emit_every: int = 1, t0=0, n_ranks: int | None = None,
+                     bucket: bool = False):
         """Fold ``length`` producer steps + their ring puts into ONE
         dispatch under one table-lock round-trip (the fused producer tier).
 
@@ -137,22 +138,33 @@ class Client:
         is bumped by the exact static put count.  Returns the new carry
         (the dispatch is async — block on it or on a later read when
         ordering matters).
+
+        ``bucket=True`` pads the chunk to its power-of-two bucket
+        (``store.bucket_length``) with traced-masked no-op steps, so a
+        driver whose tail chunk is shorter than its body chunk reuses one
+        executable per (table, bucket) instead of compiling every distinct
+        tail length (the scan runs ``bucket_length(length)`` iterations;
+        only the first ``length`` advance the carry or the table).
         """
         spec = self.server.spec(table)
         t0_gate = int(jnp.reshape(jnp.asarray(t0), (-1,))[0]) \
             if not isinstance(t0, int) else t0
+        padded, valid = length, None
+        if bucket:
+            padded = S.bucket_length(length)
+            valid = jnp.asarray(length, jnp.int32)
         with self.timers.time("send"):
             with self.capture(table) as txn:
                 if n_ranks is None:
                     txn.state, carry = S.capture_scan(
-                        spec, txn.state, step_fn, carry, length, emit_every,
-                        t0=t0)
+                        spec, txn.state, step_fn, carry, padded, emit_every,
+                        t0=t0, valid=valid)
                     txn.puts = S.capture_emit_count(length, emit_every,
                                                     t0_gate)
                 else:
                     txn.state, carry = S.capture_scan_multi(
-                        spec, txn.state, step_fn, carry, length, n_ranks,
-                        emit_every, t0=t0)
+                        spec, txn.state, step_fn, carry, padded, n_ranks,
+                        emit_every, t0=t0, valid=valid)
                     txn.puts = S.capture_emit_count_multi(
                         n_ranks, length, emit_every, t0_gate)
         return carry

@@ -63,6 +63,13 @@ class ComponentResult:
     error: str | None = None
     straggler_events: int = 0
     wall_s: float = 0.0
+    #: whatever the component callable returned (an int is also recorded as
+    #: ``steps``; richer objects — e.g. the trainer's final state — ride
+    #: here so session callers can get results back without side channels).
+    output: Any = None
+    #: store dispatches attributable to this component (sequential runs
+    #: only — concurrent components interleave on one op counter).
+    op_delta: int | None = None
 
     @property
     def ok(self) -> bool:
@@ -78,6 +85,11 @@ class RunResult:
     @property
     def ok(self) -> bool:
         return all(c.ok for c in self.components.values())
+
+    @property
+    def outputs(self) -> dict[str, Any]:
+        """Per-component return values (``None`` for bare-int returns)."""
+        return {name: c.output for name, c in self.components.items()}
 
 
 class InSituDriver:
@@ -95,13 +107,21 @@ class InSituDriver:
         return Client(self.server, rank=rank)
 
     def run(self, components: dict[str, Callable[[Client, "threading.Event"], int]],
-            max_wall_s: float = 300.0, ranks: dict[str, int] | None = None
-            ) -> RunResult:
+            max_wall_s: float = 300.0, ranks: dict[str, int] | None = None,
+            sequential: bool = False) -> RunResult:
         """Run each component loop on its own thread.
 
-        A component is ``fn(client, stop_event) -> steps_completed``; it
-        should poll ``stop_event`` between steps.  ``ranks`` assigns each
-        component a client rank (default: enumeration order).
+        A component is ``fn(client, stop_event) -> steps_completed`` (or a
+        richer output object carrying a ``steps`` attribute — it lands in
+        ``ComponentResult.output``); it should poll ``stop_event`` between
+        steps.  ``ranks`` assigns each component a client rank (default:
+        enumeration order).
+
+        ``sequential=True`` runs the components one after another in
+        declaration order instead of concurrently — deterministic store-op
+        attribution (``ComponentResult.op_delta``) for benchmarks and the
+        plan-parity tests, and the natural mode for producer-then-train
+        offline workflows.  The wall budget covers the whole sequence.
         """
         ranks = ranks or {}
         stop = threading.Event()
@@ -113,12 +133,21 @@ class InSituDriver:
             def _run():
                 res = results[name]
                 t0 = time.perf_counter()
+                ops0 = self.server.op_count
                 try:
-                    res.steps = int(fn(clients[name], stop) or 0)
+                    out = fn(clients[name], stop)
+                    res.output = out
+                    if isinstance(out, (int, type(None))):
+                        res.steps = int(out or 0)
+                        res.output = None
+                    else:
+                        res.steps = int(getattr(out, "steps", 0) or 0)
                 except Exception:  # noqa: BLE001 — component isolation
                     res.error = traceback.format_exc()
                 finally:
                     res.wall_s = time.perf_counter() - t0
+                    if sequential:
+                        res.op_delta = self.server.op_count - ops0
             return _run
 
         for i, (name, fn) in enumerate(components.items()):
@@ -128,14 +157,22 @@ class InSituDriver:
                                             name=f"insitu-{name}", daemon=True))
 
         t0 = time.perf_counter()
-        for th in threads:
-            th.start()
         deadline = t0 + max_wall_s
-        for th in threads:
-            th.join(max(0.0, deadline - time.perf_counter()))
-        stop.set()
-        for th in threads:
-            th.join(timeout=30.0)
+        if sequential:
+            for th in threads:
+                th.start()
+                th.join(max(0.0, deadline - time.perf_counter()))
+                if th.is_alive():        # budget exhausted: stop the rest
+                    stop.set()
+                    th.join(timeout=30.0)
+        else:
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join(max(0.0, deadline - time.perf_counter()))
+            stop.set()
+            for th in threads:
+                th.join(timeout=30.0)
 
         timers = Timers()
         for name, cl in clients.items():

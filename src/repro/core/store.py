@@ -97,6 +97,7 @@ __all__ = [
     "capture_scan_multi",
     "capture_emit_count",
     "capture_emit_count_multi",
+    "bucket_length",
     "sample_and_step",
 ]
 
@@ -433,9 +434,25 @@ def valid_count(spec: TableSpec, state: TableState) -> jax.Array:
 # Fused producer/consumer steps (the in-situ capture fast path)
 # ---------------------------------------------------------------------------
 
+def bucket_length(length: int, min_bucket: int = 8) -> int:
+    """Round a chunk length up to the next power-of-two bucket.
+
+    Chunked ``capture_scan`` drivers compile one executable per distinct
+    static ``length``; a run whose tail chunk differs from the body chunk
+    therefore compiles twice (and sweeps over ``sim_steps`` compile once per
+    distinct tail).  Bucketing pads the tail to the nearest power of two
+    ``>= min_bucket`` and masks the padded steps with a traced ``valid``
+    count, so each (table, bucket) pair compiles exactly once.
+    """
+    if length < 1:
+        raise ValueError("length must be >= 1")
+    n = max(length, min_bucket)
+    return 1 << (n - 1).bit_length()
+
+
 def capture_scan_impl(spec: TableSpec, state: TableState,
                       step_fn: Callable, carry, length: int,
-                      emit_every: int = 1, t0=0):
+                      emit_every: int = 1, t0=0, valid=None):
     """Fold ``length`` producer steps and their puts into ONE dispatch.
 
     ``step_fn(carry, t) -> (carry, key, value)`` is the producer's
@@ -444,6 +461,11 @@ def capture_scan_impl(spec: TableSpec, state: TableState,
     ``t0 .. t0+length-1`` (``t0`` may be a traced array, so chunked drivers
     reuse one compiled executable across chunks).
 
+    ``valid`` (traced, defaults to ``length``) gates chunk-length bucketing:
+    scan iterations ``i >= valid`` are complete no-ops — neither the carry
+    nor the table advances — so a tail of any length can run under the
+    executable compiled for its power-of-two bucket (``bucket_length``).
+
     Emitted puts land in ring order exactly as the equivalent sequence of
     single ``put`` verbs would; if more than ``capacity`` steps emit within
     one call, slot collisions resolve **last-writer-wins** (the overwrite
@@ -451,10 +473,11 @@ def capture_scan_impl(spec: TableSpec, state: TableState,
 
     The multi-rank form is :func:`capture_scan_multi`.
 
-    Returns ``(state, carry)``.  The number of puts is static — use
-    ``capture_emit_count`` to bump the server's cached watermark on commit.
+    Returns ``(state, carry)``.  The number of puts is static given the
+    *valid* length — use ``capture_emit_count`` to bump the server's cached
+    watermark on commit.
     """
-    def body(sc, t):
+    def step(sc, t):
         st, c = sc
         c, key, value = step_fn(c, t)
         st = jax.lax.cond(
@@ -463,10 +486,22 @@ def capture_scan_impl(spec: TableSpec, state: TableState,
             lambda s: s,
             st,
         )
-        return (st, c), None
+        return st, c
 
     ts = jnp.asarray(t0, jnp.int32) + jnp.arange(length, dtype=jnp.int32)
-    (state, carry), _ = jax.lax.scan(body, (state, carry), ts)
+    if valid is None:
+        def body(sc, t):
+            return step(sc, t), None
+        xs = ts
+    else:
+        valid = jnp.asarray(valid, jnp.int32)
+
+        def body(sc, it):
+            i, t = it
+            return jax.lax.cond(i < valid, step, lambda sc, _t: sc, sc, t), \
+                None
+        xs = (jnp.arange(length, dtype=jnp.int32), ts)
+    (state, carry), _ = jax.lax.scan(body, (state, carry), xs)
     return state, carry
 
 
@@ -481,7 +516,8 @@ def capture_emit_count(length: int, emit_every: int = 1, t0: int = 0) -> int:
 
 def capture_scan_multi_impl(spec: TableSpec, state: TableState,
                             step_fn: Callable, carry, length: int,
-                            n_ranks: int, emit_every: int = 1, t0=0):
+                            n_ranks: int, emit_every: int = 1, t0=0,
+                            valid=None):
     """Multi-producer :func:`capture_scan`: ``n_ranks`` producers advance in
     lockstep for ``length`` steps inside ONE dispatch.
 
@@ -502,14 +538,17 @@ def capture_scan_multi_impl(spec: TableSpec, state: TableState,
     sequential per-verb ``put`` calls (including ring wrap-around and
     last-writer-wins slot collisions when ``R`` exceeds ``capacity``).
 
-    Returns ``(state, carry)``.  The put count is static — commit with
-    ``puts=capture_emit_count_multi(...)`` to keep the server's cached
-    watermark exact.
+    ``valid`` gates chunk-length bucketing exactly as in
+    :func:`capture_scan_impl`: iterations ``i >= valid`` advance nothing.
+
+    Returns ``(state, carry)``.  The put count is static given the valid
+    length — commit with ``puts=capture_emit_count_multi(...)`` to keep the
+    server's cached watermark exact.
     """
     ranks = jnp.arange(n_ranks, dtype=jnp.int32)
     t0_arr = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (n_ranks,))
 
-    def body(sc, i):
+    def step(sc, i):
         st, c = sc
         ts = t0_arr + i
         c, keys, values = jax.vmap(step_fn, in_axes=(0, 0, 0))(c, ranks, ts)
@@ -519,9 +558,18 @@ def capture_scan_multi_impl(spec: TableSpec, state: TableState,
             lambda s: s,
             st,
         )
-        return (st, c), None
+        return st, c
 
     steps = jnp.arange(length, dtype=jnp.int32)
+    if valid is None:
+        def body(sc, i):
+            return step(sc, i), None
+    else:
+        valid = jnp.asarray(valid, jnp.int32)
+
+        def body(sc, i):
+            return jax.lax.cond(i < valid, step, lambda sc, _i: sc, sc, i), \
+                None
     (state, carry), _ = jax.lax.scan(body, (state, carry), steps)
     return state, carry
 

@@ -1,0 +1,34 @@
+"""Declarative in-situ coupling sessions.
+
+Declare *what* runs (:class:`Producer`, :class:`TrainerConsumer`,
+:class:`InferenceConsumer` plus a ``Deployment``); the :class:`Plan`
+resolver picks *how* (per-verb vs fused captures, single vs multi-rank,
+single-device vs sharded / multi-consumer epochs) and predicts its
+dispatch and collective structure; :class:`InSituSession` runs it.
+
+The legacy entry points — ``ml.trainer.insitu_train``'s tier branching,
+``launch/insitu``'s hand-wired threads, the three epoch constructors —
+are thin shims over this path.
+"""
+
+from .components import (InferenceConsumer, InferenceOutput, Producer,
+                         ProducerOutput, TrainerConsumer, TrainerOutput)
+from .plan import (ComponentPlan, Plan, inference_tier, producer_tier,
+                   trainer_tier)
+from .session import InSituSession, SessionResult
+
+__all__ = [
+    "InSituSession",
+    "SessionResult",
+    "Producer",
+    "TrainerConsumer",
+    "InferenceConsumer",
+    "ProducerOutput",
+    "TrainerOutput",
+    "InferenceOutput",
+    "Plan",
+    "ComponentPlan",
+    "producer_tier",
+    "trainer_tier",
+    "inference_tier",
+]

@@ -1,0 +1,146 @@
+"""Declarative in-situ components: *what* runs, never *how*.
+
+The paper's pitch is that coupling a simulation to ML should be "a single
+call … each requiring a single line of code".  A component declaration is
+that line: it names the workload (a producer step function, a trainer
+config, a model key) and leaves every execution decision — per-verb vs
+fused capture, single vs multi-rank capture, single-device vs sharded
+epochs, device-slice assignment — to the session's :class:`~.plan.Plan`
+resolver.  The same declaration therefore runs unmodified across the full
+{colocated, clustered} x {per-verb, fused} x {1..R producers, 1..C
+consumers} scenario grid.
+
+Each component also has a typed ``*Output`` the session returns from
+``run()`` (``SessionResult.outputs``), so results flow back without side
+channels.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from ..ml.trainer import EpochResult, TrainerConfig, TrainState
+
+__all__ = [
+    "Producer", "TrainerConsumer", "InferenceConsumer",
+    "ProducerOutput", "TrainerOutput", "InferenceOutput",
+]
+
+
+@dataclass
+class Producer:
+    """A data-producing component (the paper's simulation ranks).
+
+    ``step_fn(carry, rank, t) -> (carry, key, value)`` is one rank's
+    single step: advance the solver carry, return the key/value to store
+    when step ``t`` emits.  With ``ranks > 1`` the carry pytree stacks the
+    per-rank states on a leading ``[ranks]`` axis and the plan picks the
+    multi-producer capture.  Mark ``traceable=False`` when the step cannot
+    be traced (e.g. an emulated solver that sleeps) — the plan then pins
+    the per-verb tier, calling ``step_fn`` eagerly with Python ints.
+    """
+
+    step_fn: Callable
+    table: str
+    steps: int
+    ranks: int = 1
+    carry: Any = None
+    emit_every: int = 1
+    traceable: bool = True
+    chunk: int | None = None      # fused chunk length (None: plan default)
+    bucket: bool = True           # pad tail chunks to their pow2 bucket
+    tier: str | None = None       # force a producer tier (see plan module)
+    warmup: bool = True           # pre-compile fused executables off-clock
+    name: str = "producer"
+
+    def __post_init__(self):
+        if self.steps < 1:
+            raise ValueError("steps must be >= 1")
+        if self.ranks < 1:
+            raise ValueError("ranks must be >= 1")
+        if self.emit_every < 1:
+            raise ValueError("emit_every must be >= 1")
+
+
+@dataclass
+class ProducerOutput:
+    steps: int
+
+
+@dataclass
+class TrainerConsumer:
+    """A training component (the paper's distributed ML ranks).
+
+    ``cfg`` carries the numerics (model, epochs, gather, batch, DDP wire);
+    the *tier* — per-verb, fused, sharded-fused — is resolved by the plan
+    from ``cfg`` unless forced via ``tier``.  ``count > 1`` declares
+    multi-consumer training: the plan splits the visible devices into
+    ``count`` disjoint mesh slices (``parallel.sharding.disjoint_data_meshes``),
+    one trainer replica per slice, all sharing the one store; replicas
+    offset ``cfg.seed`` by their index.  Set ``model_key`` to publish the
+    trained encoder into the model registry (plus a ``"trained"``
+    metadata flag) for downstream :class:`InferenceConsumer`\\ s.
+    """
+
+    cfg: TrainerConfig
+    coords: Any
+    count: int = 1
+    tier: str | None = None
+    model_key: str | None = None
+    on_epoch: Callable[[EpochResult], None] | None = None
+    name: str = "trainer"
+
+    def __post_init__(self):
+        if self.count < 1:
+            raise ValueError("count must be >= 1")
+        if self.count > 1 and self.cfg.mesh is not None:
+            raise ValueError(
+                "multi-consumer sessions own the device slicing: leave "
+                "cfg.mesh unset and let the plan assign disjoint slices")
+
+
+@dataclass
+class TrainerOutput:
+    steps: int
+    state: TrainState
+    history: list[EpochResult]
+    levels: Any
+    norm_stats: Any
+
+
+@dataclass
+class InferenceConsumer:
+    """An in-situ inference component (paper §3.2 / Fig. 1b).
+
+    Evaluates the registered model ``model_key`` on inputs produced by
+    ``feed(client, step)``.  The default tier is the fused registry call
+    (one dispatch, no store round-trip); forcing ``tier="three_step"``
+    runs the paper's put → run_model → get protocol through scratch
+    tables so each leg is measurable.  ``wait_meta`` blocks until a
+    metadata flag (a trainer's ``"trained"``) appears, which sequences
+    inference after training inside one concurrent session;
+    ``wait_timeout_s=None`` (default) waits as long as the session's
+    wall budget allows, so a long training run cannot starve it.
+    ``warmup`` runs one untimed model evaluation before the measured
+    loop (jit compile charged off-clock, like every other component).
+    """
+
+    model_key: str
+    feed: Callable
+    steps: int = 5
+    wait_meta: str | None = "trained"
+    wait_timeout_s: float | None = None
+    warmup: bool = True
+    tier: str | None = None
+    name: str = "inference"
+
+    def __post_init__(self):
+        if self.steps < 1:
+            raise ValueError("steps must be >= 1")
+
+
+@dataclass
+class InferenceOutput:
+    steps: int
+    last: Any

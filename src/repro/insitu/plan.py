@@ -1,0 +1,244 @@
+"""Plan: tier selection as *data*.
+
+Before this module, each layer of the stack picked its own fast path with
+local control flow — ``ml.trainer`` chose between three epoch
+constructors, ``core.client`` chose single vs multi-rank capture,
+``launch/insitu`` chose per-verb vs fused producers — the same decision
+tree duplicated in four files.  A :class:`Plan` freezes those decisions
+into one inspectable value: per component it records the chosen tier, the
+chunk/bucket policy, the mesh slice, and the *predicted* store dispatch
+count; ``explain()`` renders the whole thing (including compiled-HLO
+collective counts when the session resolved them), and the parity tests
+verify the predictions against ``StoreServer.stats()["op_count"]`` and
+``analysis/hlo`` ground truth.
+
+Tier names
+----------
+
+=============  =====================================================
+producer       ``per_verb`` | ``capture_scan`` | ``capture_scan_multi``
+trainer        ``per_verb`` | ``fused`` | ``sharded_fused``
+inference      ``fused_registry`` | ``three_step``
+=============  =====================================================
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+from ..core import store as S
+
+__all__ = [
+    "PRODUCER_TIERS", "TRAINER_TIERS", "INFERENCE_TIERS",
+    "producer_tier", "trainer_tier", "inference_tier",
+    "default_chunk", "ComponentPlan", "Plan",
+    "producer_dispatches", "trainer_dispatches", "inference_dispatches",
+]
+
+PRODUCER_TIERS = ("per_verb", "capture_scan", "capture_scan_multi")
+TRAINER_TIERS = ("per_verb", "fused", "sharded_fused")
+INFERENCE_TIERS = ("fused_registry", "three_step")
+
+
+def producer_tier(comp) -> str:
+    """Resolve a :class:`~.components.Producer`'s tier.
+
+    Forced tiers are validated; otherwise: non-traceable steps pin the
+    per-verb tier, traceable single-rank steps take ``capture_scan``,
+    multi-rank steps take ``capture_scan_multi``.
+    """
+    if comp.tier is not None:
+        if comp.tier not in PRODUCER_TIERS:
+            raise ValueError(f"unknown producer tier {comp.tier!r} "
+                             f"(have {PRODUCER_TIERS})")
+        if comp.tier != "per_verb" and not comp.traceable:
+            raise ValueError(f"tier {comp.tier!r} needs a traceable step_fn")
+        if comp.tier == "capture_scan" and comp.ranks > 1:
+            raise ValueError("capture_scan is single-rank; use "
+                             "capture_scan_multi or ranks=1")
+        if comp.tier == "capture_scan_multi" and comp.ranks == 1:
+            raise ValueError("capture_scan_multi needs ranks > 1")
+        return comp.tier
+    if not comp.traceable:
+        return "per_verb"
+    return "capture_scan" if comp.ranks == 1 else "capture_scan_multi"
+
+
+def trainer_tier(cfg, override: str | None = None) -> str:
+    """Resolve a trainer tier from a ``TrainerConfig`` (the rule
+    ``ml.trainer.insitu_train`` consults when no plan names one)."""
+    if override is not None:
+        if override not in TRAINER_TIERS:
+            raise ValueError(f"unknown trainer tier {override!r} "
+                             f"(have {TRAINER_TIERS})")
+        if override == "sharded_fused" and cfg.mesh is None:
+            raise ValueError("sharded_fused needs cfg.mesh")
+        if override != "sharded_fused" and cfg.mesh is not None:
+            raise ValueError(
+                f"cfg.mesh is set; tier {override!r} would ignore it")
+        if override != "per_verb" and not cfg.fused:
+            raise ValueError(f"tier {override!r} needs cfg.fused=True")
+        return override
+    if not cfg.fused:
+        return "per_verb"
+    return "sharded_fused" if cfg.mesh is not None else "fused"
+
+
+def inference_tier(comp) -> str:
+    if comp.tier is not None:
+        if comp.tier not in INFERENCE_TIERS:
+            raise ValueError(f"unknown inference tier {comp.tier!r} "
+                             f"(have {INFERENCE_TIERS})")
+        return comp.tier
+    return "fused_registry"
+
+
+def default_chunk(emit_every: int) -> int:
+    """The fused producer's default chunk length (steps per dispatch)."""
+    return max(8 * emit_every, 8)
+
+
+@dataclass(frozen=True)
+class ComponentPlan:
+    """One component's frozen execution decision."""
+
+    name: str
+    kind: str                    # "producer" | "trainer" | "inference"
+    tier: str
+    table: str | None = None
+    ranks: int = 1
+    steps: int = 0               # producer steps / trainer epochs / inf calls
+    chunk: int = 0               # fused producer: steps per dispatch
+    bucketed: bool = False
+    mesh_devices: int = 1        # sharded trainer: devices in its slice
+    #: predicted store dispatches this component will perform, by cause.
+    dispatches: tuple[tuple[str, int], ...] = ()
+    #: collective-op counts from compiled HLO of the component's hot path
+    #: (``None`` until the session resolved them with ``plan(hlo=True)``).
+    collectives: tuple[tuple[str, int], ...] | None = None
+
+    @property
+    def store_dispatches(self) -> int:
+        return sum(n for _, n in self.dispatches)
+
+    def explain(self) -> dict:
+        out: dict[str, Any] = {
+            "tier": self.tier,
+            "store_dispatches": self.store_dispatches,
+            "dispatch_detail": dict(self.dispatches),
+        }
+        if self.kind == "producer":
+            out["ranks"] = self.ranks
+            out["dispatches_per_step"] = \
+                self.store_dispatches / max(1, self.steps)
+            if self.tier != "per_verb":
+                out["chunk"] = self.chunk
+                out["bucketed"] = self.bucketed
+        if self.kind == "trainer":
+            d = dict(self.dispatches)
+            out["dispatches_per_epoch"] = \
+                d.get("epoch", 0) / max(1, self.steps)
+            out["mesh_devices"] = self.mesh_devices
+        if self.collectives is not None:
+            out["collectives"] = dict(self.collectives)
+        return out
+
+
+@dataclass(frozen=True)
+class Plan:
+    """The session's full execution decision, frozen.
+
+    ``components`` follow the session's declaration order (trainer
+    replicas expand to one entry each).  The dispatch predictions assume a
+    fresh store; sequential runs make them exact per component, while
+    concurrent multi-consumer runs may race the one-off norm-stats
+    bootstrap between replicas, shifting which replica pays it.
+    """
+
+    deployment: str
+    components: tuple[ComponentPlan, ...]
+
+    def __post_init__(self):
+        names = [c.name for c in self.components]
+        dups = {n for n in names if names.count(n) > 1}
+        if dups:
+            raise ValueError(
+                f"component names collide after normalization: "
+                f"{sorted(dups)} — rename the explicit components "
+                f"(count-expanded replicas claim '<name>0..<name>N-1')")
+
+    def component(self, name: str) -> ComponentPlan:
+        for c in self.components:
+            if c.name == name:
+                return c
+        raise KeyError(name)
+
+    @property
+    def store_dispatches(self) -> int:
+        """Predicted total store dispatches for one session run."""
+        return sum(c.store_dispatches for c in self.components)
+
+    def explain(self) -> dict:
+        """Chosen tiers, expected dispatch counts, and (when resolved)
+        compiled-HLO collective counts — the whole *how* as one dict."""
+        return {
+            "deployment": self.deployment,
+            "store_dispatches": self.store_dispatches,
+            "components": {c.name: c.explain() for c in self.components},
+        }
+
+    def describe(self) -> str:
+        """One line per component, for logs and reports."""
+        lines = [f"deployment: {self.deployment}"]
+        for c in self.components:
+            bits = [f"tier={c.tier}", f"dispatches={c.store_dispatches}"]
+            if c.kind == "producer":
+                bits.append(f"ranks={c.ranks}")
+                if c.tier != "per_verb":
+                    bits.append(f"chunk={c.chunk}"
+                                + ("+bucketed" if c.bucketed else ""))
+            if c.kind == "trainer" and c.mesh_devices > 1:
+                bits.append(f"mesh={c.mesh_devices}dev")
+            lines.append(f"  {c.name} [{c.kind}]: " + " ".join(bits))
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch predictions (used by the session's resolver)
+# ---------------------------------------------------------------------------
+
+def producer_dispatches(tier: str, steps: int, emit_every: int,
+                        ranks: int, chunk: int) -> tuple[tuple[str, int], ...]:
+    """Predicted store dispatches of a producer run, by cause.
+
+    Per-verb: one ``put`` per rank per emitting step.  Fused: one capture
+    per chunk (``ceil(steps / chunk)``) — bucketing pads executables, not
+    dispatches.
+    """
+    if tier == "per_verb":
+        return (("put", ranks * S.capture_emit_count(steps, emit_every)),)
+    return (("capture", -(-steps // chunk)),)
+
+
+def trainer_dispatches(tier: str, epochs: int, bootstrap: bool
+                       ) -> tuple[tuple[str, int], ...]:
+    """Predicted store dispatches of one trainer replica.
+
+    Every tier costs one store dispatch per epoch — a fused/sharded
+    capture, or the per-verb tier's single ``sample`` (its extra
+    per-mini-batch dispatches are host compute, not store ops) — plus the
+    one-off norm-stats bootstrap sample for the replica that pays it.
+    """
+    out = [("epoch", epochs)]
+    if bootstrap:
+        out.append(("norm_bootstrap", 1))
+    return tuple(out)
+
+
+def inference_dispatches(tier: str, steps: int) -> tuple[tuple[str, int], ...]:
+    """Fused registry calls never touch the store; the three-step protocol
+    costs put(1) + run_model's get-in/put-out(2) + get(1) per step."""
+    if tier == "fused_registry":
+        return ()
+    return (("three_step", 4 * steps),)

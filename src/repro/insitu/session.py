@@ -1,0 +1,489 @@
+"""InSituSession: one declarative call for every coupling scenario.
+
+The paper's driver program wires a database, a CFD simulation and a
+distributed trainer together with SmartSim; PR 1–2 grew beyond-paper fast
+paths (fused captures, sharded epochs) but left them reachable only
+through scattered constructors and per-script thread wiring.  A session
+collapses that surface: declare *what* runs —
+
+    session = InSituSession(
+        tables=[TableSpec("field", shape=(4, n), capacity=24)],
+        components=[
+            Producer(step_fn, table="field", steps=200, ranks=4),
+            TrainerConsumer(cfg, coords, model_key="encoder"),
+            InferenceConsumer("encoder", feed),
+        ],
+        deployment=Colocated(mesh),          # or Clustered(...) or None
+    )
+    plan = session.plan()                    # *how*: frozen, inspectable
+    print(plan.describe())
+    result = session.run()                   # threads, tiers, reports
+
+— and the :class:`~.plan.Plan` resolver picks *how*: per-verb vs
+``capture_scan`` vs ``capture_scan_multi`` producers, per-verb vs fused vs
+sharded-fused (incl. multi-consumer disjoint-mesh) trainers, fused vs
+three-step inference.  The same declaration runs unmodified at every
+point of the {colocated, clustered} x {per-verb, fused} x {1..R
+producers, 1..C consumers} grid; forcing a component's ``tier`` moves it
+through the grid for measurements and parity tests.
+
+``session.run(sequential=True)`` executes components in declaration order
+instead of concurrently — deterministic per-component dispatch accounting
+(``SessionResult`` exposes ``op_delta`` per component) for benchmarks and
+the plan-verification tests.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, replace as _dc_replace
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core import store as S
+from ..core.client import Client
+from ..core.deployment import Deployment
+from ..core.orchestrator import InSituDriver, RunResult, StragglerPolicy
+from ..core.server import StoreServer
+from ..ml import autoencoder as ae
+from ..ml import trainer as tr
+from ..parallel.sharding import disjoint_data_meshes
+from . import plan as P
+from .components import (InferenceConsumer, InferenceOutput, Producer,
+                         ProducerOutput, TrainerConsumer, TrainerOutput)
+
+__all__ = ["InSituSession", "SessionResult"]
+
+
+@dataclass
+class SessionResult:
+    """What a session run produced: the orchestrator's RunResult, the plan
+    it executed, the live server (for ``stats()`` checks and post-run
+    clients), and typed per-component outputs."""
+
+    run: RunResult
+    plan: P.Plan
+    server: StoreServer
+    driver: InSituDriver
+
+    @property
+    def ok(self) -> bool:
+        return self.run.ok
+
+    @property
+    def timers(self):
+        """Merged component timers (RunResult-compatible accessor — the
+        paper-table reports and table12 read them from here)."""
+        return self.run.timers
+
+    @property
+    def outputs(self) -> dict[str, Any]:
+        return self.run.outputs
+
+    def output(self, name: str):
+        return self.run.components[name].output
+
+    def op_delta(self, name: str) -> int | None:
+        """Store dispatches attributed to one component (sequential runs)."""
+        return self.run.components[name].op_delta
+
+    def client(self, rank: int = 99) -> Client:
+        return self.driver.client(rank=rank)
+
+
+class InSituSession:
+    """Declarative in-situ coupling session (see module docstring)."""
+
+    def __init__(self, components: Sequence[Any],
+                 tables: Sequence[S.TableSpec] = (),
+                 deployment: Deployment | None = None,
+                 straggler: StragglerPolicy | None = None):
+        if not components:
+            raise ValueError("a session needs at least one component")
+        self.tables = tuple(tables)
+        self.deployment = deployment
+        self.straggler = straggler
+        self.components = self._normalize(components)
+        table_names = {t.name for t in self.tables}
+        for comp in self.components:
+            if isinstance(comp, Producer) and comp.table not in table_names:
+                raise ValueError(f"producer {comp.name!r} targets unknown "
+                                 f"table {comp.table!r}")
+            if isinstance(comp, TrainerConsumer) \
+                    and comp.cfg.table not in table_names:
+                raise ValueError(f"trainer {comp.name!r} reads unknown "
+                                 f"table {comp.cfg.table!r}")
+
+    @staticmethod
+    def _normalize(components) -> tuple[Any, ...]:
+        """Give every component a unique name (suffix duplicates)."""
+        seen: dict[str, int] = {}
+        out = []
+        for comp in components:
+            name = comp.name
+            if name in seen or sum(c.name == name for c in components) > 1:
+                idx = seen.get(name, 0)
+                seen[name] = idx + 1
+                comp = _dc_replace(comp, name=f"{name}{idx}")
+            else:
+                seen[name] = 1
+            out.append(comp)
+        return tuple(out)
+
+    # -- plan resolution ----------------------------------------------------
+
+    def plan(self, hlo: bool = False) -> P.Plan:
+        """Resolve the frozen execution :class:`~.plan.Plan`.
+
+        ``hlo=True`` additionally compiles each component's hot path and
+        records its collective-op counts (``analysis/hlo``) in the plan —
+        the structural zero-collective / DDP-all-reduce predictions the
+        tests verify.  Compilation is not free; leave it off on the
+        run-only path (the executables warm at run time anyway).
+        """
+        entries: list[P.ComponentPlan] = []
+        first_trainer = True
+        for comp in self.components:
+            if isinstance(comp, Producer):
+                tier = P.producer_tier(comp)
+                chunk = comp.chunk or P.default_chunk(comp.emit_every)
+                entries.append(P.ComponentPlan(
+                    name=comp.name, kind="producer", tier=tier,
+                    table=comp.table, ranks=comp.ranks, steps=comp.steps,
+                    chunk=0 if tier == "per_verb" else chunk,
+                    bucketed=comp.bucket and tier != "per_verb",
+                    dispatches=P.producer_dispatches(
+                        tier, comp.steps, comp.emit_every, comp.ranks,
+                        chunk),
+                    collectives=self._producer_collectives(comp, tier, chunk)
+                    if hlo else None))
+            elif isinstance(comp, TrainerConsumer):
+                meshes = self._consumer_meshes(comp)
+                for i, mesh in enumerate(meshes):
+                    cfg = self._replica_cfg(comp, i, mesh)
+                    tier = P.trainer_tier(cfg, comp.tier)
+                    ndev = int(mesh.shape[cfg.mesh_axis]) \
+                        if mesh is not None else 1
+                    name = comp.name if comp.count == 1 \
+                        else f"{comp.name}{i}"
+                    entries.append(P.ComponentPlan(
+                        name=name, kind="trainer", tier=tier,
+                        table=cfg.table, steps=cfg.epochs,
+                        mesh_devices=ndev,
+                        dispatches=P.trainer_dispatches(
+                            tier, cfg.epochs, bootstrap=first_trainer),
+                        collectives=self._trainer_collectives(comp, cfg,
+                                                              tier)
+                        if hlo else None))
+                    first_trainer = False
+            elif isinstance(comp, InferenceConsumer):
+                tier = P.inference_tier(comp)
+                entries.append(P.ComponentPlan(
+                    name=comp.name, kind="inference", tier=tier,
+                    steps=comp.steps,
+                    dispatches=P.inference_dispatches(tier, comp.steps)))
+            else:
+                raise TypeError(f"unknown component type {type(comp)!r}")
+        dep = self.deployment.describe() if self.deployment is not None \
+            else "local"
+        return P.Plan(deployment=dep, components=tuple(entries))
+
+    def _consumer_meshes(self, comp: TrainerConsumer):
+        if comp.count == 1:
+            return [comp.cfg.mesh]
+        return disjoint_data_meshes(comp.count)
+
+    @staticmethod
+    def _replica_cfg(comp: TrainerConsumer, idx: int, mesh):
+        cfg = comp.cfg
+        if comp.count > 1:
+            cfg = _dc_replace(cfg, mesh=mesh, seed=cfg.seed + idx)
+        return cfg
+
+    def _spec(self, table: str) -> S.TableSpec:
+        for t in self.tables:
+            if t.name == table:
+                return t
+        raise KeyError(table)
+
+    # -- HLO collective accounting (plan(hlo=True)) -------------------------
+
+    def _producer_collectives(self, comp: Producer, tier: str, chunk: int):
+        """Compile one put / one capture chunk against the deployment's
+        slab sharding and count its collective ops."""
+        from ..analysis.hlo import COLLECTIVE_OPS, count_ops
+        spec = self._spec(comp.table)
+        sharding = self.deployment.slab_sharding(spec) \
+            if self.deployment is not None else None
+        state = S.init_table(spec, sharding)
+        if tier == "per_verb":
+            val = jnp.zeros(spec.shape, spec.dtype)
+            txt = jax.jit(lambda st: S.put_impl(
+                spec, st, jnp.uint32(1), val)).lower(state).compile()
+        elif tier == "capture_scan":
+            sf = _single_rank(comp.step_fn)
+            txt = jax.jit(lambda st, c: S.capture_scan_impl(
+                spec, st, sf, c, min(chunk, comp.steps),
+                comp.emit_every)).lower(state, comp.carry).compile()
+        else:
+            txt = jax.jit(lambda st, c: S.capture_scan_multi_impl(
+                spec, st, comp.step_fn, c, min(chunk, comp.steps),
+                comp.ranks, comp.emit_every)).lower(
+                    state, comp.carry).compile()
+        counts = count_ops(txt.as_text())
+        return tuple((op, counts.get(op, 0)) for op in COLLECTIVE_OPS)
+
+    def _trainer_collectives(self, comp: TrainerConsumer, cfg, tier: str):
+        """Compile one epoch of this replica's tier and count collectives
+        (the sharded tier must contain the DDP all-reduce; single-device
+        tiers must not)."""
+        from ..analysis.hlo import COLLECTIVE_OPS, count_ops
+        if tier == "per_verb":
+            return tuple((op, 0) for op in COLLECTIVE_OPS)
+        spec = self._spec(cfg.table)
+        levels = ae.coords_pyramid(cfg.ae, comp.coords)
+        tx = _opt_for(cfg)
+        state = tr.init_state(cfg, jax.random.key(cfg.seed), tx)
+        epoch_fn = tr.EPOCH_BUILDERS[tier](cfg, levels, tx, spec)
+        dummy = S.init_table(spec)
+        mu = jnp.zeros((spec.shape[0],))
+        txt = epoch_fn.lower(dummy, state, jax.random.key(0), mu,
+                             mu + 1.0).compile().as_text()
+        counts = count_ops(txt)
+        return tuple((op, counts.get(op, 0)) for op in COLLECTIVE_OPS)
+
+    # -- runtime ------------------------------------------------------------
+
+    def run(self, plan: P.Plan | None = None, max_wall_s: float = 300.0,
+            sequential: bool = False, verbose: bool = False,
+            preload: Callable[[StoreServer], None] | None = None
+            ) -> SessionResult:
+        """Execute the session: build the store (deployment + tables),
+        spin one thread per component, run them per ``plan``.
+
+        ``sequential=True`` runs components in declaration order instead
+        of concurrently (put producers first) — the mode for benchmarks,
+        offline produce-then-train flows, and exact per-component dispatch
+        attribution.  ``preload`` is called with the fresh server before
+        any component starts — stage pre-trained models or metadata there
+        (e.g. a pure-inference session registering its model).
+        """
+        plan = plan or self.plan()
+        driver = InSituDriver(deployment=self.deployment, tables=self.tables,
+                              straggler=self.straggler)
+        if preload is not None:
+            preload(driver.server)
+        fns: dict[str, Callable] = {}
+        entry_iter = iter(plan.components)
+
+        def take(kind: str) -> P.ComponentPlan:
+            entry = next(entry_iter, None)
+            if entry is None or entry.kind != kind:
+                raise ValueError(
+                    f"plan does not match this session's declaration "
+                    f"(expected a {kind!r} entry, got {entry})")
+            return entry
+
+        for comp in self.components:
+            if isinstance(comp, Producer):
+                entry = take("producer")
+                fns[entry.name] = self._producer_fn(comp, entry)
+            elif isinstance(comp, TrainerConsumer):
+                meshes = self._consumer_meshes(comp)
+                for i, mesh in enumerate(meshes):
+                    entry = take("trainer")
+                    cfg = self._replica_cfg(comp, i, mesh)
+                    fns[entry.name] = self._trainer_fn(comp, cfg, entry,
+                                                       verbose)
+            else:
+                entry = take("inference")
+                fns[entry.name] = self._inference_fn(comp, entry,
+                                                     max_wall_s)
+        res = driver.run(fns, max_wall_s=max_wall_s, sequential=sequential)
+        return SessionResult(run=res, plan=plan, server=driver.server,
+                             driver=driver)
+
+    # -- component runners --------------------------------------------------
+
+    def _producer_fn(self, comp: Producer, entry: P.ComponentPlan):
+        spec = self._spec(comp.table)
+
+        if entry.tier == "per_verb":
+            def fn(client: Client, stop):
+                carry, done = comp.carry, 0
+                for t in range(comp.steps):
+                    if stop.is_set():
+                        break
+                    emit = t % comp.emit_every == 0
+                    if comp.ranks == 1:
+                        # box[0] blocks on the solve INSIDE this bucket so
+                        # async dispatch is not mischarged to "send" (the
+                        # per-verb tier exists to measure these buckets).
+                        with client.timers.time("equation_solution") as box:
+                            carry, key, value = comp.step_fn(carry, 0, t)
+                            box[0] = value
+                        if emit:
+                            with client.timers.time("send", payload=value):
+                                client.server.put(comp.table, key, value)
+                    else:
+                        new, sends = [], []
+                        with client.timers.time("equation_solution") as box:
+                            for r in range(comp.ranks):
+                                # slice rank r out of the stacked carry
+                                c_r = jax.tree.map(lambda x: x[r], carry)
+                                c_r, key, value = comp.step_fn(c_r, r, t)
+                                new.append(c_r)
+                                sends.append((key, value))
+                            carry = jax.tree.map(
+                                lambda *xs: jnp.stack(xs), *new)
+                            box[0] = [v for _, v in sends]
+                        if emit:
+                            for key, value in sends:
+                                with client.timers.time("send",
+                                                        payload=value):
+                                    client.server.put(comp.table, key, value)
+                    done += 1
+                client.put_metadata("sim_done", True)
+                return ProducerOutput(steps=done)
+            return fn
+
+        single = entry.tier == "capture_scan"
+        step_fn = _single_rank(comp.step_fn) if single else comp.step_fn
+
+        def fn(client: Client, stop):
+            carry, done = comp.carry, 0
+            chunk = entry.chunk
+            if comp.warmup:
+                # Pre-compile every executable the chunked loop will need —
+                # one per (bucketed) chunk length — on a throwaway table so
+                # the timed loop measures enqueue + solve, not compilation.
+                lengths = {min(chunk, comp.steps - base)
+                           for base in range(0, comp.steps, chunk)}
+                with client.timers.time("jit_compile"):
+                    for k in sorted(lengths):
+                        padded, valid = (S.bucket_length(k),
+                                         jnp.asarray(k, jnp.int32)) \
+                            if entry.bucketed else (k, None)
+                        if single:
+                            wst, _ = S.capture_scan(
+                                spec, S.init_table(spec), step_fn, carry,
+                                padded, comp.emit_every, t0=0, valid=valid)
+                        else:
+                            wst, _ = S.capture_scan_multi(
+                                spec, S.init_table(spec), step_fn, carry,
+                                padded, comp.ranks, comp.emit_every, t0=0,
+                                valid=valid)
+                        jax.block_until_ready(wst.count)
+            for base in range(0, comp.steps, chunk):
+                if stop.is_set():
+                    break
+                k = min(chunk, comp.steps - base)
+                # The ring puts ride the solver dispatch (the point of the
+                # fused tier): the chunk is charged to equation_solution,
+                # "send" counts only enqueue + commit bookkeeping.
+                with client.timers.time("equation_solution") as box:
+                    carry = client.capture_scan(
+                        comp.table, step_fn, carry, k, comp.emit_every,
+                        t0=base, n_ranks=None if single else comp.ranks,
+                        bucket=entry.bucketed)
+                    box[0] = client.server.checkout(comp.table).count
+                done += k
+            client.put_metadata("sim_done", True)
+            return ProducerOutput(steps=done)
+        return fn
+
+    def _trainer_fn(self, comp: TrainerConsumer, cfg, entry: P.ComponentPlan,
+                    verbose: bool):
+        def fn(client: Client, stop):
+            on_epoch = comp.on_epoch
+            if on_epoch is None and verbose:
+                on_epoch = lambda r: print(         # noqa: E731
+                    f"  [{entry.name}] epoch {r.epoch:3d} "
+                    f"train {r.train_loss:.4f} val {r.val_loss:.4f} "
+                    f"relF {r.val_rel_error:.3f}")
+            state, history, levels, stats = tr.insitu_train(
+                client, comp.coords, cfg, stop_event=stop,
+                on_epoch=on_epoch, tier=entry.tier)
+            if comp.model_key is not None:
+                client.set_model(
+                    comp.model_key,
+                    lambda p, f: ae.encode(p, cfg.ae, levels, f),
+                    state.params)
+                client.put_metadata("trained", True)
+            return TrainerOutput(steps=len(history), state=state,
+                                 history=history, levels=levels,
+                                 norm_stats=stats)
+        return fn
+
+    def _inference_fn(self, comp: InferenceConsumer, entry: P.ComponentPlan,
+                      max_wall_s: float):
+        def fn(client: Client, stop):
+            if comp.wait_meta is not None:
+                # Wait in slices so a stopping session interrupts us; the
+                # default budget is the session's own wall budget (a long
+                # concurrent training run must not starve inference).
+                budget = comp.wait_timeout_s if comp.wait_timeout_s \
+                    is not None else max_wall_s
+                deadline = time.perf_counter() + budget
+                while client.get_metadata(comp.wait_meta,
+                                          timeout=0.5) is None:
+                    if stop.is_set():
+                        return InferenceOutput(steps=0, last=None)
+                    if time.perf_counter() >= deadline:
+                        raise TimeoutError(
+                            f"inference {comp.name!r}: metadata "
+                            f"{comp.wait_meta!r} never appeared "
+                            f"within {budget:.0f}s")
+            last, done, made_tables = None, 0, False
+            tin, tout = f"{comp.name}_in", f"{comp.name}_out"
+            if comp.warmup and comp.steps:
+                # one untimed eval: jit compile lands off-clock, so the
+                # timed model_eval bucket measures steady-state calls
+                x = comp.feed(client, 0)
+                jax.block_until_ready(
+                    client.server.run_model(comp.model_key, x))
+            for step in range(comp.steps):
+                if stop.is_set():
+                    break
+                x = comp.feed(client, step)
+                if entry.tier == "fused_registry":
+                    last = client.infer(comp.model_key, x)
+                else:
+                    if not made_tables:
+                        y0 = client.server.run_model(comp.model_key, x)
+                        client.server.create_table(S.TableSpec(
+                            tin, shape=tuple(x.shape), capacity=2,
+                            engine="hash"))
+                        client.server.create_table(S.TableSpec(
+                            tout, shape=tuple(jnp.asarray(y0).shape),
+                            capacity=2, engine="hash"))
+                        made_tables = True
+                    client.put_tensor("x", x, table=tin)
+                    client.run_model(comp.model_key, inputs=["x"],
+                                     outputs=["y"], table=tin,
+                                     out_table=tout)
+                    last, _ = client.get_tensor("y", table=tout)
+                done += 1
+            if last is not None:
+                jax.block_until_ready(last)
+            return InferenceOutput(steps=done, last=last)
+        return fn
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _single_rank(step_fn: Callable) -> Callable:
+    """Adapt the declarative (carry, rank, t) step to capture_scan's
+    single-producer (carry, t) form."""
+    def fn(carry, t):
+        return step_fn(carry, 0, t)
+    return fn
+
+
+def _opt_for(cfg):
+    from ..train import optimizer as opt
+    return opt.adam(cfg.scaled_lr)

@@ -1,24 +1,20 @@
 """In-situ driver launcher (the paper's §2.2 "driver program").
 
-``python -m repro.launch.insitu`` wires up the full paper workflow:
-a pseudo-spectral NS simulation (or the synthetic flat-plate generator)
-producing solution snapshots into the co-located TensorStore, and the
-QuadConv-autoencoder trainer consuming them asynchronously — then switches
-the simulation to in-situ *inference*, encoding subsequent snapshots with
-the freshly trained encoder at runtime (the paper's rich-time-history
-use-case).  Prints the paper-Tables-1/2-style overhead report.
+``python -m repro.launch.insitu`` wires up the full paper workflow as ONE
+declarative :class:`repro.insitu.InSituSession`: a pseudo-spectral NS
+simulation (or the synthetic flat-plate generator) producing solution
+snapshots into the co-located TensorStore, the QuadConv-autoencoder
+trainer consuming them asynchronously, and an in-situ *inference*
+component encoding subsequent snapshots with the freshly trained encoder
+(the paper's rich-time-history use-case).  Prints the resolved plan and
+the paper-Tables-1/2-style overhead report.
 
-Producer tiers: when the solver cost is emulated (``compute_s > 0``,
-paper-ratio benchmarks) the producer runs the paper-fidelity per-verb loop
-— one ``send_step`` dispatch per send.  Otherwise it runs the fused
-capture pipeline: ``store.capture_scan`` folds a whole chunk of solver
-steps *and* their ring puts into one dispatch under one table-lock
-round-trip (``Client.capture``), so the send cost is pure enqueue.  With
-``--producers R > 1`` the fused tier switches to the multi-producer form
-(``store.capture_scan_multi``): R simulation ranks advance in lockstep
-inside the same dispatch and interleave their snapshots into the ring
-each emitting step — the paper's n-sim-ranks-per-node topology with still
-O(1) dispatches per chunk.
+Tier selection lives in the session's plan, not here: an emulated solver
+cost (``compute_s > 0``, paper-ratio benchmarks) marks the producer
+non-traceable, which pins the paper-fidelity per-verb tier and the
+per-verb consumer; otherwise the plan picks the fused capture pipeline —
+``capture_scan`` (or ``capture_scan_multi`` with ``--producers R``) on
+the producer side and the fused one-dispatch epoch on the consumer side.
 """
 
 from __future__ import annotations
@@ -29,25 +25,73 @@ import time
 import jax
 import jax.numpy as jnp
 
-from ..core import Client, InSituDriver, StragglerPolicy, TableSpec
+from ..core import TableSpec
 from ..core import store as S
+from ..insitu import (InferenceConsumer, InSituSession, Producer,
+                      TrainerConsumer)
+from ..core.orchestrator import StragglerPolicy
 from ..ml import autoencoder as ae
 from ..ml import trainer as tr
 from ..sim import flatplate as fp
 from ..sim import spectral as sp
 
 
+def make_producer(*, sim_steps: int, producer: str, fcfg, ncfg,
+                  send_every: int, compute_s: float, seed: int,
+                  producers: int) -> Producer:
+    """Declare the simulation producer for the session.
+
+    With ``compute_s > 0`` the solver cost is emulated with a sleep —
+    untraceable, so the declaration carries ``traceable=False`` and the
+    plan pins the per-verb tier (one dispatch per send, each component in
+    its paper bucket).  Otherwise the step is pure JAX and the plan fuses
+    whole chunks of steps + ring puts into single dispatches.
+    """
+    key = jax.random.key(seed)
+    n_points = fcfg.n_points
+
+    def _fit_points(snap3):
+        # spectral grid 16^3=4096 points; re-tile to n_points
+        return snap3[:, :n_points] if snap3.shape[1] >= n_points \
+            else jnp.tile(snap3,
+                          (1, n_points // snap3.shape[1] + 1))[:, :n_points]
+
+    def step_fn(carry, rank, t):
+        if compute_s:
+            time.sleep(compute_s)          # per-verb tier only (eager)
+        if producer == "spectral":
+            carry = sp.step(ncfg, carry)
+            snap = _fit_points(sp.snapshot(ncfg, carry))
+        else:
+            snap = fp.snapshot(fcfg, jax.random.fold_in(key, rank), t)
+        return carry, S.make_key(rank, t), snap
+
+    if producer == "spectral":
+        if producers == 1:
+            carry = sp.random_turbulence(ncfg, key)
+        else:
+            carry = jax.vmap(lambda r: sp.random_turbulence(
+                ncfg, jax.random.fold_in(key, r)))(jnp.arange(producers))
+    else:
+        carry = jnp.zeros(()) if producers == 1 else jnp.zeros((producers,))
+
+    return Producer(step_fn, table="field", steps=sim_steps,
+                    ranks=producers, carry=carry, emit_every=send_every,
+                    traceable=(compute_s == 0))
+
+
 def run(epochs: int = 40, sim_steps: int = 200, points: str = "small",
         producer: str = "flatplate", send_every: int = 2,
         capacity: int = 24, gather: int = 6, latent: int = 16,
         lr: float = 1e-3, compute_s: float = 0.0, seed: int = 0,
-        producers: int = 1, verbose: bool = True):
+        producers: int = 1, consumers: int = 1, verbose: bool = True):
     """``compute_s``: emulated PDE-integration cost per step (the paper's
     reproducer sleeps to stand in for the solver; our synthetic producer
     costs ~9 ms/step vs PHASTA's ~500 s, so overhead *ratios* against the
-    solver need the emulation — the absolute send cost is measured
-    either way).  ``producers``: simulation ranks sharing the fused
-    capture (>1 requires the fused tier, i.e. ``compute_s == 0``)."""
+    solver need the emulation — the absolute send cost is measured either
+    way).  ``producers``/``consumers``: simulation ranks sharing the
+    fused capture / trainer replicas on disjoint mesh slices.
+    """
     if producers > 1 and compute_s:
         raise ValueError("multi-producer capture requires the fused tier "
                          "(compute_s == 0)")
@@ -59,161 +103,55 @@ def run(epochs: int = 40, sim_steps: int = 200, points: str = "small",
     n_points = fcfg.n_points
     ncfg = sp.NSConfig(n=16, nu=0.02, dt=0.01, forcing=True)
 
-    driver = InSituDriver(
+    cfg = tr.TrainerConfig(
+        ae=ae.AEConfig(n_points=n_points, latent=latent, mlp_width=16,
+                       mode="ref"),
+        epochs=epochs, gather=gather, batch_size=4, lr=lr,
+        # paper-comparison runs (emulated solver cost) measure the
+        # per-verb consumer so "retrieve" means what Table 2 means
+        fused=(compute_s == 0))
+
+    def feed(client, step):
+        """Encode post-training snapshots (the in-situ inference phase)."""
+        mu, sd = client.get_metadata("norm_stats")
+        snap = fp.snapshot(fcfg, jax.random.key(seed), sim_steps + step)
+        return (snap.T[None] - mu) / sd
+
+    n_inf = 5
+    session = InSituSession(
         tables=[TableSpec("field", shape=(4, n_points), capacity=capacity,
                           engine="ring")],
+        components=[
+            make_producer(sim_steps=sim_steps, producer=producer, fcfg=fcfg,
+                          ncfg=ncfg, send_every=send_every,
+                          compute_s=compute_s, seed=seed,
+                          producers=producers),
+            TrainerConsumer(cfg, coords, count=consumers,
+                            model_key="encoder"),
+            InferenceConsumer("encoder", feed, steps=n_inf,
+                              wait_meta="trained"),
+        ],
         straggler=StragglerPolicy(consumer_wait_s=30.0))
 
-    def _fit_points(snap3):
-        # spectral grid 16^3=4096 points; re-tile to n_points
-        return snap3[:, :n_points] if snap3.shape[1] >= n_points \
-            else jnp.tile(snap3, (1, n_points // snap3.shape[1] + 1))[:, :n_points]
+    plan = session.plan()
+    if verbose:
+        print(plan.describe(), "\n")
+    res = session.run(plan=plan, max_wall_s=3600, verbose=verbose)
 
-    def producer_fn(client: Client, stop):
-        """PHASTA stand-in: integrate, send every ``send_every`` steps."""
-        key = jax.random.key(seed)
-        if compute_s:
-            # -- per-verb tier: the sleep-emulated solver cannot be traced,
-            # and the paper's per-component send measurement wants one
-            # dispatch per send anyway.
-            if producer == "spectral":
-                state = sp.random_turbulence(ncfg, key)
-            steps = 0
-            for step in range(sim_steps):
-                if stop.is_set():
-                    break
-                with client.timers.time("equation_solution") as box:
-                    time.sleep(compute_s)
-                    if producer == "spectral":
-                        state = sp.step(ncfg, state)
-                        box[0] = state.uhat
-                    else:
-                        snap = fp.snapshot(fcfg, key, step)
-                        box[0] = snap
-                if step % send_every == 0:
-                    if producer == "spectral":
-                        snap = _fit_points(sp.snapshot(ncfg, state))
-                    client.send_step("field", step, snap)
-                steps += 1
-            client.put_metadata("sim_done", True)
-            return steps
-
-        # -- fused tier: capture_scan folds a chunk of solver steps + ring
-        # puts into ONE dispatch; t0 is traced so every full chunk reuses
-        # the same compiled executable.  producers > 1 uses the
-        # multi-producer form: R ranks advance in lockstep, all R
-        # snapshots interleave into the ring each emitting step.
-        spec = client.server.spec("field")
-        rank = client.rank
-        R = producers
-
-        def step_fn(carry, t):
-            if producer == "spectral":
-                carry = sp.step(ncfg, carry)
-                snap = _fit_points(sp.snapshot(ncfg, carry))
-            else:
-                snap = fp.snapshot(fcfg, key, t)
-            return carry, S.make_key(rank, t), snap
-
-        def step_fn_multi(carry_r, rnk, t):
-            if producer == "spectral":
-                carry_r = sp.step(ncfg, carry_r)
-                snap = _fit_points(sp.snapshot(ncfg, carry_r))
-            else:
-                snap = fp.snapshot(fcfg, jax.random.fold_in(key, rnk), t)
-            return carry_r, S.make_key(rnk, t), snap
-
-        if R == 1:
-            carry = sp.random_turbulence(ncfg, key) \
-                if producer == "spectral" else jnp.zeros(())
-        else:
-            carry = jax.vmap(lambda r: sp.random_turbulence(
-                ncfg, jax.random.fold_in(key, r)))(jnp.arange(R)) \
-                if producer == "spectral" else jnp.zeros((R,))
-        chunk = max(8 * send_every, 8)
-        # Warm the capture executable (every distinct chunk length — the
-        # tail chunk compiles separately since length is static) on a
-        # throwaway table so the timed chunks measure enqueue + solve,
-        # not compilation.
-        lengths = {min(chunk, sim_steps - base)
-                   for base in range(0, sim_steps, chunk)}
-        with client.timers.time("jit_compile"):
-            for wk in sorted(lengths):
-                if R == 1:
-                    wst, _ = S.capture_scan(spec, S.init_table(spec),
-                                            step_fn, carry, wk, send_every,
-                                            t0=0)
-                else:
-                    wst, _ = S.capture_scan_multi(
-                        spec, S.init_table(spec), step_fn_multi, carry, wk,
-                        R, send_every, t0=0)
-                jax.block_until_ready(wst.count)
-        steps = 0
-        srv = client.server
-        for base in range(0, sim_steps, chunk):
-            if stop.is_set():
-                break
-            k = min(chunk, sim_steps - base)
-            # The ring puts ride the solver dispatch (that is the point of
-            # the fused tier), so the chunk is charged to equation_solution
-            # and "send" counts only the enqueue + commit bookkeeping
-            # (Client.capture_scan times it into the send bucket).
-            with client.timers.time("equation_solution") as box:
-                carry = client.capture_scan(
-                    "field", step_fn if R == 1 else step_fn_multi, carry, k,
-                    send_every, t0=base, n_ranks=None if R == 1 else R)
-                box[0] = srv.checkout("field").count  # block on the chunk
-            steps += k
-        client.put_metadata("sim_done", True)
-        return steps
-
-    def consumer_fn(client: Client, stop):
-        cfg = tr.TrainerConfig(
-            ae=ae.AEConfig(n_points=n_points, latent=latent, mlp_width=16,
-                           mode="ref"),
-            epochs=epochs, gather=gather, batch_size=4, lr=lr,
-            # paper-comparison runs (emulated solver cost) measure the
-            # per-verb consumer so "retrieve" means what Table 2 means
-            fused=(compute_s == 0))
-        state, history, levels, stats = tr.insitu_train(
-            client, coords, cfg, stop_event=stop,
-            on_epoch=(lambda r: print(
-                f"  epoch {r.epoch:3d} train {r.train_loss:.4f} "
-                f"val {r.val_loss:.4f} relF {r.val_rel_error:.3f}"))
-            if verbose else None)
-        # register the trained encoder for in-situ inference
-        client.set_model(
-            "encoder",
-            lambda p, f: ae.encode(p, cfg.ae, levels, f),
-            state.params)
-        client.put_metadata("trained", True)
-        return len(history)
-
-    res = driver.run({"simulation": producer_fn, "training": consumer_fn},
-                     max_wall_s=3600)
-
-    # --- in-situ inference phase (paper: encode future snapshots) ---------
-    client = driver.client(rank=99)
-    mu, sd = client.get_metadata("norm_stats")
-    n_inf = 5
-    t_inf = []
-    for step in range(sim_steps, sim_steps + n_inf):
-        snap = fp.snapshot(fcfg, jax.random.key(seed), step)
-        x = ((snap.T[None] - mu) / sd)
-        t0 = time.perf_counter()
-        z = client.infer("encoder", x)
-        jax.block_until_ready(z)
-        t_inf.append(time.perf_counter() - t0)
-    cf = ae.compression_factor(tr.TrainerConfig(
-        ae=ae.AEConfig(n_points=n_points, latent=latent)).ae)
-    print(f"\nin-situ inference: latent {z.shape}, compression {cf:.0f}x, "
-          f"{min(t_inf)*1e3:.1f}ms/snapshot")
-    print("\n" + res.timers.table("In-situ component overheads "
-                                  "(paper Tables 1-2 analogue)"))
-    sol = res.timers.total("equation_solution")
-    send = res.timers.total("send")
-    tr_total = res.timers.total("total_training")
-    retr = res.timers.total("retrieve")
+    # --- report (paper Tables 1-2 analogue) -------------------------------
+    inf = res.output(plan.components[-1].name)
+    timers = res.run.timers
+    if inf is not None and inf.last is not None:
+        cf = ae.compression_factor(cfg.ae)
+        t_inf = timers.mean("model_eval") or 0.0
+        print(f"\nin-situ inference: latent {inf.last.shape}, "
+              f"compression {cf:.0f}x, {t_inf*1e3:.1f}ms/snapshot")
+    print("\n" + timers.table("In-situ component overheads "
+                              "(paper Tables 1-2 analogue)"))
+    sol = timers.total("equation_solution")
+    send = timers.total("send")
+    tr_total = timers.total("total_training")
+    retr = timers.total("retrieve")
     if sol:
         print(f"\nsend overhead / solver time: {100*send/sol:.2f}% "
               f"(paper: <<1%)")
@@ -232,10 +170,12 @@ def main() -> None:
     ap.add_argument("--points", choices=["small", "medium"], default="small")
     ap.add_argument("--producers", type=int, default=1,
                     help="simulation ranks sharing the fused capture")
+    ap.add_argument("--consumers", type=int, default=1,
+                    help="trainer replicas on disjoint mesh slices")
     args = ap.parse_args()
     run(epochs=args.epochs, sim_steps=args.sim_steps,
         producer=args.producer, points=args.points,
-        producers=args.producers)
+        producers=args.producers, consumers=args.consumers)
 
 
 if __name__ == "__main__":

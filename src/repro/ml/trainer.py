@@ -52,12 +52,13 @@ from jax.experimental.shard_map import shard_map
 
 from ..core import store as S
 from ..core.client import Client
-from ..parallel.compress import compressed_psum_mean
+from ..parallel.compress import compressed_psum_mean, compressed_psum_mean_ef
 from ..train import optimizer as opt
 from . import autoencoder as ae
 
 __all__ = ["TrainState", "TrainerConfig", "make_train_step",
-           "make_fused_epoch", "make_sharded_fused_epoch", "insitu_train",
+           "make_fused_epoch", "make_sharded_fused_epoch",
+           "make_per_verb_epoch", "EPOCH_BUILDERS", "insitu_train",
            "EpochResult"]
 
 
@@ -92,6 +93,11 @@ class TrainerConfig:
       all-reduce, bit-deterministic given fixed mesh) or ``"int8"``
       (``parallel.compress`` compressed all-reduce, ≈¼ the bytes, biased
       per step — validated to track the exact path in tests).
+    * ``ddp_error_feedback`` — for ``ddp="int8"``: thread the quantization
+      residual through the epoch scan's carry
+      (``parallel.compress.compressed_psum_mean_ef``) so the compressed
+      wire stops silently dropping what int8 rounded away.  Resets at each
+      epoch boundary (the carry is per-dispatch state).
     """
 
     ae: ae.AEConfig
@@ -108,6 +114,7 @@ class TrainerConfig:
     mesh: Any = None             # device mesh -> sharded fused epoch (DDP)
     mesh_axis: str = "data"      # mesh axis the batch shards over
     ddp: str = "psum"            # "psum" (exact) | "int8" (compressed wire)
+    ddp_error_feedback: bool = True   # int8: residual rides the scan carry
 
     def __post_init__(self):
         if self.ddp not in ("psum", "int8"):
@@ -214,6 +221,80 @@ def make_fused_epoch(cfg: TrainerConfig, levels,
     return epoch
 
 
+def make_per_verb_epoch(cfg: TrainerConfig, levels,
+                        tx: opt.GradientTransformation, spec: S.TableSpec):
+    """The paper-fidelity epoch: identical math to :func:`make_fused_epoch`
+    dispatched verb by verb.
+
+    One client ``sample_batch`` (a store dispatch), one jitted data-prep
+    dispatch, one jitted SGD dispatch per mini-batch, one validation
+    dispatch — each component measurable in its own paper Table-2 bucket.
+    The rng splits and the clipped equal-size mini-batch windows mirror
+    ``_epoch_data`` and the fused scan exactly, so the per-verb tier and
+    the fused tier train on bit-identical data in bit-identical order
+    (the plan/tier parity suite asserts the resulting ``TrainState``
+    matches bitwise).
+
+    Returns ``epoch(client, state, rng, mu, sd) ->
+    (state, (train_loss, val_loss, val_rel, ok))`` — the same metrics
+    tuple as the fused builders, but driven through a live ``Client``
+    instead of a checked-out table state.
+    """
+    n_train = max(cfg.gather - 1, 1)
+    bs = min(cfg.batch_size, n_train)
+    n_batches = -(-n_train // bs)
+    micro = jax.jit(_microstep_fn(cfg, levels, tx))
+
+    @jax.jit
+    def prep(vals, k_val, k_perm, mu, sd):
+        data = (vals.transpose(0, 2, 1) - mu) / sd          # [G, N, C]
+        val_idx = jax.random.randint(k_val, (), 0, cfg.gather)
+        val = jax.lax.dynamic_index_in_dim(data, val_idx, 0, keepdims=True)
+        if cfg.gather > 1:
+            tr_idx = (val_idx + 1 + jnp.arange(cfg.gather - 1)) % cfg.gather
+        else:
+            tr_idx = jnp.zeros((1,), jnp.int32)
+        train = data[tr_idx]
+        return train[jax.random.permutation(k_perm, n_train)], val
+
+    @jax.jit
+    def take_batch(train, s):
+        return jax.lax.dynamic_slice_in_dim(train, s, bs, 0)
+
+    @jax.jit
+    def validate(params, val):
+        rec = ae.reconstruct(params, cfg.ae, levels, val)
+        return jnp.mean(jnp.square(rec - val)), ae.rel_frobenius(val, rec)
+
+    starts = [min(i * bs, n_train - bs) for i in range(n_batches)]
+
+    def epoch(client: Client, state: TrainState, rng, mu, sd):
+        k_samp, k_val, k_perm = jax.random.split(rng, 3)
+        vals, _, ok = client.sample_batch(cfg.table, cfg.gather, k_samp)
+        train, val = prep(vals, k_val, k_perm, mu, sd)
+        losses = []
+        with client.timers.time("train"):
+            for s in starts:
+                state, loss = micro(state, take_batch(train, s))
+                losses.append(loss)
+            jax.block_until_ready(state.params)
+        val_loss, val_rel = validate(state.params, val)
+        return state, (jnp.mean(jnp.stack(losses)), val_loss, val_rel, ok)
+
+    def warmup(state, mu, sd):
+        """Pre-compile the per-verb dispatches on dummy data (no client,
+        no store ops) so the timed loop measures dispatch, not compile —
+        the same off-clock treatment the fused tiers get."""
+        vals = jnp.zeros((cfg.gather, *spec.shape), spec.dtype)
+        k = jax.random.key(0)
+        train, val = prep(vals, k, k, mu, sd)
+        s2, _ = micro(state, take_batch(train, starts[0]))
+        jax.block_until_ready(validate(s2.params, val))
+
+    epoch.warmup = warmup
+    return epoch
+
+
 def make_sharded_fused_epoch(cfg: TrainerConfig, levels,
                              tx: opt.GradientTransformation,
                              spec: S.TableSpec):
@@ -230,7 +311,9 @@ def make_sharded_fused_epoch(cfg: TrainerConfig, levels,
     * each SGD microstep slices the rank's ``batch_size/D`` mini-batch
       shard, takes the local mean-loss gradient, and all-reduces it —
       exact fp32 ``psum`` or the int8-compressed wire
-      (``parallel.compress.compressed_psum_mean``) per ``cfg.ddp``;
+      (``parallel.compress.compressed_psum_mean``) per ``cfg.ddp``; with
+      ``cfg.ddp_error_feedback`` the int8 quantization residual rides the
+      scan carry (``compressed_psum_mean_ef``) instead of being dropped;
     * optimizer state stays replicated: every rank applies the identical
       synced gradient, so no post-hoc parameter broadcast is needed.
 
@@ -256,17 +339,23 @@ def make_sharded_fused_epoch(cfg: TrainerConfig, levels,
     def loss_fn(params, batch):
         return ae.loss_fn(params, cfg.ae, levels, batch)
 
+    use_ef = cfg.ddp == "int8" and cfg.ddp_error_feedback
+
     def epoch_body(table_state: S.TableState, state: TrainState, rng,
                    mu, sd):
         train, val, ok = _epoch_data(cfg, spec, table_state, rng, mu, sd)
         starts = jnp.clip(jnp.arange(n_batches) * bs, 0, n_train - bs)
         ridx = jax.lax.axis_index(axis)
 
-        def body(ts, s):
+        def body(carry, s):
+            ts, resid = carry
             batch = jax.lax.dynamic_slice_in_dim(train, s, bs, 0)
             local = jax.lax.dynamic_slice_in_dim(batch, ridx * bl, bl, 0)
             loss_l, grads_l = jax.value_and_grad(loss_fn)(ts.params, local)
-            if cfg.ddp == "int8":
+            if use_ef:
+                grads, resid = compressed_psum_mean_ef(grads_l, resid,
+                                                       axis, ndev)
+            elif cfg.ddp == "int8":
                 grads = compressed_psum_mean(grads_l, axis, ndev)
             else:
                 grads = jax.tree.map(
@@ -274,9 +363,13 @@ def make_sharded_fused_epoch(cfg: TrainerConfig, levels,
             loss = jax.lax.psum(loss_l, axis) / ndev
             updates, opt_state = tx.update(grads, ts.opt_state, ts.params)
             params = opt.apply_updates(ts.params, updates)
-            return TrainState(params, opt_state, ts.step + 1), loss
+            return (TrainState(params, opt_state, ts.step + 1), resid), loss
 
-        state, losses = jax.lax.scan(body, state, starts)
+        # Error feedback is per-dispatch state: the residual starts at zero
+        # each epoch and lives only inside the scan carry.
+        resid0 = jax.tree.map(jnp.zeros_like, state.params) if use_ef \
+            else jnp.zeros(())
+        (state, _), losses = jax.lax.scan(body, (state, resid0), starts)
         # validation is replicated compute (identical on every rank)
         rec = ae.reconstruct(state.params, cfg.ae, levels, val)
         val_loss = jnp.mean(jnp.square(rec - val))
@@ -288,6 +381,16 @@ def make_sharded_fused_epoch(cfg: TrainerConfig, levels,
                         out_specs=(P(), P()),
                         check_rep=False)
     return jax.jit(sharded)
+
+
+#: Consumer tier -> epoch builder.  Tier *selection* is plan data
+#: (``repro.insitu.plan.trainer_tier``); this table is the only place the
+#: names meet code, so adding a tier is one entry, not another if-chain.
+EPOCH_BUILDERS: dict[str, Callable] = {
+    "fused": make_fused_epoch,
+    "sharded_fused": make_sharded_fused_epoch,
+    "per_verb": make_per_verb_epoch,
+}
 
 
 def _strong(x):
@@ -314,27 +417,34 @@ def _standardize_stats(batch: jax.Array):
 def insitu_train(client: Client, coords: jax.Array, cfg: TrainerConfig,
                  stop_event=None,
                  on_epoch: Callable[[EpochResult], None] | None = None,
-                 state: TrainState | None = None):
+                 state: TrainState | None = None, tier: str | None = None):
     """The consumer loop.  Returns (state, [EpochResult...], levels, stats).
+
+    This is the runtime behind ``repro.insitu.InSituSession``'s
+    ``TrainerConsumer`` (and the legacy direct entry point).  ``tier``
+    names the execution tier — ``"fused"`` / ``"sharded_fused"`` /
+    ``"per_verb"``, one key of :data:`EPOCH_BUILDERS`; when ``None`` it is
+    resolved from ``cfg`` by ``repro.insitu.plan.trainer_tier`` (the same
+    data-driven rule a session ``Plan`` records).  Every tier consumes the
+    epoch rng identically and trains on the identical data stream, so tier
+    choice is a deployment decision, not a numerics decision.
 
     The loop never blocks on the producer beyond ``wait_timeout_s``
     (straggler mitigation): it trains on whatever the store already holds.
-    With ``cfg.fused`` (default) each epoch is one fused dispatch against
-    the checked-out table state — sharded over ``cfg.mesh`` with DDP
-    gradient sync when a mesh is configured; ``fused=False`` keeps the
-    paper's per-verb loop.
     """
+    if tier is None:
+        from ..insitu.plan import trainer_tier
+        tier = trainer_tier(cfg)
+    if tier not in EPOCH_BUILDERS:
+        raise ValueError(f"unknown trainer tier {tier!r} "
+                         f"(have {sorted(EPOCH_BUILDERS)})")
     levels = ae.coords_pyramid(cfg.ae, coords)
     tx = opt.adam(cfg.scaled_lr)
     if state is None:
         state = init_state(cfg, jax.random.key(cfg.seed), tx)
-    train_step = None if cfg.fused else make_train_step(cfg, levels, tx)
-    if cfg.fused:
-        make_epoch = make_sharded_fused_epoch if cfg.mesh is not None \
-            else make_fused_epoch
-        epoch_fn = make_epoch(cfg, levels, tx, client.server.spec(cfg.table))
-    else:
-        epoch_fn = None
+    epoch_fn = EPOCH_BUILDERS[tier](cfg, levels, tx,
+                                    client.server.spec(cfg.table))
+    fused = tier != "per_verb"
     rng = jax.random.key(cfg.seed + 1)
 
     # Paper: "the ML workload must query the database multiple times while
@@ -353,7 +463,7 @@ def insitu_train(client: Client, coords: jax.Array, cfg: TrainerConfig,
         mu_sd = (mu, sd)
     mu, sd = mu_sd
 
-    if cfg.fused:
+    if fused:
         # Warm the fused-epoch executable on a throwaway empty table so the
         # timed loop measures dispatch, not compilation (charged to its own
         # component bucket, like the paper's one-off model-load cost).
@@ -361,15 +471,19 @@ def insitu_train(client: Client, coords: jax.Array, cfg: TrainerConfig,
             dummy = S.init_table(client.server.spec(cfg.table))
             jax.block_until_ready(
                 epoch_fn(dummy, state, jax.random.key(0), mu, sd)[1])
+    else:
+        # The per-verb tier gets the same off-clock compile treatment.
+        with client.timers.time("jit_compile"):
+            epoch_fn.warmup(state, mu, sd)
 
     history: list[EpochResult] = []
     epoch_timer_start = time.perf_counter()
     for epoch in range(cfg.epochs):
         if stop_event is not None and stop_event.is_set():
             break
-        if cfg.fused:
+        rng, k_ep = jax.random.split(rng)
+        if fused:
             # --- fused: ONE dispatch for gather + SGD + validation --------
-            rng, k_ep = jax.random.split(rng)
             with client.timers.time("retrieve"):
                 # Enqueue-only under the table lock (orders the read against
                 # donating producer puts); blocking happens below.
@@ -377,41 +491,13 @@ def insitu_train(client: Client, coords: jax.Array, cfg: TrainerConfig,
                     state, metrics = epoch_fn(txn.state, state, k_ep, mu, sd)
             with client.timers.time("train"):
                 jax.block_until_ready(state.params)
-            train_loss_t, val_loss_t, val_err_t, _ok = metrics
-            train_loss = float(train_loss_t)
-            val_loss = float(val_loss_t)
-            val_err = float(val_err_t)
         else:
-            rng, k_samp, k_val, k_perm = jax.random.split(rng, 4)
-            # --- gather (paper: "6 arrays of training data are gathered and
-            # concatenated before the distributed … optimization is applied")
-            vals, keys, ok = client.sample_batch(cfg.table, cfg.gather,
-                                                 k_samp)
-            data = (vals.transpose(0, 2, 1) - mu) / sd   # [G, N, C]
-            # --- hold one tensor out at random for validation (paper §4)
-            val_idx = jax.random.randint(k_val, (), 0, cfg.gather)
-            val = data[val_idx][None]
-            mask = jnp.arange(cfg.gather) != val_idx
-            train = data[mask]
-
-            # --- mini-batch SGD over the gathered tensors
-            n = train.shape[0]
-            perm = jax.random.permutation(k_perm, n)
-            train = train[perm]
-            losses = []
-            with client.timers.time("train"):
-                for lo in range(0, n, cfg.batch_size):
-                    batch = train[lo: lo + cfg.batch_size]
-                    state, loss = train_step(state, batch)
-                    losses.append(loss)
-                jax.block_until_ready(state.params)
-            train_loss = float(jnp.mean(jnp.stack(losses)))
-
-            rec = ae.reconstruct(state.params, cfg.ae, levels, val)
-            val_loss = float(jnp.mean(jnp.square(rec - val)))
-            val_err = float(ae.rel_frobenius(val, rec))
-        res = EpochResult(epoch=epoch, train_loss=train_loss,
-                          val_loss=val_loss, val_rel_error=val_err,
+            # --- per-verb: same math, one dispatch per component ----------
+            state, metrics = epoch_fn(client, state, k_ep, mu, sd)
+        train_loss_t, val_loss_t, val_err_t, _ok = metrics
+        res = EpochResult(epoch=epoch, train_loss=float(train_loss_t),
+                          val_loss=float(val_loss_t),
+                          val_rel_error=float(val_err_t),
                           watermark=client.watermark(cfg.table))
         history.append(res)
         if on_epoch is not None:

@@ -28,8 +28,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 __all__ = ["quantize_int8", "dequantize_int8", "ErrorFeedback",
-           "compressed_psum_mean", "compressed_allreduce",
-           "compression_ratio"]
+           "compressed_psum_mean", "compressed_psum_mean_ef",
+           "compressed_allreduce", "compression_ratio"]
 
 
 class QTensor(NamedTuple):
@@ -81,29 +81,62 @@ class ErrorFeedback:
         return qts, deq
 
 
+def _wire_psum_mean(g: jax.Array, axis: str, n_ranks: int, block: int
+                    ) -> tuple[jax.Array, QTensor]:
+    """The int8 wire for one leaf: quantize the local value, ``psum`` the
+    int8 payload in int32 (no overflow for ≤2^23 ranks), dequantize with
+    the rank-mean scale.  Returns ``(mean, local QTensor)`` so callers
+    can also reconstruct their own contribution (error feedback)."""
+    qt = quantize_int8(g, block)
+    qsum = jax.lax.psum(qt.q.astype(jnp.int32), axis)
+    # per-rank scales differ; dequantize with the mean scale and let
+    # error feedback absorb the residual bias.
+    smean = jax.lax.psum(qt.scale, axis) / n_ranks
+    mean = (qsum.astype(jnp.float32) * smean) / n_ranks
+    return mean.reshape(-1)[: g.size].reshape(g.shape).astype(g.dtype), qt
+
+
 def compressed_psum_mean(grads: Any, axis: str, n_ranks: int,
                          block: int = 256) -> Any:
     """int8-wire mean-all-reduce of a *local* gradient pytree.
 
     Call inside a ``shard_map``/``pmap`` body over the named mesh axis
-    ``axis`` (of size ``n_ranks``): each rank quantizes its local gradient,
-    int8 payloads are summed via ``psum`` in int32 (no overflow for ≤2^23
-    ranks), and the result is dequantized with the rank-mean scale — the
-    wire traffic is ≈ ¼ of an fp32 all-reduce.  Per-step bias from the
-    shared scale is absorbed by :class:`ErrorFeedback` when convergence
-    parity matters; the sharded fused epoch exposes it as the
+    ``axis`` (of size ``n_ranks``): each rank quantizes its local
+    gradient and the payloads meet on the wire (see
+    :func:`_wire_psum_mean`) — the traffic is ≈ ¼ of an fp32 all-reduce.
+    Per-step bias from the shared scale is absorbed by
+    :class:`ErrorFeedback` / :func:`compressed_psum_mean_ef` when
+    convergence parity matters; the sharded fused epoch exposes it as the
     ``ddp="int8"`` knob.
     """
-    def _one(g):
-        qt = quantize_int8(g, block)
-        qsum = jax.lax.psum(qt.q.astype(jnp.int32), axis)
-        # per-rank scales differ; dequantize with the mean scale and let
-        # error feedback absorb the residual bias.
-        smean = jax.lax.psum(qt.scale, axis) / n_ranks
-        mean = (qsum.astype(jnp.float32) * smean) / n_ranks
-        return mean.reshape(-1)[: g.size].reshape(g.shape).astype(g.dtype)
+    return jax.tree.map(
+        lambda g: _wire_psum_mean(g, axis, n_ranks, block)[0], grads)
 
-    return jax.tree.map(_one, grads)
+
+def compressed_psum_mean_ef(grads: Any, residuals: Any, axis: str,
+                            n_ranks: int, block: int = 256
+                            ) -> tuple[Any, Any]:
+    """:func:`compressed_psum_mean` with error feedback in the carry.
+
+    The host-side :class:`ErrorFeedback` cannot ride a fused epoch — its
+    residual lives outside the jit.  This is the traceable form: the
+    caller threads ``residuals`` (same pytree as ``grads``, zeros at epoch
+    start) through its ``lax.scan`` carry.  Each rank adds its residual to
+    the local gradient *before* quantizing, and the new residual is the
+    part of the compensated gradient its own int8 contribution dropped —
+    so the compressed wire no longer silently discards quantization error
+    step after step.  Returns ``(mean_grads, new_residuals)``.
+    """
+    def _one(g, r):
+        comp = g + r.astype(g.dtype)
+        mean, qt = _wire_psum_mean(comp, axis, n_ranks, block)
+        return mean, comp - dequantize_int8(qt, g.shape, g.dtype)
+
+    leaves_g, tdef = jax.tree.flatten(grads)
+    leaves_r = jax.tree.leaves(residuals)
+    outs = [_one(g, r) for g, r in zip(leaves_g, leaves_r)]
+    return (tdef.unflatten([m for m, _ in outs]),
+            tdef.unflatten([r for _, r in outs]))
 
 
 def compressed_allreduce(grad_stack: Any, mesh: Mesh, axis: str = "data",

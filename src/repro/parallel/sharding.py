@@ -40,7 +40,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = ["DEFAULT_RULES", "use_mesh", "current_mesh", "spec_for", "shard",
            "sharding_for", "fitted_sharding", "logical_sharding", "ParamSpec",
            "init_params", "param_specs_to_shardings", "param_axes",
-           "data_mesh"]
+           "data_mesh", "disjoint_data_meshes"]
 
 # logical axis -> mesh axis name(s)
 DEFAULT_RULES: dict[str, Any] = {
@@ -187,6 +187,28 @@ def data_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:
     from ..launch.mesh import axis_types_kw
     n = len(jax.devices()) if n_devices is None else int(n_devices)
     return jax.make_mesh((n,), (axis,), **axis_types_kw(1))
+
+
+def disjoint_data_meshes(count: int, axis: str = "data", devices=None
+                         ) -> list[Mesh | None]:
+    """Split the visible devices into ``count`` disjoint 1-D data meshes.
+
+    The multi-consumer deployment: each trainer replica runs its sharded
+    fused epoch on its own device slice, all sharing one store.  Devices
+    are divided evenly (``len(devices) // count`` each; the remainder is
+    left idle so every replica sees the same shape).  A slice of fewer
+    than 2 devices returns ``None`` — that replica falls back to the
+    single-device fused tier, which keeps the same session declaration
+    runnable on a 1-device laptop and on a real mesh.
+    """
+    if count < 1:
+        raise ValueError("count must be >= 1")
+    devices = list(devices if devices is not None else jax.devices())
+    per = len(devices) // count
+    if per < 2:
+        return [None] * count
+    return [Mesh(np.asarray(devices[i * per:(i + 1) * per]), (axis,))
+            for i in range(count)]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,318 @@
+"""InSituSession / Plan: tier resolution as data, dispatch-prediction
+parity against ``StoreServer.stats()``, bit-identical results across
+tiers, HLO collective predictions, and the deployment scenario grid."""
+
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+
+from repro.core import Clustered, TableSpec, split_devices
+from repro.core import store as S
+from repro.insitu import (InferenceConsumer, InSituSession, Producer,
+                          TrainerConsumer)
+from repro.insitu import plan as P
+from repro.ml import autoencoder as ae
+from repro.ml import trainer as tr
+from repro.sim import flatplate as fp
+
+FCFG = fp.FlatPlateConfig(nx=8, ny=8, nz=4)
+N = FCFG.n_points
+COORDS = fp.grid_coords(FCFG)
+
+
+def _step(carry, rank, t):
+    return carry, S.make_key(rank, t), fp.snapshot(
+        FCFG, jax.random.fold_in(jax.random.key(0), rank), t)
+
+
+def _cfg(epochs=3, fused=True, **kw):
+    return tr.TrainerConfig(
+        ae=ae.AEConfig(n_points=N, mode="ref", latent=16, mlp_width=16),
+        epochs=epochs, gather=6, batch_size=4, lr=1e-3, fused=fused, **kw)
+
+
+def _session(p_tier=None, t_tier=None, ranks=1, steps=20, epochs=3,
+             deployment=None, count=1, model_key=None, extra=()):
+    carry = jnp.zeros(()) if ranks == 1 else jnp.zeros((ranks,))
+    cfg = _cfg(epochs=epochs, fused=(t_tier != "per_verb"))
+    return InSituSession(
+        tables=[TableSpec("field", shape=(4, N), capacity=16,
+                          engine="ring")],
+        components=[
+            Producer(_step, table="field", steps=steps, ranks=ranks,
+                     carry=carry, emit_every=2, tier=p_tier),
+            TrainerConsumer(cfg, COORDS, tier=t_tier, count=count,
+                            model_key=model_key),
+            *extra,
+        ],
+        deployment=deployment)
+
+
+class TestPlanResolution:
+    def test_default_tiers(self):
+        plan = _session().plan()
+        assert plan.component("producer").tier == "capture_scan"
+        assert plan.component("trainer").tier == "fused"
+
+    def test_multi_rank_picks_multi_capture(self):
+        plan = _session(ranks=3).plan()
+        assert plan.component("producer").tier == "capture_scan_multi"
+
+    def test_untraceable_pins_per_verb(self):
+        sess = InSituSession(
+            tables=[TableSpec("field", shape=(4, N), capacity=16)],
+            components=[Producer(_step, table="field", steps=4,
+                                 traceable=False)])
+        assert sess.plan().component("producer").tier == "per_verb"
+
+    def test_unfused_cfg_pins_per_verb_trainer(self):
+        cfg = _cfg(fused=False)
+        sess = InSituSession(
+            tables=[TableSpec("field", shape=(4, N), capacity=16)],
+            components=[TrainerConsumer(cfg, COORDS)])
+        assert sess.plan().component("trainer").tier == "per_verb"
+
+    def test_forced_tier_validation(self):
+        with pytest.raises(ValueError):
+            P.producer_tier(Producer(_step, table="f", steps=4,
+                                     tier="warp_drive"))
+        with pytest.raises(ValueError):
+            P.producer_tier(Producer(_step, table="f", steps=4, ranks=2,
+                                     tier="capture_scan"))
+        with pytest.raises(ValueError):
+            P.producer_tier(Producer(_step, table="f", steps=4,
+                                     traceable=False, tier="capture_scan"))
+        with pytest.raises(ValueError):
+            P.trainer_tier(_cfg(), "sharded_fused")   # no mesh
+        with pytest.raises(ValueError):
+            P.trainer_tier(_cfg(fused=False), "fused")
+
+    def test_unknown_table_rejected(self):
+        with pytest.raises(ValueError):
+            InSituSession(
+                tables=[TableSpec("field", shape=(4, N), capacity=16)],
+                components=[Producer(_step, table="nope", steps=4)])
+
+    def test_insitu_train_rejects_unknown_tier(self):
+        from repro.core import Client, StoreServer
+        srv = StoreServer()
+        srv.create_table(TableSpec("field", shape=(4, N), capacity=16))
+        with pytest.raises(ValueError):
+            tr.insitu_train(Client(srv), COORDS, _cfg(), tier="warp")
+
+
+class TestDispatchParity:
+    """plan.explain() predictions == measured StoreServer.stats()."""
+
+    @pytest.mark.parametrize("p_tier,t_tier", [
+        ("per_verb", "per_verb"),
+        ("capture_scan", "fused"),
+    ])
+    def test_predictions_match_measured(self, p_tier, t_tier):
+        sess = _session(p_tier=p_tier, t_tier=t_tier)
+        plan = sess.plan()
+        res = sess.run(plan=plan, sequential=True, max_wall_s=420)
+        assert res.ok, {k: v.error for k, v in res.run.components.items()}
+        for entry in plan.components:
+            assert res.op_delta(entry.name) == entry.store_dispatches, \
+                (entry.name, entry.tier)
+        assert res.server.stats()["op_count"] == plan.store_dispatches
+        # the fused epoch invariant, from the explain() view
+        ex = plan.explain()["components"]["trainer"]
+        assert ex["dispatches_per_epoch"] == 1.0
+
+    def test_three_step_inference_prediction(self):
+        def feed(client, step):
+            return jnp.zeros((1, 4))
+
+        sess = InSituSession(
+            tables=[TableSpec("field", shape=(4, N), capacity=16)],
+            components=[
+                InferenceConsumer("m", feed, steps=3, wait_meta=None,
+                                  tier="three_step"),
+            ])
+        plan = sess.plan()
+        res = sess.run(plan=plan, sequential=True, max_wall_s=120,
+                       preload=lambda srv: srv.set_model(
+                           "m", lambda p, x: x @ p["w"],
+                           {"w": jnp.ones((4, 2))}))
+        assert res.ok, {k: v.error for k, v in res.run.components.items()}
+        entry = plan.component("inference")
+        assert res.op_delta("inference") == entry.store_dispatches == 12
+
+
+class TestTierParity:
+    """The same declaration must produce bit-identical results across the
+    per-verb and fused plans (the sharded tier is covered in the
+    subprocess grid below at float-reduction tolerance)."""
+
+    def test_per_verb_and_fused_bitwise_identical(self):
+        outs, tables = {}, {}
+        for p_tier, t_tier in [("per_verb", "per_verb"),
+                               ("capture_scan", "fused")]:
+            res = _session(p_tier=p_tier, t_tier=t_tier).run(
+                sequential=True, max_wall_s=420)
+            assert res.ok, \
+                {k: v.error for k, v in res.run.components.items()}
+            outs[t_tier] = res.output("trainer").state
+            tables[t_tier] = res.server.checkout("field")
+        # producer tables byte-identical (fused ring == per-verb ring)
+        for a, b in zip(tables["per_verb"], tables["fused"]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # final TrainState bitwise identical
+        a, b = outs["per_verb"], outs["fused"]
+        assert int(a.step) == int(b.step)
+        for la, lb in zip(jax.tree.leaves(a.params),
+                          jax.tree.leaves(b.params)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    def test_multi_producer_fused_equals_per_verb(self):
+        tables = {}
+        for tier in ("per_verb", "capture_scan_multi"):
+            sess = InSituSession(
+                tables=[TableSpec("field", shape=(4, N), capacity=16)],
+                components=[Producer(_step, table="field", steps=10,
+                                     ranks=3, carry=jnp.zeros((3,)),
+                                     emit_every=2, tier=tier)])
+            res = sess.run(sequential=True, max_wall_s=240)
+            assert res.ok, \
+                {k: v.error for k, v in res.run.components.items()}
+            tables[tier] = res.server.checkout("field")
+            assert res.server.watermark("field") == 3 * 5
+        for a, b in zip(*tables.values()):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestScenarioGrid:
+    def test_clustered_deployment_runs(self):
+        """Degenerate 1-device clustered deployment: same declaration,
+        staged transfers, still correct."""
+        client_devs, db_devs = split_devices()
+        mk = lambda devs: jax.sharding.Mesh(np.asarray(devs), ("data",))
+        dep = Clustered(client_mesh=mk(client_devs), db_mesh=mk(db_devs))
+        res = _session(deployment=dep, steps=12, epochs=2).run(
+            sequential=True, max_wall_s=420)
+        assert res.ok, {k: v.error for k, v in res.run.components.items()}
+        out = res.output("trainer")
+        assert len(out.history) == 2
+        assert all(np.isfinite(h.train_loss) for h in out.history)
+
+    def test_concurrent_full_pipeline_with_inference(self):
+        """Producer + trainer + inference coupled live (the paper §4
+        workflow) through one declaration."""
+        def feed(client, step):
+            mu, sd = client.get_metadata("norm_stats")
+            snap = fp.snapshot(FCFG, jax.random.key(0), 100 + step)
+            return (snap.T[None] - mu) / sd
+
+        sess = _session(steps=30, epochs=3, model_key="encoder",
+                        extra=(InferenceConsumer("encoder", feed, steps=2),))
+        res = sess.run(max_wall_s=420)
+        assert res.ok, {k: v.error for k, v in res.run.components.items()}
+        assert res.output("producer").steps == 30
+        assert res.output("trainer").steps == 3
+        z = res.output("inference").last
+        assert z.shape == (1, 16) and bool(jnp.isfinite(z).all())
+
+    def test_plan_hlo_colocated_collective_free(self):
+        """plan(hlo=True): the co-located fused producer put path and the
+        single-device fused epoch must compile collective-free."""
+        from repro.core.deployment import make_colocated_1d
+        dep = make_colocated_1d(ndim=2)
+        sess = _session(steps=8, epochs=2, deployment=dep)
+        plan = sess.plan(hlo=True)
+        for entry in plan.components:
+            assert entry.collectives is not None
+            assert all(n == 0 for _, n in entry.collectives), \
+                (entry.name, entry.collectives)
+
+
+@pytest.mark.slow
+def test_sharded_grid_subprocess():
+    """The same declaration on a forced 4-device host: sharded-fused
+    single consumer parity with the fused tier, plan HLO all-reduce
+    prediction, and multi-consumer disjoint-mesh training."""
+    run_subprocess(textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import TableSpec
+        from repro.core import store as S
+        from repro.insitu import InSituSession, Producer, TrainerConsumer
+        from repro.ml import autoencoder as ae, trainer as tr
+        from repro.parallel.sharding import data_mesh
+        from repro.sim import flatplate as fp
+
+        fcfg = fp.FlatPlateConfig(nx=8, ny=8, nz=4)
+        n = fcfg.n_points
+        coords = fp.grid_coords(fcfg)
+
+        def step(carry, rank, t):
+            return carry, S.make_key(rank, t), fp.snapshot(
+                fcfg, jax.random.key(0), t)
+
+        def build(mesh, count=1):
+            cfg = tr.TrainerConfig(
+                ae=ae.AEConfig(n_points=n, mode="ref", latent=16,
+                               mlp_width=16),
+                epochs=3, gather=6, batch_size=4, lr=1e-3, mesh=mesh)
+            return InSituSession(
+                tables=[TableSpec("field", shape=(4, n), capacity=16,
+                                  engine="ring")],
+                components=[
+                    Producer(step, table="field", steps=20,
+                             carry=jnp.zeros(()), emit_every=2),
+                    TrainerConsumer(cfg, coords, count=count),
+                ])
+
+        # --- fused (mesh=None) vs sharded_fused (mesh=2): same stream --
+        states = {}
+        for mesh in (None, data_mesh(2)):
+            sess = build(mesh)
+            plan = sess.plan()
+            tier = plan.component("trainer").tier
+            res = sess.run(plan=plan, sequential=True, max_wall_s=380)
+            assert res.ok, \\
+                {k: v.error for k, v in res.run.components.items()}
+            assert res.op_delta("trainer") == \\
+                plan.component("trainer").store_dispatches
+            states[tier] = res.output("trainer").state
+        assert set(states) == {"fused", "sharded_fused"}
+        for a, b in zip(jax.tree.leaves(states["fused"].params),
+                        jax.tree.leaves(states["sharded_fused"].params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-5, atol=1e-6)
+
+        # --- plan(hlo=True) predicts the DDP all-reduce ----------------
+        sess = build(data_mesh(2))
+        plan = sess.plan(hlo=True)
+        coll = dict(plan.component("trainer").collectives)
+        assert coll["all-reduce"] > 0, coll
+        pcoll = dict(plan.component("producer").collectives)
+        assert all(v == 0 for v in pcoll.values()), pcoll
+
+        # --- multi-consumer: 2 replicas on disjoint 2-device slices ----
+        sess = build(None, count=2)
+        plan = sess.plan()
+        names = [c.name for c in plan.components if c.kind == "trainer"]
+        assert names == ["trainer0", "trainer1"]
+        assert all(plan.component(nm).tier == "sharded_fused"
+                   and plan.component(nm).mesh_devices == 2
+                   for nm in names)
+        res = sess.run(plan=plan, sequential=True, max_wall_s=380)
+        assert res.ok, {k: v.error for k, v in res.run.components.items()}
+        for nm in names:
+            out = res.output(nm)
+            assert len(out.history) == 3
+            assert all(np.isfinite(h.train_loss) for h in out.history)
+            assert res.op_delta(nm) == plan.component(nm).store_dispatches
+        # replicas trained on different seeds -> different params
+        pa = jax.tree.leaves(res.output("trainer0").state.params)
+        pb = jax.tree.leaves(res.output("trainer1").state.params)
+        assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(pa, pb))
+        print("SESSION_SHARDED_GRID_OK")
+    """), n_devices=4, timeout=900.0)

@@ -108,21 +108,56 @@ def test_sharded_epoch_one_dispatch_per_epoch():
 @pytest.mark.slow
 def test_int8_ddp_tracks_exact_psum():
     """The compressed gradient wire must track the exact psum path at the
-    loss level (per-step int8 bias stays small)."""
+    loss level (per-step int8 bias stays small), with and without the
+    in-carry error feedback."""
     _run("""
         mesh = data_mesh(2)
         outs = {}
-        for ddp in ("psum", "int8"):
+        for ddp, ef in (("psum", False), ("int8", False), ("int8", True)):
             cfg = tr.TrainerConfig(ae=aecfg, gather=6, batch_size=4,
-                                   lr=1e-3, mesh=mesh, ddp=ddp)
+                                   lr=1e-3, mesh=mesh, ddp=ddp,
+                                   ddp_error_feedback=ef)
             ep = tr.make_sharded_fused_epoch(cfg, levels, tx, spec)
             state0 = tr.init_state(cfg, jax.random.key(0), tx)
             state, m = ep(st, state0, jax.random.key(7), mu, sd)
             assert all(np.isfinite(float(x)) for x in m[:3])
-            outs[ddp] = float(m[0])
-        rel = abs(outs["int8"] - outs["psum"]) / (abs(outs["psum"]) + 1e-9)
-        assert rel < 0.02, outs
+            outs[(ddp, ef)] = float(m[0])
+        ref = outs[("psum", False)]
+        for k, v in outs.items():
+            rel = abs(v - ref) / (abs(ref) + 1e-9)
+            assert rel < 0.02, (k, outs)
         print("INT8_DDP_OK", outs)
+    """)
+
+
+@pytest.mark.slow
+def test_int8_error_feedback_in_scan_carry():
+    """The error-feedback residual must actually ride the scan carry
+    (params differ from the no-feedback wire) and the fused tier must
+    stay bit-deterministic with it threaded (ROADMAP follow-up: the
+    host-side ErrorFeedback could not ride the fused epoch)."""
+    _run("""
+        mesh = data_mesh(2)
+        params = {}
+        for ef in (True, False):
+            cfg = tr.TrainerConfig(ae=aecfg, gather=6, batch_size=4,
+                                   lr=1e-3, mesh=mesh, ddp="int8",
+                                   ddp_error_feedback=ef)
+            ep = tr.make_sharded_fused_epoch(cfg, levels, tx, spec)
+            state0 = tr.init_state(cfg, jax.random.key(0), tx)
+            s1, _ = ep(st, state0, jax.random.key(7), mu, sd)
+            s2, _ = ep(st, state0, jax.random.key(7), mu, sd)
+            # bit-determinism on the forced 2-device mesh
+            for a, b in zip(jax.tree.leaves(s1.params),
+                            jax.tree.leaves(s2.params)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            params[ef] = s1.params
+        # the residual is threaded: with-EF parameters differ from without
+        assert any(
+            not np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(params[True]),
+                            jax.tree.leaves(params[False])))
+        print("INT8_EF_OK")
     """)
 
 

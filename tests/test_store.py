@@ -299,3 +299,80 @@ def test_make_key_unique():
 def test_name_key_stable():
     assert S.name_key("x.3.120") == S.name_key("x.3.120")
     assert S.name_key("a") != S.name_key("b")
+
+
+class TestChunkBucketing:
+    """Tail-chunk bucketing: pad to the power-of-two bucket with no-op
+    steps so each (table, bucket) compiles once (ROADMAP follow-up)."""
+
+    def test_bucket_length(self):
+        assert S.bucket_length(1) == 8
+        assert S.bucket_length(8) == 8
+        assert S.bucket_length(9) == 16
+        assert S.bucket_length(16) == 16
+        assert S.bucket_length(100) == 128
+        with pytest.raises(ValueError):
+            S.bucket_length(0)
+
+    def test_bucketed_scan_equals_sequential_puts(self):
+        """A bucketed tail must leave the table byte-identical to the
+        unpadded sequential reference (no phantom puts, exact carry)."""
+        from repro.core.client import Client
+        spec = _spec(engine="ring", capacity=64)
+        srv = StoreServer()
+        srv.create_table(spec)
+        client = Client(srv)
+
+        def step_fn(c, t):
+            val = jnp.full((3,), t.astype(jnp.float32))
+            return c + 1.0, S.make_key(0, t), val
+
+        carry = jnp.zeros(())
+        total = 0
+        for t0, k in [(0, 16), (16, 16), (32, 7)]:      # 7 = odd tail
+            carry = client.capture_scan("t", step_fn, carry, k, 2, t0=t0,
+                                        bucket=True)
+            total += k
+        assert float(carry) == total       # padded steps never ran
+        got = srv.checkout("t")
+        ref = S.init_table(spec)
+        for t in range(0, 39, 2):
+            ref = S.put(spec, ref, S.make_key(0, t),
+                        _val(float(t)))
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert srv.watermark("t") == 20 == srv.watermark_device("t")
+
+    def test_compile_cache_hits_across_tail_lengths(self):
+        """Five distinct tail lengths inside one bucket range must compile
+        at most two executables (the 8- and 16-buckets), where the
+        unbucketed path compiles all five."""
+        from repro.core.client import Client
+        spec = TableSpec("bkt", shape=(3,), capacity=64, engine="ring")
+        srv = StoreServer()
+        srv.create_table(spec)
+        client = Client(srv)
+
+        def step_fn(c, t):
+            return c, S.make_key(0, t), jnp.full((3,), t.astype(jnp.float32))
+
+        c0 = S.capture_scan._cache_size()
+        for t0, k in [(0, 5), (5, 7), (12, 9), (21, 12), (33, 6)]:
+            client.capture_scan("bkt", step_fn, jnp.zeros(()), k, 1,
+                                t0=t0, bucket=True)
+        assert S.capture_scan._cache_size() - c0 <= 2
+
+    def test_multi_rank_bucketed_scan(self):
+        from repro.core.client import Client
+        spec = TableSpec("mb", shape=(3,), capacity=64, engine="ring")
+        srv = StoreServer()
+        srv.create_table(spec)
+        client = Client(srv)
+
+        def step_fn(c, rank, t):
+            return c, S.make_key(rank, t), jnp.full((3,),
+                                                    t.astype(jnp.float32))
+
+        client.capture_scan("mb", step_fn, jnp.zeros((3,)), 5, 1,
+                            n_ranks=3, bucket=True)
+        assert srv.watermark("mb") == 15 == srv.watermark_device("mb")

@@ -1,0 +1,104 @@
+"""Bench regression gate: fresh ``BENCH_*.json`` vs the committed trajectory.
+
+Run from the repo root (CI bench-smoke job):
+
+    PYTHONPATH=src python -m benchmarks.run --json --smoke --json-dir out
+    python tools/check_bench.py --fresh-dir out
+
+Checks ``BENCH_fused_pipeline.json`` (the session-API pipeline bench):
+
+1. **Structural** (hardware-independent, hard):
+   * fused consumer ``store_dispatches_per_epoch`` must stay <= 1.0 — the
+     one-dispatch-epoch invariant;
+   * fused producer ``dispatches_per_step`` must not exceed the committed
+     value — chunking must not silently shrink.
+2. **Performance** (vs the committed numbers, tolerance ``--tol``,
+   default 0.2 = fail on >20% regression): fused producer steps/s.
+   Raw throughput is hardware-dependent; on machines unlike the one that
+   committed the baseline, gate on the producer fused/per-verb *speedup
+   ratio* instead with ``--ratios-only`` (still catches the fused tier
+   losing its edge).  The consumer side is gated structurally only —
+   its epoch is dominated by real SGD compute, so its wall-clock is not
+   a dispatch-overhead signal.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+EPS = 1e-9
+
+
+def _load(path: Path) -> dict:
+    if not path.exists():
+        raise SystemExit(f"check_bench: missing {path}")
+    return json.loads(path.read_text())
+
+
+def check_fused_pipeline(base: dict, fresh: dict, tol: float,
+                         ratios_only: bool) -> list[str]:
+    errors: list[str] = []
+
+    # -- structural invariants --------------------------------------------
+    d_epoch = fresh["consumer"]["fused"]["store_dispatches_per_epoch"]
+    if d_epoch > 1.0 + EPS:
+        errors.append(
+            f"fused consumer store_dispatches_per_epoch regressed to "
+            f"{d_epoch} (> 1.0): the one-dispatch epoch broke")
+    d_step_base = base["producer"]["fused"]["dispatches_per_step"]
+    d_step = fresh["producer"]["fused"]["dispatches_per_step"]
+    if d_step > d_step_base + EPS:
+        errors.append(
+            f"fused producer dispatches_per_step regressed: "
+            f"{d_step} > committed {d_step_base}")
+
+    # -- performance ------------------------------------------------------
+    def perf(name: str, b: float, f: float):
+        if f < (1.0 - tol) * b:
+            errors.append(
+                f"{name} regressed >{tol:.0%}: {f:.2f} vs committed "
+                f"{b:.2f}")
+
+    if ratios_only:
+        perf("producer fused/per-verb speedup",
+             base["producer"]["speedup"], fresh["producer"]["speedup"])
+    else:
+        perf("producer fused steps/s",
+             base["producer"]["fused"]["steps_per_s"],
+             fresh["producer"]["fused"]["steps_per_s"])
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh-dir", default="out",
+                    help="directory holding the freshly measured "
+                         "BENCH_*.json files")
+    ap.add_argument("--baseline-dir", default=str(REPO),
+                    help="directory holding the committed trajectory")
+    ap.add_argument("--tol", type=float, default=0.2,
+                    help="allowed fractional perf regression (default 0.2)")
+    ap.add_argument("--ratios-only", action="store_true",
+                    help="gate on tier speedup ratios instead of raw "
+                         "throughput (for hardware unlike the baseline's)")
+    args = ap.parse_args()
+
+    base = _load(Path(args.baseline_dir) / "BENCH_fused_pipeline.json")
+    fresh = _load(Path(args.fresh_dir) / "BENCH_fused_pipeline.json")
+    errors = check_fused_pipeline(base, fresh, args.tol, args.ratios_only)
+    if errors:
+        print("bench check FAILED:")
+        for e in errors:
+            print(" -", e)
+        return 1
+    print("bench check OK (BENCH_fused_pipeline.json within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,7 +27,8 @@ REPO = Path(__file__).resolve().parent.parent
 
 #: first segments that implicitly root at ``repro.``
 _SUBPACKAGES = ("core", "ml", "sim", "parallel", "analysis", "launch",
-                "kernels", "train", "serve", "models", "configs", "data")
+                "kernels", "train", "serve", "models", "configs", "data",
+                "insitu")
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _CODE_RE = re.compile(r"`([^`\n]+)`")
