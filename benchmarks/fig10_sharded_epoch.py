@@ -1,4 +1,5 @@
-"""Fig. 10 (beyond-paper): the sharded fused epoch vs mesh size.
+"""Fig. 10 (beyond-paper): the sharded fused epoch vs mesh size, and the
+replicated vs slab-sharded data-plane entry.
 
 The paper's headline result is near-perfect scaling of co-located training
 across nodes.  Our structural version: the trainer's whole epoch — store
@@ -6,18 +7,24 @@ gather, normalization, mini-batch SGD with DDP gradient all-reduce, and
 validation — runs inside ONE ``shard_map`` over a ``data`` mesh axis
 (``ml.trainer.make_sharded_fused_epoch``), so dispatches/epoch stays O(1)
 at any mesh size.  This benchmark declares ONE ``InSituSession``
-(flat-plate producer + trainer) and runs it unmodified at mesh sizes 1,
-2, (4 with ``--full``) — the session plan resolves the fused tier at
-mesh 1 and the sharded-fused tier beyond — measuring epochs/s and store
+(flat-plate producer + trainer) and runs it unmodified across mesh sizes
+and both data-plane entries — the session plan resolves the fused tier at
+mesh 1, sharded-fused beyond, and ``slab_sharded`` when the config asks
+for the pre-partitioned table — measuring epochs/s and store
 dispatches/epoch, and writes ``BENCH_sharded_epoch.json``.
 
-Each mesh size runs in a fresh subprocess: forcing multiple CPU devices
+The **entry comparison** (mesh 2, replicated vs slab-sharded) is the
+data-plane claim: with the slab-sharded entry the compiled epoch contains
+ZERO table all-gathers (measured via ``plan(hlo=True)``), per-device slab
+bytes drop by the mesh factor, and throughput stays within noise of the
+replicated entry.  ``tools/check_bench.py`` gates all three.
+
+Each cell runs in a fresh subprocess: forcing multiple CPU devices
 (``--xla_force_host_platform_device_count``) must happen before the first
 jax call, and a fresh process keeps the timings free of each other's
 compilation caches.  On a single shared CPU the mesh sizes time-slice one
-socket, so epochs/s is NOT expected to scale here — the claim under test
-is the O(1) dispatch count and that the sharded tier stays within a small
-factor of the baseline; real scaling needs real devices.
+socket, so epochs/s is NOT expected to scale here — the claims under test
+are structural; real scaling needs real devices.
 """
 
 from __future__ import annotations
@@ -41,7 +48,8 @@ _CHILD = """
     from repro.parallel.sharding import data_mesh
     from repro.sim import flatplate as fp
 
-    D, epochs = int(sys.argv[1]), int(sys.argv[2])
+    D, epochs, slab, hlo = (int(sys.argv[1]), int(sys.argv[2]),
+                            bool(int(sys.argv[3])), bool(int(sys.argv[4])))
     fcfg = fp.FlatPlateConfig(nx=8, ny=8, nz=4)
     n = fcfg.n_points
     key = jax.random.key(0)
@@ -51,35 +59,56 @@ _CHILD = """
 
     aecfg = ae.AEConfig(n_points=n, mode="ref", latent=16, mlp_width=16)
     cfg = tr.TrainerConfig(ae=aecfg, epochs=epochs, gather=6, batch_size=4,
-                           lr=1e-3, mesh=(data_mesh(D) if D > 1 else None))
+                           lr=1e-3, mesh=(data_mesh(D) if D > 1 else None),
+                           slab_sharded=slab)
     # the same declaration at every mesh size; the plan picks the tier
+    spec = TableSpec("field", shape=(4, n), capacity=16, engine="ring")
     session = InSituSession(
-        tables=[TableSpec("field", shape=(4, n), capacity=16,
-                          engine="ring")],
+        tables=[spec],
         components=[
             Producer(step_fn, table="field", steps=10, carry=jnp.zeros(()),
                      emit_every=1),
             TrainerConsumer(cfg, fp.grid_coords(fcfg)),
         ])
+    # entry-structure ground truth from compiled HLO (the data-plane
+    # claim).  Compiled only for the cells the check_bench gate reads
+    # (the driver sets hlo=1 for the entry-comparison pair) — the compile
+    # otherwise doubles the cell's wall time for numbers nothing consumes.
+    coll = {}
+    if hlo:
+        hplan = session.plan(hlo=True)
+        for entry in hplan.components:
+            entry.check_collectives()
+        coll = dict(hplan.component("trainer").collectives)
     plan = session.plan()
     res = session.run(plan=plan, sequential=True, max_wall_s=900)
     assert res.ok, {k: v.error for k, v in res.run.components.items()}
     out = res.output("trainer")
     wall = res.run.timers.total("total_training")
+    # per-device slab memory: MEASURED from the live table's placement
+    # (the data-plane claim is about where bytes actually sit, so a
+    # placement regression must show up here, not be derived away)
+    live_slab = res.server.checkout("field").slab
+    slab_bytes_dev = max(s.data.nbytes for s in live_slab.addressable_shards)
     print(json.dumps({
         "mesh": D,
         "devices": len(jax.devices()),
         "tier": plan.component("trainer").tier,
+        "entry": "slab_sharded" if slab else "replicated",
         "epochs_per_s": epochs / wall,
         # measured store dispatches minus the one-off norm bootstrap
         "dispatches_per_epoch":
             (res.op_delta("trainer") - 1) / epochs,
+        "slab_bytes_per_device": slab_bytes_dev,
+        "all_gather": coll.get("all-gather", 0),
+        "all_reduce": coll.get("all-reduce", 0),
         "train_loss": out.history[-1].train_loss,
     }))
 """
 
 
-def _run_child(mesh_size: int, epochs: int) -> dict:
+def _run_child(mesh_size: int, epochs: int, slab: bool = False,
+               hlo: bool = False) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = \
         f"--xla_force_host_platform_device_count={mesh_size}"
@@ -87,26 +116,66 @@ def _run_child(mesh_size: int, epochs: int) -> dict:
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     proc = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(_CHILD),
-         str(mesh_size), str(epochs)],
+         str(mesh_size), str(epochs), str(int(slab)), str(int(hlo))],
         capture_output=True, text=True, timeout=900, env=env)
     if proc.returncode != 0:
         raise RuntimeError(
-            f"fig10 child (mesh={mesh_size}) failed:\n{proc.stderr[-4000:]}")
+            f"fig10 child (mesh={mesh_size}, slab={slab}) failed:\n"
+            f"{proc.stderr[-4000:]}")
     return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
+def _entry_comparison(cells: list[dict]) -> dict | None:
+    """Replicated vs slab-sharded entry at the same (largest shared) mesh
+    size — the gate ``tools/check_bench.py`` reads."""
+    by_entry: dict[str, dict] = {}
+    for c in cells:
+        if c["mesh"] > 1:
+            prev = by_entry.get(c["entry"])
+            if prev is None or c["mesh"] > prev["mesh"]:
+                by_entry[c["entry"]] = c
+    if set(by_entry) != {"replicated", "slab_sharded"} or \
+            by_entry["replicated"]["mesh"] != by_entry["slab_sharded"]["mesh"]:
+        return None
+    rep, slab = by_entry["replicated"], by_entry["slab_sharded"]
+    return {
+        "mesh": rep["mesh"],
+        "epochs_per_s_ratio": slab["epochs_per_s"] / rep["epochs_per_s"],
+        "slab_entry_all_gather": slab["all_gather"],
+        "slab_entry_all_reduce": slab["all_reduce"],
+        "entry_bytes_ratio":
+            rep["slab_bytes_per_device"] / slab["slab_bytes_per_device"],
+        "dispatches_per_epoch": {
+            "replicated": rep["dispatches_per_epoch"],
+            "slab_sharded": slab["dispatches_per_epoch"],
+        },
+    }
+
+
 def run(quick: bool = True, json_path: str | None = None,
-        write_json: bool = True):
-    mesh_sizes = [1, 2] if quick else [1, 2, 4]
-    epochs = 8 if quick else 24
-    cells = [_run_child(d, epochs) for d in mesh_sizes]
+        write_json: bool = True, smoke: bool = False):
+    if smoke:
+        grid = [(2, False), (2, True)]
+        epochs = 4
+    elif quick:
+        grid = [(1, False), (2, False), (2, True)]
+        epochs = 8
+    else:
+        grid = [(1, False), (2, False), (2, True), (4, False), (4, True)]
+        epochs = 24
+    # HLO collective counts are compiled only for the pair the
+    # entry-comparison gate reads: the largest mesh size with both entries.
+    cmp_mesh = max(d for d, _ in grid if d > 1)
+    cells = [_run_child(d, epochs, slab, hlo=(d == cmp_mesh))
+             for d, slab in grid]
 
     base = cells[0]
     result = {
         "bench": "sharded_epoch",
         "epochs": epochs,
-        "baseline": "single-device fused tier (mesh=1)",
+        "baseline": f"{base['entry']} entry, mesh={base['mesh']}",
         "cells": cells,
+        "entry_comparison": _entry_comparison(cells),
     }
     if write_json:
         path = Path(json_path) if json_path \
@@ -117,9 +186,11 @@ def run(quick: bool = True, json_path: str | None = None,
     for c in cells:
         rel = c["epochs_per_s"] / base["epochs_per_s"]
         rows.append(Row(
-            f"fig10/mesh{c['mesh']}_epoch", 1e6 / c["epochs_per_s"],
+            f"fig10/mesh{c['mesh']}_{c['entry']}_epoch",
+            1e6 / c["epochs_per_s"],
             f"epochs_per_s={c['epochs_per_s']:.2f};"
             f"dispatches_per_epoch={c['dispatches_per_epoch']:.2f};"
+            f"all_gather={c['all_gather']};"
             f"vs_baseline={rel:.2f}"))
     return rows
 

@@ -22,8 +22,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
-                    help="minimal session-API run (fig9 only) for the CI "
-                         "bench gate")
+                    help="minimal session-API run (fig9 + the fig10 "
+                         "replicated-vs-slab-sharded entry cells) for the "
+                         "CI bench gate")
     ap.add_argument("--json", action="store_true",
                     help="also write BENCH_<name>.json per bench")
     ap.add_argument("--json-dir", default=".",
@@ -53,7 +54,8 @@ def main() -> None:
         "roofline": roofline_table.run,
     }
     if args.smoke:
-        benches = {k: v for k, v in benches.items() if k == "fig9"}
+        benches = {k: v for k, v in benches.items()
+                   if k in ("fig9", "fig10")}
     if args.only:
         names = args.only.split(",")
         unknown = [n for n in names if n not in benches]
@@ -74,7 +76,7 @@ def main() -> None:
                           / "BENCH_fused_pipeline.json")))
     if "fig10" in benches:
         benches["fig10"] = (lambda quick: fig10_sharded_epoch.run(
-            quick=quick, write_json=args.json,
+            quick=quick, smoke=args.smoke, write_json=args.json,
             json_path=str(Path(args.json_dir)
                           / "BENCH_sharded_epoch.json")))
 

@@ -97,11 +97,14 @@ class InSituDriver:
 
     def __init__(self, deployment: Deployment | None = None,
                  tables: Sequence[S.TableSpec] = (),
-                 straggler: StragglerPolicy | None = None):
+                 straggler: StragglerPolicy | None = None,
+                 table_shardings: dict[str, Any] | None = None):
         self.server = StoreServer(deployment)
         self.straggler = straggler or StragglerPolicy()
+        table_shardings = table_shardings or {}
         for spec in tables:
-            self.server.create_table(spec)
+            self.server.create_table(
+                spec, slab_sharding=table_shardings.get(spec.name))
 
     def client(self, rank: int = 0) -> Client:
         return Client(self.server, rank=rank)

@@ -95,9 +95,17 @@ class StoreServer:
 
     # -- table management ---------------------------------------------------
 
-    def create_table(self, spec: S.TableSpec, deployment: Deployment | None = None):
+    def create_table(self, spec: S.TableSpec,
+                     deployment: Deployment | None = None,
+                     slab_sharding=None):
+        """Register + allocate a table.  ``slab_sharding`` explicitly
+        places the slab (e.g. the slab-sharded trainer tier partitioning
+        the slot axis over its data mesh via
+        ``parallel.sharding.slab_sharding``); when ``None`` the
+        deployment's placement rule applies."""
         dep = deployment or self.deployment
-        slab_sharding = dep.slab_sharding(spec) if dep is not None else None
+        if slab_sharding is None and dep is not None:
+            slab_sharding = dep.slab_sharding(spec)
         with self._lock:
             if spec.name in self._specs:
                 raise ValueError(f"table {spec.name!r} already exists")

@@ -88,6 +88,7 @@ __all__ = [
     "get",
     "get_many",
     "sample",
+    "sample_sharded_impl",
     "latest",
     "poll",
     "delete",
@@ -393,6 +394,40 @@ def sample_impl(spec: TableSpec, state: TableState, rng, n: int,
 
 
 sample = partial(jax.jit, static_argnums=(0, 3, 4))(sample_impl)
+
+
+def sample_sharded_impl(spec: TableSpec, state: TableState, rng, n: int,
+                        axis: str, mode: str | None = None):
+    """Slab-sharded form of :func:`sample_impl`, for use *inside* a
+    ``shard_map`` whose in-spec partitions the slab's slot axis over mesh
+    axis ``axis`` (``parallel.sharding.slab_sharding`` placement).
+
+    ``state.slab`` here is the rank's LOCAL shard ``[capacity/D, *shape]``
+    while the per-slot metadata (``keys``/``version``) and cursors stay
+    replicated, so slot selection is identical replicated compute on every
+    rank.  Each rank then gathers only the slots it owns
+    (``kernels.store.gather_rows_sharded`` — zeros elsewhere) and one
+    ``lax.psum`` over ``axis`` reassembles the batch: the cross-rank
+    mini-batch assembly becomes an explicit, HLO-countable collective
+    instead of an implicit replicated slab read, and per-device slab
+    memory drops from O(capacity) to O(capacity/D).  Every slot has
+    exactly one owner, so the psum adds zeros to the owned row —
+    bit-identical to the replicated gather.
+
+    Returns ``(values [n,*shape], keys [n], ok)`` like ``sample_impl``.
+    """
+    local_cap = state.slab.shape[0]
+    nvalid = jnp.sum((state.version > 0).astype(jnp.int32))
+    ok = nvalid > 0
+    ranks = jax.random.randint(rng, (n,), 0, jnp.maximum(nvalid, 1))
+    slots = _kops.sample_slots(state.version, ranks, mode)
+    slots = jnp.minimum(slots, spec.capacity - 1)
+    offset = jax.lax.axis_index(axis) * local_cap
+    local = _kops.gather_rows_sharded(state.slab, slots, offset, mode)
+    values = jax.lax.psum(local, axis)
+    values = jnp.where(ok, values,
+                       jnp.zeros((n, *spec.shape), spec.dtype))
+    return values.astype(spec.dtype), state.keys[slots], ok
 
 
 @partial(jax.jit, static_argnums=(0, 2))

@@ -17,9 +17,16 @@ Tier names
 
 =============  =====================================================
 producer       ``per_verb`` | ``capture_scan`` | ``capture_scan_multi``
-trainer        ``per_verb`` | ``fused`` | ``sharded_fused``
+trainer        ``per_verb`` | ``fused`` | ``sharded_fused`` | ``slab_sharded``
 inference      ``fused_registry`` | ``three_step``
 =============  =====================================================
+
+Besides dispatch counts, a plan predicts each component's *collective
+structure* (``predicted_collectives``): which collective ops the compiled
+hot path must / must not contain — the co-located put is collective-free,
+the sharded epochs contain the DDP all-reduce, and the slab-sharded epoch
+must NOT all-gather the table on entry.  ``plan(hlo=True)`` measures the
+ground truth from compiled HLO; the tests compare the two.
 """
 
 from __future__ import annotations
@@ -27,6 +34,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any
 
+from ..analysis.hlo import COLLECTIVE_OPS
 from ..core import store as S
 
 __all__ = [
@@ -34,10 +42,12 @@ __all__ = [
     "producer_tier", "trainer_tier", "inference_tier",
     "default_chunk", "ComponentPlan", "Plan",
     "producer_dispatches", "trainer_dispatches", "inference_dispatches",
+    "TRAINER_COLLECTIVE_PREDICTIONS", "COLLECTIVE_FREE",
+    "trainer_collective_prediction",
 ]
 
 PRODUCER_TIERS = ("per_verb", "capture_scan", "capture_scan_multi")
-TRAINER_TIERS = ("per_verb", "fused", "sharded_fused")
+TRAINER_TIERS = ("per_verb", "fused", "sharded_fused", "slab_sharded")
 INFERENCE_TIERS = ("fused_registry", "three_step")
 
 
@@ -68,21 +78,30 @@ def producer_tier(comp) -> str:
 def trainer_tier(cfg, override: str | None = None) -> str:
     """Resolve a trainer tier from a ``TrainerConfig`` (the rule
     ``ml.trainer.insitu_train`` consults when no plan names one)."""
+    mesh_tiers = ("sharded_fused", "slab_sharded")
     if override is not None:
         if override not in TRAINER_TIERS:
             raise ValueError(f"unknown trainer tier {override!r} "
                              f"(have {TRAINER_TIERS})")
-        if override == "sharded_fused" and cfg.mesh is None:
-            raise ValueError("sharded_fused needs cfg.mesh")
-        if override != "sharded_fused" and cfg.mesh is not None:
+        if override in mesh_tiers and cfg.mesh is None:
+            raise ValueError(f"{override} needs cfg.mesh")
+        if override not in mesh_tiers and cfg.mesh is not None:
             raise ValueError(
                 f"cfg.mesh is set; tier {override!r} would ignore it")
+        if override == "slab_sharded" and not cfg.slab_sharded:
+            raise ValueError("slab_sharded needs cfg.slab_sharded=True")
+        if override != "slab_sharded" and cfg.slab_sharded:
+            raise ValueError(
+                f"cfg.slab_sharded is set; tier {override!r} would pass "
+                f"the table replicated")
         if override != "per_verb" and not cfg.fused:
             raise ValueError(f"tier {override!r} needs cfg.fused=True")
         return override
     if not cfg.fused:
         return "per_verb"
-    return "sharded_fused" if cfg.mesh is not None else "fused"
+    if cfg.mesh is None:
+        return "fused"
+    return "slab_sharded" if cfg.slab_sharded else "sharded_fused"
 
 
 def inference_tier(comp) -> str:
@@ -97,6 +116,54 @@ def inference_tier(comp) -> str:
 def default_chunk(emit_every: int) -> int:
     """The fused producer's default chunk length (steps per dispatch)."""
     return max(8 * emit_every, 8)
+
+
+def _pred(**nonzero: bool) -> tuple[tuple[str, bool], ...]:
+    """Collective-structure prediction: op name -> must-be-nonzero flag
+    (keyword names use ``_`` for ``-``)."""
+    return tuple((op, bool(nonzero.get(op.replace("-", "_"), False)))
+                 for op in COLLECTIVE_OPS)
+
+
+#: Prediction for any hot path that must compile collective-free (the
+#: co-located put, the single-device epochs).
+COLLECTIVE_FREE: tuple[tuple[str, bool], ...] = _pred()
+
+#: Structural collective predictions per trainer tier *on a
+#: replicated-placed table*, verified against ``plan(hlo=True)`` ground
+#: truth in the tests.  Both mesh tiers carry the DDP all-reduce; the
+#: slab-sharded tier *additionally* promises the table is NOT
+#: all-gathered on entry (``all-gather`` stays zero — its batch-assembly
+#: collective is the explicit ``psum``, which lowers to an all-reduce
+#: and rides the same flag).  Use :func:`trainer_collective_prediction`
+#: to resolve the placement-dependent cases.
+TRAINER_COLLECTIVE_PREDICTIONS: dict[str, tuple[tuple[str, bool], ...]] = {
+    "per_verb": COLLECTIVE_FREE,
+    "fused": COLLECTIVE_FREE,
+    "sharded_fused": _pred(all_reduce=True),
+    "slab_sharded": _pred(all_reduce=True),
+}
+
+
+def trainer_collective_prediction(tier: str, table_sharded: bool = False
+                                  ) -> tuple[tuple[str, bool], ...] | None:
+    """Collective-structure prediction for one trainer entry.
+
+    ``table_sharded``: the table this trainer reads is *placed*
+    partitioned across more than one device (a slab-sharded trainer's
+    placement, or a sharded co-located deployment).  That flips the
+    replicated-entry mesh tier's claim: ``sharded_fused`` reading a
+    sharded-placed table all-gathers the slab on entry — by design the
+    anti-pattern the ``slab_sharded`` tier removes, and exactly what the
+    contrast assertion in the tests proves.  The single-device ``fused``
+    tier's structure on a sharded table is placement-dependent, so the
+    plan makes no claim there (``None``).
+    """
+    if table_sharded and tier == "sharded_fused":
+        return _pred(all_reduce=True, all_gather=True)
+    if table_sharded and tier == "fused":
+        return None
+    return TRAINER_COLLECTIVE_PREDICTIONS[tier]
 
 
 @dataclass(frozen=True)
@@ -117,10 +184,30 @@ class ComponentPlan:
     #: collective-op counts from compiled HLO of the component's hot path
     #: (``None`` until the session resolved them with ``plan(hlo=True)``).
     collectives: tuple[tuple[str, int], ...] | None = None
+    #: predicted collective structure of the hot path: op -> must the
+    #: compiled HLO contain it?  (``None`` where the plan makes no claim,
+    #: e.g. clustered staging.)  ``plan(hlo=True)``'s ``collectives`` is
+    #: the measured truth these predictions are tested against.
+    predicted_collectives: tuple[tuple[str, bool], ...] | None = None
 
     @property
     def store_dispatches(self) -> int:
         return sum(n for _, n in self.dispatches)
+
+    def check_collectives(self) -> None:
+        """Assert the measured HLO collective counts (``plan(hlo=True)``)
+        match the predicted structure.  No-op when either side is
+        unresolved."""
+        if self.collectives is None or self.predicted_collectives is None:
+            return
+        measured = dict(self.collectives)
+        for op, nonzero in self.predicted_collectives:
+            got = measured.get(op, 0)
+            if bool(got) != nonzero:
+                raise AssertionError(
+                    f"{self.name} [{self.tier}]: predicted {op} "
+                    f"{'> 0' if nonzero else '== 0'}, compiled HLO has "
+                    f"{got} (all: {measured})")
 
     def explain(self) -> dict:
         out: dict[str, Any] = {
@@ -140,6 +227,10 @@ class ComponentPlan:
             out["dispatches_per_epoch"] = \
                 d.get("epoch", 0) / max(1, self.steps)
             out["mesh_devices"] = self.mesh_devices
+        if self.predicted_collectives is not None:
+            out["predicted_collectives"] = {
+                op: ("nonzero" if nz else "zero")
+                for op, nz in self.predicted_collectives}
         if self.collectives is not None:
             out["collectives"] = dict(self.collectives)
         return out

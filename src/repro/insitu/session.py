@@ -44,12 +44,12 @@ import jax.numpy as jnp
 
 from ..core import store as S
 from ..core.client import Client
-from ..core.deployment import Deployment
+from ..core.deployment import Clustered, Deployment
 from ..core.orchestrator import InSituDriver, RunResult, StragglerPolicy
 from ..core.server import StoreServer
 from ..ml import autoencoder as ae
 from ..ml import trainer as tr
-from ..parallel.sharding import disjoint_data_meshes
+from ..parallel.sharding import disjoint_data_meshes, slab_sharding
 from . import plan as P
 from .components import (InferenceConsumer, InferenceOutput, Producer,
                          ProducerOutput, TrainerConsumer, TrainerOutput)
@@ -145,6 +145,10 @@ class InSituSession:
         """
         entries: list[P.ComponentPlan] = []
         first_trainer = True
+        # Clustered staging pushes transfers across the interconnect by
+        # design — the plan makes no collective-freedom claim for it.
+        put_pred = None if isinstance(self.deployment, Clustered) \
+            else P.COLLECTIVE_FREE
         for comp in self.components:
             if isinstance(comp, Producer):
                 tier = P.producer_tier(comp)
@@ -157,6 +161,7 @@ class InSituSession:
                     dispatches=P.producer_dispatches(
                         tier, comp.steps, comp.emit_every, comp.ranks,
                         chunk),
+                    predicted_collectives=put_pred,
                     collectives=self._producer_collectives(comp, tier, chunk)
                     if hlo else None))
             elif isinstance(comp, TrainerConsumer):
@@ -174,6 +179,9 @@ class InSituSession:
                         mesh_devices=ndev,
                         dispatches=P.trainer_dispatches(
                             tier, cfg.epochs, bootstrap=first_trainer),
+                        predicted_collectives=
+                        P.trainer_collective_prediction(
+                            tier, self._table_is_sharded(cfg.table)),
                         collectives=self._trainer_collectives(comp, cfg,
                                                               tier)
                         if hlo else None))
@@ -211,13 +219,12 @@ class InSituSession:
     # -- HLO collective accounting (plan(hlo=True)) -------------------------
 
     def _producer_collectives(self, comp: Producer, tier: str, chunk: int):
-        """Compile one put / one capture chunk against the deployment's
-        slab sharding and count its collective ops."""
+        """Compile one put / one capture chunk against the table's actual
+        placement (deployment rule, or the slab-sharded trainer's
+        partitioned slab) and count its collective ops."""
         from ..analysis.hlo import COLLECTIVE_OPS, count_ops
         spec = self._spec(comp.table)
-        sharding = self.deployment.slab_sharding(spec) \
-            if self.deployment is not None else None
-        state = S.init_table(spec, sharding)
+        state = S.init_table(spec, self._table_placement(spec))
         if tier == "per_verb":
             val = jnp.zeros(spec.shape, spec.dtype)
             txt = jax.jit(lambda st: S.put_impl(
@@ -237,8 +244,11 @@ class InSituSession:
 
     def _trainer_collectives(self, comp: TrainerConsumer, cfg, tier: str):
         """Compile one epoch of this replica's tier and count collectives
-        (the sharded tier must contain the DDP all-reduce; single-device
-        tiers must not)."""
+        (the sharded tiers must contain the DDP all-reduce; single-device
+        tiers must not; the slab-sharded tier must show NO table
+        all-gather).  The dummy table is placed exactly like the live one
+        — for the slab-sharded tier that means the slab enters pre-sharded,
+        so the compiled HLO is the ground truth for the entry claim."""
         from ..analysis.hlo import COLLECTIVE_OPS, count_ops
         if tier == "per_verb":
             return tuple((op, 0) for op in COLLECTIVE_OPS)
@@ -247,12 +257,52 @@ class InSituSession:
         tx = _opt_for(cfg)
         state = tr.init_state(cfg, jax.random.key(cfg.seed), tx)
         epoch_fn = tr.EPOCH_BUILDERS[tier](cfg, levels, tx, spec)
-        dummy = S.init_table(spec)
+        dummy = S.init_table(spec, self._table_placement(spec))
         mu = jnp.zeros((spec.shape[0],))
         txt = epoch_fn.lower(dummy, state, jax.random.key(0), mu,
                              mu + 1.0).compile().as_text()
         counts = count_ops(txt)
         return tuple((op, counts.get(op, 0)) for op in COLLECTIVE_OPS)
+
+    # -- table placement (the slab-sharded data plane) ----------------------
+
+    def _slab_trainer_cfg(self, table: str):
+        """The config of the slab-sharded trainer reading ``table``, if
+        any (that trainer's mesh owns the table's placement)."""
+        for comp in self.components:
+            if isinstance(comp, TrainerConsumer) and comp.cfg.slab_sharded \
+                    and comp.cfg.table == table:
+                return comp.cfg
+        return None
+
+    def _table_is_sharded(self, table: str) -> bool:
+        """Is this table's slab *placed* partitioned across > 1 device?
+        (Drives the placement-dependent collective predictions — a
+        trivially-sharded 1-device mesh introduces no collectives.)"""
+        sh = self._table_placement(self._spec(table))
+        return sh is not None and getattr(sh, "num_devices", 1) > 1 \
+            and not sh.is_fully_replicated
+
+    def _table_placement(self, spec: S.TableSpec):
+        """Where this table's slab lives: a slab-sharded trainer's table is
+        placed pre-partitioned over its mesh (``slab_sharding``); otherwise
+        the deployment's rule applies (``None`` = server default)."""
+        cfg = self._slab_trainer_cfg(spec.name)
+        if cfg is not None:
+            return slab_sharding(spec, cfg.mesh, cfg.mesh_axis)
+        if self.deployment is not None:
+            return self.deployment.slab_sharding(spec)
+        return None
+
+    def _table_shardings(self) -> dict[str, Any]:
+        """Explicit per-table placements for the driver (only tables that
+        deviate from the deployment default appear)."""
+        out = {}
+        for t in self.tables:
+            cfg = self._slab_trainer_cfg(t.name)
+            if cfg is not None:
+                out[t.name] = slab_sharding(t, cfg.mesh, cfg.mesh_axis)
+        return out
 
     # -- runtime ------------------------------------------------------------
 
@@ -272,7 +322,8 @@ class InSituSession:
         """
         plan = plan or self.plan()
         driver = InSituDriver(deployment=self.deployment, tables=self.tables,
-                              straggler=self.straggler)
+                              straggler=self.straggler,
+                              table_shardings=self._table_shardings())
         if preload is not None:
             preload(driver.server)
         fns: dict[str, Callable] = {}

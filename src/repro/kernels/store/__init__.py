@@ -13,6 +13,8 @@ Layout mirrors the other kernel packages (attention / quadconv / ssd):
 quadratic intermediates), ``ops.py`` (mode dispatch + padding).
 """
 
-from .ops import gather_rows, preferred_mode, probe_slots, sample_slots
+from .ops import (gather_rows, gather_rows_sharded, preferred_mode,
+                  probe_slots, sample_slots)
 
-__all__ = ["probe_slots", "sample_slots", "gather_rows", "preferred_mode"]
+__all__ = ["probe_slots", "sample_slots", "gather_rows",
+           "gather_rows_sharded", "preferred_mode"]

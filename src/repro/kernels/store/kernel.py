@@ -28,7 +28,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["probe", "sample", "gather"]
+__all__ = ["probe", "sample", "gather", "gather_sharded"]
 
 # numpy scalar: inlined as a literal rather than captured as a traced const
 _EMPTY = np.uint32(0xFFFFFFFF)
@@ -144,6 +144,16 @@ def _gather_kernel(idx_ref, slab_ref, out_ref):
     out_ref[...] = slab_ref[...]
 
 
+def _gather_sharded_kernel(meta_ref, slab_ref, out_ref, *, local_cap: int):
+    # meta = [shard_offset, slot_0, ..., slot_{n-1}] (scalar-prefetched).
+    i = pl.program_id(0)
+    off = meta_ref[0]
+    slot = meta_ref[i + 1]
+    owned = (slot >= off) & (slot < off + local_cap)
+    row = slab_ref[...]
+    out_ref[...] = jnp.where(owned, row, jnp.zeros_like(row))
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def gather(slab: jax.Array, slots: jax.Array, interpret: bool = False):
     """slab [C, *elem], slots i32[n] (in-range) → rows [n, *elem]."""
@@ -168,4 +178,47 @@ def gather(slab: jax.Array, slots: jax.Array, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((n, slab2.shape[1]), slab.dtype),
         interpret=interpret,
     )(slots.astype(jnp.int32), slab2)
+    return rows.reshape((n, *elem))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_sharded(local_slab: jax.Array, slots: jax.Array, offset,
+                   interpret: bool = False):
+    """Shard-local row gather for a slot-axis-sharded slab.
+
+    ``local_slab [Cl, *elem]`` is THIS shard's slice of the global
+    ``[capacity, *elem]`` slab; ``slots i32[n]`` are *global* slot indices
+    (already clamped in ``[0, capacity)``); ``offset`` (traced scalar) is
+    the shard's first global slot.  Rows whose slot lives on this shard
+    are DMA'd out of the local slab (same scalar-prefetch indexing as
+    :func:`gather`, clamped into the local range); rows owned elsewhere
+    come out as zeros — the caller ``psum``s across shards to assemble
+    the full batch, which is the explicit collective that replaces the
+    replicated slab read.
+    """
+    local_cap = local_slab.shape[0]
+    elem = local_slab.shape[1:]
+    n = slots.shape[0]
+    feat = 1
+    for d in elem:
+        feat *= d
+    slab2 = local_slab.reshape(local_cap, max(feat, 1))
+    meta = jnp.concatenate([
+        jnp.asarray(offset, jnp.int32).reshape(1),
+        slots.astype(jnp.int32)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec(
+            (1, slab2.shape[1]),
+            lambda i, m: (jnp.clip(m[i + 1] - m[0], 0, local_cap - 1), 0))],
+        out_specs=pl.BlockSpec((1, slab2.shape[1]),
+                               lambda i, m: (i, 0)),
+    )
+    rows = pl.pallas_call(
+        functools.partial(_gather_sharded_kernel, local_cap=local_cap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, slab2.shape[1]), local_slab.dtype),
+        interpret=interpret,
+    )(meta, slab2)
     return rows.reshape((n, *elem))

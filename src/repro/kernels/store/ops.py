@@ -21,7 +21,8 @@ import jax.numpy as jnp
 from . import kernel as _k
 from . import ref as _ref
 
-__all__ = ["preferred_mode", "probe_slots", "sample_slots", "gather_rows"]
+__all__ = ["preferred_mode", "probe_slots", "sample_slots", "gather_rows",
+           "gather_rows_sharded"]
 
 
 def preferred_mode() -> str:
@@ -59,3 +60,22 @@ def gather_rows(slab: jax.Array, slots: jax.Array,
     if mode == "ref":
         return _ref.gather_rows_ref(slab, slots)
     return _k.gather(slab, slots, interpret=(mode == "interpret"))
+
+
+def gather_rows_sharded(local_slab: jax.Array, slots: jax.Array, offset,
+                        mode: str | None = None) -> jax.Array:
+    """Shard-local row gather for a slot-axis-sharded slab.
+
+    ``local_slab [Cl, *elem]`` is this rank's slice, ``slots i32[n]`` are
+    global slot indices (in ``[0, capacity)``), ``offset`` the rank's
+    first global slot.  Returns ``[n, *elem]`` rows with zeros where the
+    slot is owned by another shard; summing the per-shard results
+    (``lax.psum`` inside a ``shard_map``) reassembles the full batch —
+    each global slot has exactly one owner, so the sum is exact.
+    """
+    mode = mode or preferred_mode()
+    slots = jnp.asarray(slots, jnp.int32)
+    if mode == "ref":
+        return _ref.gather_rows_sharded_ref(local_slab, slots, offset)
+    return _k.gather_sharded(local_slab, slots, offset,
+                             interpret=(mode == "interpret"))

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["probe_slots_ref", "sample_slots_ref", "gather_rows_ref",
-           "EMPTY_KEY"]
+           "gather_rows_sharded_ref", "EMPTY_KEY"]
 
 EMPTY_KEY = jnp.uint32(0xFFFFFFFF)
 
@@ -64,3 +64,18 @@ def sample_slots_ref(version: jax.Array, ranks: jax.Array) -> jax.Array:
 def gather_rows_ref(slab: jax.Array, slots: jax.Array) -> jax.Array:
     """Row gather ``slab[slots]`` (slots already clamped in-range)."""
     return jnp.take(slab, slots, axis=0)
+
+
+def gather_rows_sharded_ref(local_slab: jax.Array, slots: jax.Array,
+                            offset) -> jax.Array:
+    """Shard-local row gather: ``local_slab [Cl, *elem]`` is one shard of
+    the slot-axis-sharded slab, ``slots`` are global indices, ``offset``
+    is this shard's first global slot.  Rows owned by other shards come
+    out as zeros (the caller psums shards together)."""
+    local_cap = local_slab.shape[0]
+    offset = jnp.asarray(offset, jnp.int32)
+    local = jnp.clip(slots.astype(jnp.int32) - offset, 0, local_cap - 1)
+    rows = jnp.take(local_slab, local, axis=0)
+    owned = (slots >= offset) & (slots < offset + local_cap)
+    mask = owned.reshape((-1,) + (1,) * (local_slab.ndim - 1))
+    return jnp.where(mask, rows, jnp.zeros_like(rows))

@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -98,6 +99,16 @@ class TrainerConfig:
       (``parallel.compress.compressed_psum_mean_ef``) so the compressed
       wire stops silently dropping what int8 rounded away.  Resets at each
       epoch boundary (the carry is per-dispatch state).
+    * ``slab_sharded`` — slab-sharded *data plane*: the table slab enters
+      the sharded fused epoch's ``shard_map`` already partitioned along
+      the mesh axis (slot axis split ``capacity/D`` per rank,
+      ``parallel.sharding.slab_sharding`` placement) instead of
+      replicated.  The store gather becomes shard-local
+      (``core.store.sample_sharded_impl``) with one explicit ``psum``
+      reassembling each batch — no table all-gather on entry, per-device
+      table memory O(capacity/D), results bit-identical to the
+      replicated-entry tier.  Requires ``mesh`` and a table capacity
+      divisible by the mesh-axis size.
     """
 
     ae: ae.AEConfig
@@ -115,12 +126,16 @@ class TrainerConfig:
     mesh_axis: str = "data"      # mesh axis the batch shards over
     ddp: str = "psum"            # "psum" (exact) | "int8" (compressed wire)
     ddp_error_feedback: bool = True   # int8: residual rides the scan carry
+    slab_sharded: bool = False   # table enters the shard_map pre-sharded
 
     def __post_init__(self):
         if self.ddp not in ("psum", "int8"):
             raise ValueError(f"unknown ddp mode {self.ddp!r}")
         if self.mesh is not None and not self.fused:
             raise ValueError("mesh-sharded training requires fused=True")
+        if self.slab_sharded and self.mesh is None:
+            raise ValueError("slab_sharded needs a mesh (the slab shards "
+                             "over cfg.mesh_axis)")
 
     @property
     def scaled_lr(self) -> float:
@@ -158,18 +173,24 @@ def _microstep_fn(cfg: TrainerConfig, levels, tx: opt.GradientTransformation):
 
 
 def _epoch_data(cfg: TrainerConfig, spec: S.TableSpec, table_state, rng,
-                mu, sd):
+                mu, sd, sample: Callable | None = None):
     """The shared per-epoch data pipeline (traceable): random store gather,
     standardization, random held-out validation tensor, shuffled train set.
 
     Both the single-device fused epoch and the sharded fused epoch consume
     the epoch rng identically here, so a mesh run trains on exactly the
     same data stream as the single-device tier — the basis of the
-    parity tests.  Returns ``(train [n_train,N,C], val [1,N,C], ok)``.
+    parity tests.  ``sample`` overrides the gather primitive (the
+    slab-sharded tier passes ``store.sample_sharded_impl`` bound to its
+    mesh axis; slot selection stays replicated compute, so the rng stream
+    is untouched).  Returns ``(train [n_train,N,C], val [1,N,C], ok)``.
     """
     n_train = max(cfg.gather - 1, 1)
     k_samp, k_val, k_perm = jax.random.split(rng, 3)
-    vals, _, ok = S.sample_impl(spec, table_state, k_samp, cfg.gather)
+    if sample is None:
+        vals, _, ok = S.sample_impl(spec, table_state, k_samp, cfg.gather)
+    else:
+        vals, _, ok = sample(table_state, k_samp, cfg.gather)
     data = (vals.transpose(0, 2, 1) - mu) / sd              # [G, N, C]
     # hold one tensor out at random (paper §4); train on the rest
     val_idx = jax.random.randint(k_val, (), 0, cfg.gather)
@@ -318,10 +339,22 @@ def make_sharded_fused_epoch(cfg: TrainerConfig, levels,
       synced gradient, so no post-hoc parameter broadcast is needed.
 
     One host dispatch per epoch regardless of mesh size — the paper's
-    "perfect scaling of training" claim made structural.  All operands
-    (table state included) are passed replicated; co-located slab-sharded
-    tables reshard on entry, which is the next optimization on the
-    ROADMAP.
+    "perfect scaling of training" claim made structural.
+
+    Data-plane entry (``cfg.slab_sharded``, tier ``"slab_sharded"``):
+
+    * **replicated entry** (default, tier ``"sharded_fused"``): every
+      operand — table state included — enters the ``shard_map``
+      replicated, so each device holds the whole ``[capacity, *elem]``
+      slab and a slab-sharded table is all-gathered on entry;
+    * **slab-sharded entry**: the slab's in-spec partitions the slot axis
+      over ``cfg.mesh_axis`` (matching the
+      ``parallel.sharding.slab_sharding`` placement), metadata stays
+      replicated, and the gather runs shard-local
+      (``store.sample_sharded_impl``) with ONE explicit ``psum``
+      reassembling each batch.  No table all-gather, per-device slab
+      memory O(capacity/D), bit-identical results (each slot has exactly
+      one owner, so the psum adds zeros to the owned row).
     """
     mesh = cfg.mesh
     if mesh is None:
@@ -336,6 +369,17 @@ def make_sharded_fused_epoch(cfg: TrainerConfig, levels,
     bl = bs // ndev
     n_batches = -(-n_train // bs)
 
+    if cfg.slab_sharded:
+        if spec.capacity % ndev:
+            raise ValueError(
+                f"slab-sharded entry needs capacity {spec.capacity} "
+                f"divisible by mesh axis {axis!r} size {ndev}")
+        sample = partial(S.sample_sharded_impl, spec, axis=axis)
+        slab_spec = P(axis)
+    else:
+        sample = None
+        slab_spec = P()
+
     def loss_fn(params, batch):
         return ae.loss_fn(params, cfg.ae, levels, batch)
 
@@ -343,7 +387,8 @@ def make_sharded_fused_epoch(cfg: TrainerConfig, levels,
 
     def epoch_body(table_state: S.TableState, state: TrainState, rng,
                    mu, sd):
-        train, val, ok = _epoch_data(cfg, spec, table_state, rng, mu, sd)
+        train, val, ok = _epoch_data(cfg, spec, table_state, rng, mu, sd,
+                                     sample=sample)
         starts = jnp.clip(jnp.arange(n_batches) * bs, 0, n_train - bs)
         ridx = jax.lax.axis_index(axis)
 
@@ -376,8 +421,10 @@ def make_sharded_fused_epoch(cfg: TrainerConfig, levels,
         val_rel = ae.rel_frobenius(val, rec)
         return state, (jnp.mean(losses), val_loss, val_rel, ok)
 
+    table_specs = S.TableState(slab=slab_spec, keys=P(), version=P(),
+                               ptr=P(), count=P())
     sharded = shard_map(epoch_body, mesh=mesh,
-                        in_specs=(P(), P(), P(), P(), P()),
+                        in_specs=(table_specs, P(), P(), P(), P()),
                         out_specs=(P(), P()),
                         check_rep=False)
     return jax.jit(sharded)
@@ -386,9 +433,13 @@ def make_sharded_fused_epoch(cfg: TrainerConfig, levels,
 #: Consumer tier -> epoch builder.  Tier *selection* is plan data
 #: (``repro.insitu.plan.trainer_tier``); this table is the only place the
 #: names meet code, so adding a tier is one entry, not another if-chain.
+#: ``sharded_fused`` and ``slab_sharded`` share one builder — the entry
+#: layout is read from ``cfg.slab_sharded``, which the tier rules keep
+#: consistent with the tier name.
 EPOCH_BUILDERS: dict[str, Callable] = {
     "fused": make_fused_epoch,
     "sharded_fused": make_sharded_fused_epoch,
+    "slab_sharded": make_sharded_fused_epoch,
     "per_verb": make_per_verb_epoch,
 }
 
@@ -466,9 +517,18 @@ def insitu_train(client: Client, coords: jax.Array, cfg: TrainerConfig,
     if fused:
         # Warm the fused-epoch executable on a throwaway empty table so the
         # timed loop measures dispatch, not compilation (charged to its own
-        # component bucket, like the paper's one-off model-load cost).
+        # component bucket, like the paper's one-off model-load cost).  The
+        # slab-sharded tier places the dummy like the live table — jit
+        # caches on input shardings, so a replicated dummy would compile a
+        # second executable the timed loop never uses.
         with client.timers.time("jit_compile"):
-            dummy = S.init_table(client.server.spec(cfg.table))
+            dummy_sharding = None
+            if tier == "slab_sharded":
+                from ..parallel.sharding import slab_sharding
+                dummy_sharding = slab_sharding(
+                    client.server.spec(cfg.table), cfg.mesh, cfg.mesh_axis)
+            dummy = S.init_table(client.server.spec(cfg.table),
+                                 dummy_sharding)
             jax.block_until_ready(
                 epoch_fn(dummy, state, jax.random.key(0), mu, sd)[1])
     else:

@@ -40,7 +40,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = ["DEFAULT_RULES", "use_mesh", "current_mesh", "spec_for", "shard",
            "sharding_for", "fitted_sharding", "logical_sharding", "ParamSpec",
            "init_params", "param_specs_to_shardings", "param_axes",
-           "data_mesh", "disjoint_data_meshes"]
+           "data_mesh", "disjoint_data_meshes", "slab_sharding"]
 
 # logical axis -> mesh axis name(s)
 DEFAULT_RULES: dict[str, Any] = {
@@ -187,6 +187,26 @@ def data_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:
     from ..launch.mesh import axis_types_kw
     n = len(jax.devices()) if n_devices is None else int(n_devices)
     return jax.make_mesh((n,), (axis,), **axis_types_kw(1))
+
+
+def slab_sharding(spec, mesh: Mesh | None, axis: str = "data"
+                  ) -> NamedSharding | None:
+    """Placement rule of the slab-sharded data plane: partition a store
+    table's ``[capacity, *elem]`` slab along its *slot* axis over mesh
+    axis ``axis``, so each rank owns ``capacity/D`` slots and per-device
+    table memory stops growing with total capacity (the co-located
+    scaling property of the paper's Fig. 5).
+
+    ``spec`` is a ``core.store.TableSpec`` (duck-typed: anything with
+    ``capacity`` and ``shape``).  The per-slot metadata stays replicated —
+    ``core.store.init_table`` handles that when given this sharding.
+    Falls back to a replicated slab when ``capacity`` does not divide the
+    axis size (jit input shardings must divide exactly).
+    """
+    if mesh is None:
+        return None
+    part = axis if spec.capacity % int(mesh.shape[axis]) == 0 else None
+    return NamedSharding(mesh, P(part, *([None] * len(spec.shape))))
 
 
 def disjoint_data_meshes(count: int, axis: str = "data", devices=None

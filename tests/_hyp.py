@@ -10,12 +10,21 @@ Usage in test modules::
 """
 
 try:
-    from hypothesis import given, settings, strategies as st  # noqa: F401
+    from hypothesis import (HealthCheck, given, settings,  # noqa: F401
+                            strategies as st)
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
     import pytest
 
     HAVE_HYPOTHESIS = False
+
+    class HealthCheck:
+        """Attribute sink: ``HealthCheck.too_slow`` etc. at decoration
+        time must not raise when hypothesis is absent."""
+
+        def __getattr__(self, name):
+            return name
+    HealthCheck = HealthCheck()
 
     def given(*_args, **_kwargs):
         def deco(fn):

@@ -173,6 +173,81 @@ def test_colocated_fused_put_path_collective_free():
 
 
 @pytest.mark.slow
+def test_slab_sharded_epoch_no_table_allgather():
+    """The slab-sharded data plane's structural claims, from compiled HLO:
+
+    1. the slab-sharded epoch (tier ``slab_sharded``) contains NO
+       all-gather — the table enters the shard_map pre-partitioned and the
+       batch is reassembled by an explicit psum (all-reduce), so the
+       collective moved from an implicit whole-slab gather to an explicit
+       per-epoch batch sum;
+    2. the *contrast*: the replicated-entry tier fed the same sharded
+       table MUST all-gather the slab on entry — proving assertion 1 is
+       not vacuous;
+    3. the co-located fused put path (a whole capture_scan chunk) stays
+       collective-free even when the slab it writes is slot-axis sharded.
+    """
+    run_subprocess("""
+        import jax, jax.numpy as jnp
+        from dataclasses import replace
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.analysis.hlo import assert_collective_free, count_ops
+        from repro.core import store as S
+        from repro.core.store import TableSpec
+        from repro.ml import autoencoder as ae, trainer as tr
+        from repro.parallel.sharding import data_mesh, slab_sharding
+        from repro.sim import flatplate as fp
+        from repro.train import optimizer as opt
+
+        fcfg = fp.FlatPlateConfig(nx=8, ny=8, nz=4)
+        n = fcfg.n_points
+        spec = TableSpec("field", shape=(4, n), capacity=16, engine="ring")
+        mesh = data_mesh(2)
+        sh = slab_sharding(spec, mesh)
+        st = S.init_table(spec, sh)
+
+        aecfg = ae.AEConfig(n_points=n, mode="ref", latent=16, mlp_width=16)
+        levels = ae.coords_pyramid(aecfg, fp.grid_coords(fcfg))
+        tx = opt.adam(1e-3)
+        cfg_rep = tr.TrainerConfig(ae=aecfg, gather=6, batch_size=4,
+                                   lr=1e-3, mesh=mesh)
+        cfg_slab = replace(cfg_rep, slab_sharded=True)
+        state0 = tr.init_state(cfg_rep, jax.random.key(0), tx)
+        mu, sd = jnp.zeros((4,)), jnp.ones((4,))
+        args = (st, state0, jax.random.key(7), mu, sd)
+
+        # 1) slab-sharded entry: zero all-gather, DDP + gather all-reduces
+        ep_slab = tr.EPOCH_BUILDERS["slab_sharded"](cfg_slab, levels, tx,
+                                                    spec)
+        c = count_ops(ep_slab.lower(*args).compile().as_text())
+        assert c.get("all-gather", 0) == 0, c
+        assert c.get("all-reduce", 0) >= 2, c
+
+        # 2) contrast: replicated entry on the same sharded table
+        #    all-gathers the slab
+        ep_rep = tr.EPOCH_BUILDERS["sharded_fused"](cfg_rep, levels, tx,
+                                                    spec)
+        c2 = count_ops(ep_rep.lower(*args).compile().as_text())
+        assert c2.get("all-gather", 0) > 0, c2
+
+        # 3) the fused put path stays collective-free against the
+        #    slot-axis-sharded slab
+        def step_fn(carry, t):
+            return carry, S.make_key(0, t), \\
+                jnp.broadcast_to(t.astype(jnp.float32), (4, n))
+        st_abs = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                           sharding=a.sharding), st)
+        lowered = jax.jit(
+            lambda s, c: S.capture_scan_impl(spec, s, step_fn, c, 8, 2),
+            donate_argnums=0).lower(st_abs, jnp.zeros(()))
+        assert_collective_free(lowered.compile().as_text(),
+                               "fused put into slot-sharded slab")
+        print("SLAB_HLO_OK", c, c2)
+    """, n_devices=2)
+
+
+@pytest.mark.slow
 def test_compressed_allreduce_matches_mean():
     run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np

@@ -233,6 +233,92 @@ class TestScenarioGrid:
 
 
 @pytest.mark.slow
+def test_slab_sharded_session_and_placement_predictions():
+    """The slab-sharded tier through the SESSION path on a forced
+    2-device host: the declaration resolves tier ``slab_sharded``, the
+    table is placed pre-partitioned, dispatch attribution stays exact,
+    ``plan(hlo=True)`` proves zero table all-gather — and the collective
+    predictions are *placement-aware*: a replicated-entry mesh trainer
+    reading a sharded-placed table (co-located ``capacity_axis``) is
+    predicted to all-gather it, so ``check_collectives`` passes on both
+    by-design configurations instead of false-alarming."""
+    run_subprocess(textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core import TableSpec
+        from repro.core import store as S
+        from repro.core.deployment import Colocated
+        from repro.insitu import InSituSession, Producer, TrainerConsumer
+        from repro.ml import autoencoder as ae, trainer as tr
+        from repro.parallel.sharding import data_mesh
+        from repro.sim import flatplate as fp
+
+        fcfg = fp.FlatPlateConfig(nx=8, ny=8, nz=4)
+        n = fcfg.n_points
+        coords = fp.grid_coords(fcfg)
+        # precomputed snapshots: pure indexing in-dispatch, so producer
+        # bytes are placement-independent (see docs/architecture.md)
+        snaps = jnp.stack([fp.snapshot(fcfg, jax.random.key(0), t)
+                           for t in range(10)])
+
+        def step(carry, rank, t):
+            return carry, S.make_key(rank, t), snaps[t % 10]
+
+        def build(slab, deployment=None):
+            cfg = tr.TrainerConfig(
+                ae=ae.AEConfig(n_points=n, mode="ref", latent=16,
+                               mlp_width=16),
+                epochs=2, gather=6, batch_size=4, lr=1e-3,
+                mesh=data_mesh(2), slab_sharded=slab)
+            return InSituSession(
+                tables=[TableSpec("field", shape=(4, n), capacity=16,
+                                  engine="ring")],
+                components=[
+                    Producer(step, table="field", steps=12,
+                             carry=jnp.zeros(()), emit_every=2),
+                    TrainerConsumer(cfg, coords),
+                ], deployment=deployment)
+
+        # --- slab-sharded session: tier, dispatches, no all-gather ------
+        sess = build(True)
+        plan = sess.plan(hlo=True)
+        assert plan.component("trainer").tier == "slab_sharded"
+        for entry in plan.components:
+            entry.check_collectives()
+        coll = dict(plan.component("trainer").collectives)
+        assert coll["all-gather"] == 0 and coll["all-reduce"] > 0, coll
+        res = sess.run(plan=plan, sequential=True, max_wall_s=380)
+        assert res.ok, {k: v.error for k, v in res.run.components.items()}
+        for entry in plan.components:
+            assert res.op_delta(entry.name) == entry.store_dispatches, \\
+                (entry.name, entry.tier)
+
+        # --- bit-identical to the replicated-entry tier -----------------
+        res2 = build(False).run(sequential=True, max_wall_s=380)
+        assert res2.ok
+        for a, b in zip(
+                jax.tree.leaves(res.output("trainer").state.params),
+                jax.tree.leaves(res2.output("trainer").state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        # --- placement-aware prediction: replicated entry on a
+        #     sharded-placed table MUST all-gather, and the plan says so -
+        dep = Colocated(data_mesh(2), elem_spec=P(None, None),
+                        capacity_axis="data")
+        sess3 = build(False, deployment=dep)
+        plan3 = sess3.plan(hlo=True)
+        assert plan3.component("trainer").tier == "sharded_fused"
+        pred = dict(plan3.component("trainer").predicted_collectives)
+        assert pred["all-gather"] is True, pred
+        for entry in plan3.components:
+            entry.check_collectives()          # no false alarm
+        coll3 = dict(plan3.component("trainer").collectives)
+        assert coll3["all-gather"] > 0, coll3
+        print("SLAB_SESSION_OK")
+    """), n_devices=2, timeout=900.0)
+
+
+@pytest.mark.slow
 def test_sharded_grid_subprocess():
     """The same declaration on a forced 4-device host: sharded-fused
     single consumer parity with the fused tier, plan HLO all-reduce

@@ -161,6 +161,111 @@ def test_int8_error_feedback_in_scan_carry():
     """)
 
 
+@pytest.mark.slow
+def test_slab_sharded_entry_bitwise_parity_and_cache():
+    """The slab-sharded data plane (tier ``slab_sharded``): the table
+    enters the epoch's shard_map pre-partitioned on the slot axis, the
+    gather runs shard-local + one psum — and the final TrainState must be
+    BIT-identical to the replicated-entry sharded tier on the same table.
+    The compiled executable must also be reused across epochs (no
+    per-epoch recompiles from sharding mismatches), and a non-divisible
+    capacity is rejected up front."""
+    _run("""
+        from dataclasses import replace
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.parallel.sharding import slab_sharding
+
+        mesh = data_mesh(2)
+        cfg_rep = tr.TrainerConfig(ae=aecfg, gather=6, batch_size=4,
+                                   lr=1e-3, mesh=mesh)
+        cfg_slab = replace(cfg_rep, slab_sharded=True)
+        state0 = tr.init_state(cfg_rep, jax.random.key(0), tx)
+        ep_rep = tr.EPOCH_BUILDERS["sharded_fused"](cfg_rep, levels, tx,
+                                                    spec)
+        ep_slab = tr.EPOCH_BUILDERS["slab_sharded"](cfg_slab, levels, tx,
+                                                    spec)
+
+        # place the SAME table contents slab-sharded (slot axis split,
+        # metadata replicated)
+        sh = slab_sharding(spec, mesh)
+        rep = NamedSharding(mesh, P())
+        st_sh = S.TableState(
+            slab=jax.device_put(st.slab, sh),
+            keys=jax.device_put(st.keys, rep),
+            version=jax.device_put(st.version, rep),
+            ptr=jax.device_put(st.ptr, rep),
+            count=jax.device_put(st.count, rep))
+
+        rng = jax.random.key(7)
+        s1, m1 = ep_rep(st, state0, rng, mu, sd)
+        s2, m2 = ep_slab(st_sh, state0, rng, mu, sd)
+        for a, b in zip(jax.tree.leaves(s1.params),
+                        jax.tree.leaves(s2.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(m1[0]), np.asarray(m2[0]))
+
+        # one executable serves every epoch (same input shardings)
+        s3, _ = ep_slab(st_sh, state0, jax.random.key(8), mu, sd)
+        assert ep_slab._cache_size() == 1, ep_slab._cache_size()
+
+        # non-divisible capacity is rejected at build time
+        bad = TableSpec("bad", shape=(4, n), capacity=15, engine="ring")
+        try:
+            tr.EPOCH_BUILDERS["slab_sharded"](cfg_slab, levels, tx, bad)
+            raise SystemExit("capacity 15 over 2 ranks was accepted")
+        except ValueError:
+            pass
+        print("SLAB_PARITY_OK")
+    """)
+
+
+@pytest.mark.slow
+def test_slab_sharded_insitu_train_dispatches():
+    """End to end through the server: the table is *placed* slab-sharded
+    at creation, ``insitu_train`` resolves the slab_sharded tier, and the
+    epoch loop stays exactly one store dispatch per epoch (plus the
+    norm-stats bootstrap) — the O(1)-dispatch invariant with the sharded
+    data plane.  The bucketed producer capture against the sharded table
+    must also keep compiling once per (table, bucket), not per tail."""
+    _run("""
+        from repro.parallel.sharding import slab_sharding
+        mesh = data_mesh(2)
+        srv = StoreServer()
+        srv.create_table(spec, slab_sharding=slab_sharding(spec, mesh))
+        client = Client(srv)
+
+        # fused producer against the sharded slab: distinct tail lengths
+        # inside one bucket range still compile at most two executables
+        def pstep(c, t):
+            val = jnp.broadcast_to(t.astype(jnp.float32), (4, n))
+            return c, S.make_key(0, t), val
+        c0 = S.capture_scan._cache_size()
+        for t0, k in [(0, 5), (5, 7), (12, 9), (21, 12), (33, 6)]:
+            client.capture_scan("field", pstep, jnp.zeros(()), k, 1,
+                                t0=t0, bucket=True)
+        assert S.capture_scan._cache_size() - c0 <= 2, \\
+            S.capture_scan._cache_size() - c0
+
+        # refill with real snapshots for training
+        for i in range(10):
+            client.send_step("field", i,
+                             fp.snapshot(fcfg, jax.random.key(0), i))
+        cfg = tr.TrainerConfig(ae=aecfg, epochs=5, gather=6, batch_size=4,
+                               lr=1e-3, mesh=mesh, slab_sharded=True)
+        from repro.insitu.plan import trainer_tier
+        assert trainer_tier(cfg) == "slab_sharded"
+        ops_before = srv.op_count
+        state, hist, _, _ = tr.insitu_train(client, fp.grid_coords(fcfg),
+                                            cfg)
+        assert len(hist) == 5
+        assert all(np.isfinite(h.train_loss) for h in hist)
+        # exactly: 1 norm-stats bootstrap sample + 1 capture per epoch
+        assert srv.op_count - ops_before == cfg.epochs + 1, \\
+            srv.op_count - ops_before
+        print("SLAB_DISPATCH_OK")
+    """)
+
+
 def test_config_validation():
     from repro.ml import autoencoder as ae
     from repro.ml import trainer as tr
@@ -170,3 +275,5 @@ def test_config_validation():
         tr.TrainerConfig(ae=aecfg, ddp="fp8")
     with pytest.raises(ValueError):
         tr.TrainerConfig(ae=aecfg, mesh=object(), fused=False)
+    with pytest.raises(ValueError):
+        tr.TrainerConfig(ae=aecfg, slab_sharded=True)   # needs a mesh

@@ -376,3 +376,91 @@ class TestChunkBucketing:
         client.capture_scan("mb", step_fn, jnp.zeros((3,)), 5, 1,
                             n_ranks=3, bucket=True)
         assert srv.watermark("mb") == 15 == srv.watermark_device("mb")
+
+
+def _rank_t_val(rank, t):
+    return jnp.stack([jnp.asarray(rank, jnp.float32),
+                      jnp.asarray(t, jnp.float32),
+                      jnp.asarray(rank, jnp.float32)
+                      * jnp.asarray(t, jnp.float32)])
+
+
+class TestCaptureTailEdgeCases:
+    """Boundary conditions of the bucketing + fused-capture machinery:
+    chunk lengths exactly at power-of-two bucket edges, chunks longer than
+    the ring capacity, and multi-rank interleave with more ranks than
+    slots — every case must stay byte-identical to the sequential
+    per-verb replay."""
+
+    def test_bucket_length_at_pow2_boundaries(self):
+        # below / at / above each boundary, incl. the min_bucket floor
+        for k, want in [(7, 8), (8, 8), (9, 16), (15, 16), (16, 16),
+                        (17, 32), (31, 32), (32, 32), (33, 64)]:
+            assert S.bucket_length(k) == want, k
+        # the floor: short tails never compile a tiny one-off executable
+        assert S.bucket_length(1) == 8
+        assert S.bucket_length(1, min_bucket=2) == 2
+        assert S.bucket_length(3, min_bucket=2) == 4
+        assert S.bucket_length(5, min_bucket=16) == 16
+
+    def test_bucketed_capture_at_exact_boundary_lengths(self):
+        """A chunk landing exactly on its bucket (valid == padded length)
+        and one past it must both replay like sequential puts."""
+        from repro.core.client import Client
+        for k in (8, 9, 16):
+            spec = TableSpec("bd", shape=(3,), capacity=32, engine="ring")
+            srv = StoreServer()
+            srv.create_table(spec)
+            client = Client(srv)
+
+            def step_fn(c, t):
+                return c + 1.0, S.make_key(0, t), _rank_t_val(0, t)
+
+            carry = client.capture_scan("bd", step_fn, jnp.zeros(()), k, 1,
+                                        bucket=True)
+            assert float(carry) == k          # padding never advanced it
+            ref = S.init_table(spec)
+            for t in range(k):
+                ref = S.put(spec, ref, S.make_key(0, t), _rank_t_val(0, t))
+            for a, b in zip(srv.checkout("bd"), ref):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            assert srv.watermark("bd") == k == srv.watermark_device("bd")
+
+    def test_chunk_longer_than_capacity_wraps_last_writer_wins(self):
+        """One fused chunk writing 3x the ring capacity: wrap-around slot
+        collisions must resolve exactly like the sequential replay (count
+        still bumped per put, oldest rows overwritten)."""
+        spec = TableSpec("wr", shape=(3,), capacity=8, engine="ring")
+        n = 24
+
+        def step_fn(c, t):
+            return c, S.make_key(0, t), _rank_t_val(0, t)
+
+        got, _ = S.capture_scan(spec, S.init_table(spec), step_fn,
+                                jnp.zeros(()), n, 1)
+        ref = S.init_table(spec)
+        for t in range(n):
+            ref = S.put(spec, ref, S.make_key(0, t), _rank_t_val(0, t))
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert int(got.count) == n            # collisions still count
+
+    def test_more_ranks_than_capacity_interleaves_like_sequential(self):
+        """R > capacity: each emitting step's rank-major put_many spills
+        around the ring; the interleave must equal R sequential puts per
+        step, step by step."""
+        spec = TableSpec("rc", shape=(3,), capacity=4, engine="ring")
+        ranks, length = 6, 3
+
+        def step_fn(c, rank, t):
+            return c, S.make_key(rank, t), _rank_t_val(rank, t)
+
+        got, _ = S.capture_scan_multi(spec, S.init_table(spec), step_fn,
+                                      jnp.zeros((ranks,)), length, ranks, 1)
+        ref = S.init_table(spec)
+        for t in range(length):
+            for r in range(ranks):
+                ref = S.put(spec, ref, S.make_key(r, t), _rank_t_val(r, t))
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert int(got.count) == ranks * length

@@ -113,6 +113,87 @@ def test_sample_empty_table(mode):
 
 
 # ---------------------------------------------------------------------------
+# Sharded gather (the slab-sharded data plane's shard-local fetch)
+# ---------------------------------------------------------------------------
+
+class TestShardedGather:
+    """``gather_rows_sharded``: each shard fetches only the slots it owns
+    (zeros elsewhere); summing the shard results reassembles the global
+    gather bit-exactly.  Parity across ref and interpret modes."""
+
+    def _slab(self, capacity=16, shape=(3, 5)):
+        return jax.random.normal(jax.random.key(0), (capacity, *shape))
+
+    @pytest.mark.parametrize("mode", MODES)
+    def test_shards_sum_to_global_gather(self, mode):
+        from repro.kernels.store import ops as kops
+        slab = self._slab()
+        slots = jnp.array([0, 3, 7, 8, 11, 15, 2, 9, 8, 0], jnp.int32)
+        full = kops.gather_rows(slab, slots, mode)
+        for n_shards in (2, 4):
+            cl = slab.shape[0] // n_shards
+            parts = [kops.gather_rows_sharded(slab[i * cl:(i + 1) * cl],
+                                              slots, i * cl, mode)
+                     for i in range(n_shards)]
+            np.testing.assert_array_equal(
+                np.asarray(sum(parts)), np.asarray(full))
+            # exactly one shard owns each row
+            owned = sum((np.abs(np.asarray(p)).sum(axis=(1, 2)) > 0)
+                        .astype(int) for p in parts)
+            assert (owned <= 1).all()
+
+    def test_ref_interpret_parity(self):
+        from repro.kernels.store import ops as kops
+        slab = self._slab(capacity=8)
+        slots = jnp.array([7, 0, 3, 4, 5, 1], jnp.int32)
+        for off in (0, 4):
+            local = slab[off:off + 4]
+            r = kops.gather_rows_sharded(local, slots, off, "ref")
+            k = kops.gather_rows_sharded(local, slots, off, "interpret")
+            np.testing.assert_array_equal(np.asarray(r), np.asarray(k))
+
+    @pytest.mark.parametrize("mode", MODES)
+    def test_traced_offset(self, mode):
+        """The shard offset is a traced scalar inside shard_map
+        (``axis_index * local_cap``); both paths must accept it."""
+        from repro.kernels.store import ops as kops
+        slab = self._slab(capacity=8)
+        slots = jnp.array([1, 6, 3], jnp.int32)
+
+        out = jax.jit(lambda off: kops.gather_rows_sharded(
+            slab[4:], slots, off, mode))(jnp.int32(4))
+        ref = kops.gather_rows_sharded(slab[4:], slots, 4, "ref")
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    @pytest.mark.parametrize("mode", MODES)
+    def test_sample_sharded_psum_equals_sample(self, mode):
+        """``store.sample_sharded_impl`` under a real 1-axis shard_map on
+        the available devices must reproduce ``sample_impl`` bit-exactly
+        (on 1 device the shard owns everything — the degenerate identity;
+        multi-device equality is covered by the subprocess tests)."""
+        from functools import partial
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.parallel.sharding import data_mesh
+
+        spec, st = _filled("ring")
+        mesh = data_mesh(len(jax.devices()))
+        rng = jax.random.key(11)
+        want = S.sample_impl(spec, st, rng, 6, mode)
+
+        body = partial(S.sample_sharded_impl, spec, n=6, axis="data",
+                       mode=mode)
+        got = jax.jit(shard_map(
+            lambda state, k: body(state, k),
+            mesh=mesh,
+            in_specs=(S.TableState(slab=P("data"), keys=P(), version=P(),
+                                   ptr=P(), count=P()), P()),
+            out_specs=(P(), P(), P()), check_rep=False))(st, rng)
+        for a, b in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
 # Complexity: no [n, capacity] intermediate anywhere in the routed ops
 # ---------------------------------------------------------------------------
 

@@ -5,7 +5,8 @@ Run from the repo root (CI bench-smoke job):
     PYTHONPATH=src python -m benchmarks.run --json --smoke --json-dir out
     python tools/check_bench.py --fresh-dir out
 
-Checks ``BENCH_fused_pipeline.json`` (the session-API pipeline bench):
+Checks ``BENCH_fused_pipeline.json`` (the session-API pipeline bench) and
+``BENCH_sharded_epoch.json`` (the sharded-epoch / data-plane-entry bench):
 
 1. **Structural** (hardware-independent, hard):
    * fused consumer ``store_dispatches_per_epoch`` must stay <= 1.0 — the
@@ -20,6 +21,20 @@ Checks ``BENCH_fused_pipeline.json`` (the session-API pipeline bench):
    losing its edge).  The consumer side is gated structurally only —
    its epoch is dominated by real SGD compute, so its wall-clock is not
    a dispatch-overhead signal.
+
+For the sharded-epoch bench the gates are the data-plane claims:
+
+* **Structural** (hard): every cell's ``dispatches_per_epoch`` <= 1.0;
+  the slab-sharded entry's compiled epoch has ZERO table all-gathers and
+  its per-device entry bytes shrink by the mesh factor
+  (``entry_bytes_ratio == mesh``).
+* **Performance** (absolute band): the slab-sharded vs replicated
+  ``epochs_per_s_ratio`` — measured between two same-profile cells of
+  the same run, so hardware-comparable — must stay above
+  ``1 - 2*tol`` (default 0.6): pre-sharding the table must not cost
+  meaningful throughput.  An absolute floor, not a trajectory delta:
+  on a time-sliced CPU the two subprocess timings carry ±20-25% noise,
+  so the true ~1.0 ratio would flake against any committed value.
 """
 
 from __future__ import annotations
@@ -74,6 +89,46 @@ def check_fused_pipeline(base: dict, fresh: dict, tol: float,
     return errors
 
 
+def check_sharded_epoch(base: dict, fresh: dict, tol: float) -> list[str]:
+    errors: list[str] = []
+
+    # -- structural invariants --------------------------------------------
+    for cell in fresh["cells"]:
+        if cell["dispatches_per_epoch"] > 1.0 + EPS:
+            errors.append(
+                f"fig10 mesh={cell['mesh']} entry={cell['entry']}: "
+                f"dispatches_per_epoch regressed to "
+                f"{cell['dispatches_per_epoch']} (> 1.0)")
+    cmp = fresh.get("entry_comparison")
+    if cmp is None:
+        errors.append("fig10: no replicated-vs-slab-sharded entry cells "
+                      "at a shared mesh size (entry_comparison missing)")
+        return errors
+    if cmp["slab_entry_all_gather"] != 0:
+        errors.append(
+            f"fig10: slab-sharded entry compiled with "
+            f"{cmp['slab_entry_all_gather']} all-gather op(s) — the table "
+            f"is being gathered on entry")
+    if cmp["slab_entry_all_reduce"] < 1:
+        errors.append(
+            "fig10: slab-sharded entry shows no all-reduce — the explicit "
+            "batch-assembly psum / DDP sync is gone from the epoch")
+    if cmp["entry_bytes_ratio"] < cmp["mesh"] - EPS:
+        errors.append(
+            f"fig10: per-device entry bytes ratio {cmp['entry_bytes_ratio']}"
+            f" < mesh factor {cmp['mesh']} — the slab no longer shards")
+
+    # -- performance (same-run, same-hardware cell pair; absolute band) ---
+    del base  # structural + band checks only; see module docstring
+    floor = 1.0 - 2.0 * tol
+    if cmp["epochs_per_s_ratio"] < floor:
+        errors.append(
+            f"fig10 slab/replicated epochs_per_s ratio "
+            f"{cmp['epochs_per_s_ratio']:.3f} below floor {floor:.2f}: "
+            f"the slab-sharded entry is costing real throughput")
+    return errors
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh-dir", default="out",
@@ -91,12 +146,17 @@ def main() -> int:
     base = _load(Path(args.baseline_dir) / "BENCH_fused_pipeline.json")
     fresh = _load(Path(args.fresh_dir) / "BENCH_fused_pipeline.json")
     errors = check_fused_pipeline(base, fresh, args.tol, args.ratios_only)
+    errors += check_sharded_epoch(
+        _load(Path(args.baseline_dir) / "BENCH_sharded_epoch.json"),
+        _load(Path(args.fresh_dir) / "BENCH_sharded_epoch.json"),
+        args.tol)
     if errors:
         print("bench check FAILED:")
         for e in errors:
             print(" -", e)
         return 1
-    print("bench check OK (BENCH_fused_pipeline.json within tolerance)")
+    print("bench check OK (BENCH_fused_pipeline.json + "
+          "BENCH_sharded_epoch.json within tolerance)")
     return 0
 
 
