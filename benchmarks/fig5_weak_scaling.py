@@ -16,11 +16,26 @@ wall-clock cannot show flat scaling directly — the structure can):
    t = fan_in·msg/(links·ICI_bw) (∝ ranks); clustered-scaled-DB flat at
    the 8:1 fan-in the paper uses.
 3. *measured* single-device per-op cost as the absolute anchor.
+4. **measured clustered fan-in curve** (the paper's clustered line, run
+   for real): the SAME ~10-line ``InSituSession`` declaration — a fused
+   producer streaming 256KB snapshots into a ``Clustered`` store — at a
+   sweep of producer:db device ratios (``split_devices``), each cell in
+   a fresh subprocess with forced host devices.  Measures producer
+   steps/s AND the structural clustered claim: exactly ONE cross-mesh
+   staged transfer per ``capture_scan`` chunk
+   (``stats()["staged_transfers"]`` == ``plan.explain()`` prediction).
+   Writes ``BENCH_weak_scaling.json``; ``tools/check_bench.py`` gates
+   staged/chunk == 1 (hard) and the fan-in throughput ratio (band).
 """
 
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
 
 from .common import HW, Row, v5e_transfer_time
 
@@ -28,13 +43,59 @@ from .common import HW, Row, v5e_transfer_time
 MSG = 256 * 1024     # paper: 256KB per rank
 RANKS_PER_NODE = 24
 
+_CLUSTERED_CHILD = """
+    import json, sys
+    import jax, jax.numpy as jnp
+    from repro.core import TableSpec, make_clustered_1d
+    from repro.core import store as S
+    from repro.insitu import InSituSession, Producer
+
+    db_fraction, steps, chunk, msg = (float(sys.argv[1]), int(sys.argv[2]),
+                                      int(sys.argv[3]), int(sys.argv[4]))
+    elems = msg // 4                         # 256KB float32 per snapshot
+    snap = jax.random.normal(jax.random.key(0), (elems,))
+
+    def step(carry, rank, t):
+        return carry + 1.0, S.make_key(rank, t), snap * carry
+
+    # the whole clustered scenario is one declaration: a fused producer
+    # streaming into a store on dedicated devices
+    dep = make_clustered_1d(db_fraction=db_fraction)
+    session = InSituSession(
+        tables=[TableSpec("field", shape=(elems,), capacity=16,
+                          engine="ring")],
+        components=[Producer(step, table="field", steps=steps,
+                             carry=jnp.zeros(()), emit_every=1,
+                             chunk=chunk)],
+        deployment=dep)
+    plan = session.plan()
+    res = session.run(plan=plan, sequential=True, max_wall_s=600)
+    assert res.ok, {k: v.error for k, v in res.run.components.items()}
+    stats = res.server.stats()
+    t = res.run.timers
+    wall = t.total("equation_solution") + t.total("send")
+    chunks = -(-steps // chunk)
+    n_clients = len(dep.client_mesh.devices.ravel())
+    n_db = len(dep.db_mesh.devices.ravel())
+    print(json.dumps({
+        "fan_in": dep.fan_in,
+        "clients": n_clients,
+        "db": n_db,
+        "devices": len(jax.devices()),
+        "steps": steps,
+        "chunks": chunks,
+        "steps_per_s": steps / max(wall, 1e-9),
+        "staged_transfers": stats["staged_transfers"],
+        "predicted_staged": plan.staged_transfers,
+        "staged_per_chunk": stats["staged_transfers"] / chunks,
+        "op_count": stats["op_count"],
+        "predicted_ops": plan.store_dispatches,
+    }))
+"""
+
 
 def structural_rows(quick: bool = True):
     """Run the zero-collective lowering proof in a subprocess."""
-    import os
-    import subprocess
-    import sys
-    import textwrap
     sizes = "(16, 64, 256)" if quick else "(16, 64, 128, 256)"
     code = textwrap.dedent(f"""
         import os
@@ -70,10 +131,7 @@ def structural_rows(quick: bool = True):
             out.append((n, colo, clus))
         print("RESULT", json.dumps(out))
     """)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
-    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                          text=True, timeout=560, env=env)
+    proc = _run_py(code, env_extra={})
     rows = []
     for line in proc.stdout.splitlines():
         if line.startswith("RESULT"):
@@ -87,6 +145,71 @@ def structural_rows(quick: bool = True):
                         proc.stderr.strip().splitlines()[-1][:120]
                         if proc.stderr else "no output"))
     return rows
+
+
+def _run_py(code: str, argv: list[str] = (), env_extra: dict | None = None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    if env_extra:
+        env.update(env_extra)
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code), *argv],
+        capture_output=True, text=True, timeout=560, env=env)
+
+
+def _clustered_cell(db_fraction: float, steps: int, chunk: int,
+                    devices: int) -> dict:
+    """One measured clustered fan-in cell in a fresh subprocess (forcing
+    host devices must precede the first jax call; fresh processes keep
+    the cells' timings free of each other's compile caches)."""
+    proc = _run_py(
+        _CLUSTERED_CHILD,
+        argv=[str(db_fraction), str(steps), str(chunk), str(MSG)],
+        env_extra={"XLA_FLAGS":
+                   f"--xla_force_host_platform_device_count={devices}"})
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"fig5 clustered cell (db_fraction={db_fraction}) failed:\n"
+            f"{proc.stderr[-4000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def _fanin_comparison(cells: list[dict]) -> dict | None:
+    """Lowest vs highest fan-in cell of the sweep — the same-run band
+    ``tools/check_bench.py`` gates (producer work is identical across
+    cells, so on shared hardware the ratio isolates the fan-in cost)."""
+    if len(cells) < 2:
+        return None
+    lo = min(cells, key=lambda c: c["fan_in"])
+    hi = max(cells, key=lambda c: c["fan_in"])
+    if lo["fan_in"] == hi["fan_in"]:
+        return None
+    return {
+        "fan_in_lo": lo["fan_in"],
+        "fan_in_hi": hi["fan_in"],
+        "throughput_ratio": hi["steps_per_s"] / lo["steps_per_s"],
+        "staged_per_chunk_max": max(c["staged_per_chunk"] for c in cells),
+    }
+
+
+def clustered_fanin(quick: bool = True, smoke: bool = False) -> dict:
+    """The measured clustered fan-in contention sweep (see module doc)."""
+    if smoke or quick:
+        devices, steps, chunk = 4, 48, 16
+        fractions = (0.5, 0.25)        # 2:2 (fan_in 1) and 3:1 (fan_in 3)
+    else:
+        devices, steps, chunk = 8, 128, 16
+        fractions = (0.5, 0.25, 0.125)  # 4:4, 6:2, 7:1
+    cells = [_clustered_cell(f, steps, chunk, devices) for f in fractions]
+    return {
+        "bench": "weak_scaling",
+        "api": "insitu_session",
+        "devices": devices,
+        "steps": steps,
+        "chunk": chunk,
+        "cells": cells,
+        "fanin_comparison": _fanin_comparison(cells),
+    }
 
 
 def modeled_rows(quick: bool = True):
@@ -129,8 +252,26 @@ def measured_anchor():
                 "host_cpu=1core")]
 
 
-def run(quick: bool = True):
-    return measured_anchor() + structural_rows(quick) + modeled_rows(quick)
+def run(quick: bool = True, json_path: str | None = None,
+        write_json: bool = True, smoke: bool = False):
+    fanin = clustered_fanin(quick=quick, smoke=smoke)
+    if write_json:
+        path = Path(json_path) if json_path \
+            else Path("BENCH_weak_scaling.json")
+        path.write_text(json.dumps(fanin, indent=2) + "\n")
+
+    rows = []
+    for c in fanin["cells"]:
+        rows.append(Row(
+            f"fig5/clustered/fanin{c['fan_in']}",
+            1e6 / c["steps_per_s"],
+            f"clients={c['clients']};db={c['db']};"
+            f"steps_per_s={c['steps_per_s']:.1f};"
+            f"staged_per_chunk={c['staged_per_chunk']:.2f}"))
+    if smoke:
+        return rows
+    return (measured_anchor() + structural_rows(quick) + rows
+            + modeled_rows(quick))
 
 
 if __name__ == "__main__":

@@ -22,9 +22,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
-                    help="minimal session-API run (fig9 + the fig10 "
-                         "replicated-vs-slab-sharded entry cells) for the "
-                         "CI bench gate")
+                    help="minimal session-API run (fig9, the fig10 "
+                         "replicated-vs-slab-sharded entry cells, and the "
+                         "fig5 clustered fan-in cells) for the CI bench "
+                         "gate")
     ap.add_argument("--json", action="store_true",
                     help="also write BENCH_<name>.json per bench")
     ap.add_argument("--json-dir", default=".",
@@ -55,7 +56,7 @@ def main() -> None:
     }
     if args.smoke:
         benches = {k: v for k, v in benches.items()
-                   if k in ("fig9", "fig10")}
+                   if k in ("fig5", "fig9", "fig10")}
     if args.only:
         names = args.only.split(",")
         unknown = [n for n in names if n not in benches]
@@ -79,6 +80,11 @@ def main() -> None:
             quick=quick, smoke=args.smoke, write_json=args.json,
             json_path=str(Path(args.json_dir)
                           / "BENCH_sharded_epoch.json")))
+    if "fig5" in benches:
+        benches["fig5"] = (lambda quick: fig5_weak_scaling.run(
+            quick=quick, smoke=args.smoke, write_json=args.json,
+            json_path=str(Path(args.json_dir)
+                          / "BENCH_weak_scaling.json")))
 
     print("name,us_per_call,derived")
     failures = 0

@@ -8,7 +8,8 @@ placement; ``orchestrator`` is the SmartSim-driver analogue.
 
 from . import store
 from .client import Client
-from .deployment import Clustered, Colocated, Deployment, split_devices
+from .deployment import (Clustered, Colocated, Deployment,
+                         make_clustered_1d, make_colocated_1d, split_devices)
 from .orchestrator import InSituDriver, RunResult, StragglerPolicy
 from .server import StoreServer
 from .store import TableSpec, TableState, make_key, name_key
@@ -20,6 +21,8 @@ __all__ = [
     "Clustered",
     "Colocated",
     "Deployment",
+    "make_clustered_1d",
+    "make_colocated_1d",
     "split_devices",
     "InSituDriver",
     "RunResult",

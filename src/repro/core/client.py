@@ -30,7 +30,7 @@ import jax.numpy as jnp
 
 from . import store as S
 from .server import StoreServer
-from .telemetry import Timers
+from .telemetry import Timers, poll_backoff
 
 __all__ = ["Client"]
 
@@ -72,15 +72,11 @@ class Client:
         fixed-rate busy loop hammering the dispatch queue.
         """
         key = S.name_key(name)
-        deadline = time.perf_counter() + timeout
         with self.timers.time("metadata"):
-            while True:
+            for _ in poll_backoff(timeout, interval, max_interval):
                 if self.server.poll(table, key):
                     return True
-                if time.perf_counter() >= deadline:
-                    return False
-                time.sleep(interval)
-                interval = min(interval * 2.0, max_interval)
+            return False
 
     # -- rank/step-keyed streaming (the simulation path) ------------------------
 
@@ -145,6 +141,15 @@ class Client:
         executable per (table, bucket) instead of compiling every distinct
         tail length (the scan runs ``bucket_length(length)`` iterations;
         only the first ``length`` advance the carry or the table).
+
+        Under a *clustered* deployment the whole chunk still costs ONE
+        interconnect hop: the steps run collect-only on the client side
+        (``store.capture_scan_collect[_multi]``), the stacked chunk is
+        staged onto the store mesh in one batched reshard
+        (``StoreServer.stage_chunk`` — counted in
+        ``stats()["staged_transfers"]``), and one ``store.put_masked``
+        dispatch inserts it — instead of the per-element ``device_put``
+        the per-verb tier pays.
         """
         spec = self.server.spec(table)
         t0_gate = int(jnp.reshape(jnp.asarray(t0), (-1,))[0]) \
@@ -153,20 +158,40 @@ class Client:
         if bucket:
             padded = S.bucket_length(length)
             valid = jnp.asarray(length, jnp.int32)
+        dep = self.server.deployment
+        staged = dep is not None and dep.crosses_mesh
         with self.timers.time("send"):
             with self.capture(table) as txn:
-                if n_ranks is None:
+                # The put-count accounting is deployment-independent —
+                # one source, whichever branch dispatches below.
+                txn.puts = S.capture_emit_count(length, emit_every,
+                                                t0_gate) \
+                    if n_ranks is None else S.capture_emit_count_multi(
+                        n_ranks, length, emit_every, t0_gate)
+                if staged:
+                    # clustered fused put: collect → ONE staged reshard →
+                    # one masked insert on the store mesh
+                    if n_ranks is None:
+                        carry, keys, vals, mask = S.capture_scan_collect(
+                            spec, step_fn, carry, padded, emit_every,
+                            t0=t0, valid=valid)
+                    else:
+                        carry, keys, vals, mask = \
+                            S.capture_scan_collect_multi(
+                                spec, step_fn, carry, padded, n_ranks,
+                                emit_every, t0=t0, valid=valid)
+                    keys, vals, mask = self.server.stage_chunk(
+                        table, keys, vals, mask)
+                    txn.state = S.put_masked(spec, txn.state, keys, vals,
+                                             mask)
+                elif n_ranks is None:
                     txn.state, carry = S.capture_scan(
                         spec, txn.state, step_fn, carry, padded, emit_every,
                         t0=t0, valid=valid)
-                    txn.puts = S.capture_emit_count(length, emit_every,
-                                                    t0_gate)
                 else:
                     txn.state, carry = S.capture_scan_multi(
                         spec, txn.state, step_fn, carry, padded, n_ranks,
                         emit_every, t0=t0, valid=valid)
-                    txn.puts = S.capture_emit_count_multi(
-                        n_ranks, length, emit_every, t0_gate)
         return carry
 
     # -- consumer-side loaders ---------------------------------------------------
@@ -177,6 +202,16 @@ class Client:
             values, keys, ok = self.server.sample(table, rng, n)
             box[0] = values
         return values, keys, ok
+
+    def sample_staged(self, table: str, n: int, rng):
+        """Clustered random gather: sample on the store mesh, bring the
+        assembled batch back across the interconnect in ONE counted
+        staged transfer (``StoreServer.sample_staged``).  Returns
+        ``(values [n,*shape], ok)``."""
+        with self.timers.time("retrieve") as box:
+            values, ok = self.server.sample_staged(table, rng, n)
+            box[0] = values
+        return values, ok
 
     def latest_batch(self, table: str, n: int):
         with self.timers.time("retrieve") as box:

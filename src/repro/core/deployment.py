@@ -20,16 +20,26 @@ TPU-native translation:
   producer-mesh array onto the store mesh (``jax.device_put`` across
   meshes = the TCP transfer of the paper), and the many-clients-per-shard
   contention that wrecks the paper's clustered weak scaling shows up as a
-  producer:db fan-in ratio.
+  producer:db fan-in ratio.  ``slab_axis`` optionally partitions the
+  slot axis over the db mesh — the slab-sharded *clustered* data plane
+  (each db shard owns ``capacity/D`` slots, like the paper's sharded
+  KeyDB run).
 
 Both policies expose the same small interface consumed by the
 ``StoreServer``/``Client``:
 
-    slab_sharding(spec)  -> sharding for the [capacity, *shape] slab
-    elem_sharding(spec)  -> sharding of one element (what ``stage`` targets)
-    stage(x)             -> move x onto the store placement (identity when
-                            co-located and already aligned)
-    fan_in               -> clients per store shard (1 for co-located)
+    slab_sharding(spec)      -> sharding for the [capacity, *shape] slab
+    elem_sharding(spec)      -> sharding of one element (``stage``'s target)
+    stage(x, spec)           -> move one element onto the store placement
+                                (identity when co-located and aligned)
+    stage_batch(xs, spec)    -> move a [n, *shape] batch in ONE transfer
+    stage_chunk(k, v, m, spec) -> move a whole fused-capture chunk
+                                (keys + values + mask) in ONE transfer
+    stage_to_clients(x)      -> the read-side hop back onto the clients
+    crosses_mesh             -> does ``stage`` actually move bytes across
+                                the interconnect? (drives the server's
+                                staged-transfer telemetry)
+    fan_in                   -> clients per store shard (1 for co-located)
 """
 
 from __future__ import annotations
@@ -38,12 +48,14 @@ from dataclasses import dataclass, field
 from typing import Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .store import TableSpec
 
-__all__ = ["Deployment", "Colocated", "Clustered", "split_devices"]
+__all__ = ["Deployment", "Colocated", "Clustered", "split_devices",
+           "make_colocated_1d", "make_clustered_1d"]
 
 
 def split_devices(devices=None, db_fraction: float = 0.25):
@@ -66,6 +78,9 @@ class Deployment:
 
     #: clients per store shard — drives the clustered contention model.
     fan_in: int = 1
+    #: does ``stage`` move bytes across the interconnect?  The server
+    #: counts one staged transfer per stage call only when this is set.
+    crosses_mesh: bool = False
 
     def slab_sharding(self, spec: TableSpec):
         raise NotImplementedError
@@ -73,7 +88,23 @@ class Deployment:
     def elem_sharding(self, spec: TableSpec):
         raise NotImplementedError
 
-    def stage(self, x):
+    def stage(self, x, spec: TableSpec | None = None):
+        raise NotImplementedError
+
+    def stage_batch(self, values, spec: TableSpec | None = None):
+        """Move a ``[n, *shape]`` batch onto the store placement in one
+        transfer (leading batch axis never sharded by ``elem_spec``)."""
+        raise NotImplementedError
+
+    def stage_chunk(self, keys, values, mask, spec: TableSpec | None = None):
+        """Move a whole fused-capture chunk (keys ``[n]``, values
+        ``[n, *shape]``, emit mask ``[n]``) onto the store placement as
+        ONE batched transfer."""
+        raise NotImplementedError
+
+    def stage_to_clients(self, x):
+        """The read-side hop: move a gathered batch from the store
+        placement back onto the consumers (identity when co-located)."""
         raise NotImplementedError
 
     def describe(self) -> str:
@@ -96,6 +127,7 @@ class Colocated(Deployment):
     capacity_axis: str | None = None
 
     fan_in: int = 1
+    crosses_mesh: bool = False
 
     def slab_sharding(self, spec: TableSpec) -> NamedSharding:
         return NamedSharding(self.mesh, P(self.capacity_axis, *self.elem_spec))
@@ -103,10 +135,19 @@ class Colocated(Deployment):
     def elem_sharding(self, spec: TableSpec) -> NamedSharding:
         return NamedSharding(self.mesh, self.elem_spec)
 
-    def stage(self, x):
+    def stage(self, x, spec: TableSpec | None = None):
         # Producer output is already placed correctly: zero-copy.  We do not
         # device_put here on purpose — a sharding mismatch should surface as
         # a collective in the compiled put (tests assert it does not).
+        return x
+
+    def stage_batch(self, values, spec: TableSpec | None = None):
+        return values
+
+    def stage_chunk(self, keys, values, mask, spec: TableSpec | None = None):
+        return keys, values, mask
+
+    def stage_to_clients(self, x):
         return x
 
     def describe(self) -> str:
@@ -114,32 +155,137 @@ class Colocated(Deployment):
                 f"elem_spec={self.elem_spec})")
 
 
+def _fit_spec(parts: Sequence, shape: Sequence[int], mesh: Mesh) -> P:
+    """Drop mesh axes that do not divide their dim (device_put targets
+    must divide exactly; GSPMD padding only applies to intermediates).
+    An elem_spec LONGER than the element rank is a misconfiguration, not
+    a fitting problem — keep it loud instead of silently truncating."""
+    parts = tuple(parts)
+    if len(parts) > len(shape):
+        raise ValueError(
+            f"elem_spec {parts} has more entries than the element rank "
+            f"{len(shape)} (shape {tuple(shape)})")
+    fitted = []
+    for dim, entry in zip(shape, parts + (None,) * (len(shape) -
+                                                    len(parts))):
+        if entry is not None:
+            axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            if dim % n != 0:
+                entry = None
+        fitted.append(entry)
+    return P(*fitted)
+
+
 @dataclass
 class Clustered(Deployment):
-    """Store on dedicated devices; every transfer crosses the interconnect."""
+    """Store on dedicated devices; every transfer crosses the interconnect.
+
+    ``elem_spec`` lays one element out across the db mesh; it is *fitted*
+    per table — axes that do not divide the element dims fall back to
+    replicated instead of silently mis-placing (``elem_sharding(spec)``).
+    ``slab_axis`` names a db-mesh axis to partition the slot axis over:
+    the slab-sharded clustered data plane (``capacity/D`` slots per db
+    shard; falls back to an unpartitioned slab when capacity does not
+    divide).
+    """
 
     client_mesh: Mesh
     db_mesh: Mesh
     elem_spec: P = P()          # layout of an element across the db mesh
+    slab_axis: str | None = None  # slot-partition the slab over this axis
+
+    crosses_mesh: bool = True
 
     def __post_init__(self):
         n_clients = int(np.prod(list(self.client_mesh.shape.values())))
         n_db = int(np.prod(list(self.db_mesh.shape.values())))
         self.fan_in = max(1, n_clients // max(1, n_db))
+        if self.slab_axis is not None:
+            used = {a for entry in self.elem_spec if entry is not None
+                    for a in ((entry,) if isinstance(entry, str)
+                              else entry)}
+            if self.slab_axis in used:
+                raise ValueError(
+                    f"slab_axis {self.slab_axis!r} also appears in "
+                    f"elem_spec {self.elem_spec}: a slot-partitioned "
+                    f"slab keeps each element whole on its owning shard "
+                    f"— use disjoint mesh axes")
+
+    def _elem_spec_for(self, spec: TableSpec | None) -> P:
+        if spec is None:
+            return self.elem_spec
+        return _fit_spec(self.elem_spec, spec.shape, self.db_mesh)
+
+    def slab_shards(self, spec: TableSpec) -> int:
+        """How many slot partitions the slab actually splits into (1 when
+        ``slab_axis`` is unset or capacity does not divide)."""
+        if self.slab_axis is None:
+            return 1
+        d = int(self.db_mesh.shape[self.slab_axis])
+        return d if spec.capacity % d == 0 else 1
+
+    def gather_shards(self, spec: TableSpec) -> int:
+        """Shard count usable by the shard-local staged gather
+        (``store.make_clustered_gather``): the slot-partition factor,
+        but ONLY when the element dims are replicated on the db mesh —
+        the sharded gather assumes local ``[capacity/D, *shape]`` rows.
+        An element-sharded slab falls back to the plain gather (GSPMD
+        handles any layout) rather than silently resharding the slab.
+        This is THE rule both the server's runtime gather and the plan's
+        ``plan(hlo=True)`` compile consult — keep it single-sourced."""
+        if any(e is not None for e in self._elem_spec_for(spec)):
+            return 1
+        return self.slab_shards(spec)
 
     def slab_sharding(self, spec: TableSpec) -> NamedSharding:
-        return NamedSharding(self.db_mesh, P(None, *self.elem_spec))
+        cap_axis = self.slab_axis if self.slab_shards(spec) > 1 else None
+        return NamedSharding(self.db_mesh,
+                             P(cap_axis, *self._elem_spec_for(spec)))
 
     def elem_sharding(self, spec: TableSpec) -> NamedSharding:
-        return NamedSharding(self.db_mesh, self.elem_spec)
+        return NamedSharding(self.db_mesh, self._elem_spec_for(spec))
 
-    def stage(self, x):
-        """The cross-network hop: reshard from client mesh onto the db mesh."""
-        return jax.device_put(x, self.elem_sharding(None))
+    def stage(self, x, spec: TableSpec | None = None):
+        """The cross-network hop: reshard from client mesh onto the db
+        mesh, honoring the table's fitted element layout."""
+        return jax.device_put(x, self.elem_sharding(spec))
+
+    def stage_batch(self, values, spec: TableSpec | None = None):
+        values = jnp.asarray(values)
+        es = self._elem_spec_for(spec)
+        # however many leading batch dims ride ahead of the element dims
+        # (put_many sends [n, *shape]; put_stream may send [T, R, *shape]).
+        # Without a spec the element rank is unknown — assume the
+        # documented one-batch-dim contract rather than guessing from
+        # elem_spec's length (which may be shorter than the element rank).
+        lead = max(1, values.ndim - len(spec.shape)) if spec is not None \
+            else 1
+        sh = NamedSharding(self.db_mesh, P(*([None] * lead), *es))
+        return jax.device_put(values, sh)
+
+    def stage_chunk(self, keys, values, mask, spec: TableSpec | None = None):
+        """ONE batched cross-mesh reshard for a whole fused-capture chunk:
+        the stacked values ride with their keys and emit mask in a single
+        ``jax.device_put`` — this is the clustered fused put's only
+        interconnect hop per dispatch."""
+        meta = NamedSharding(self.db_mesh, P())
+        vsh = NamedSharding(self.db_mesh, P(None, *self._elem_spec_for(spec)))
+        return jax.device_put((keys, values, mask), (meta, vsh, meta))
+
+    def stage_to_clients(self, x):
+        """The read-side hop: a gathered batch (any pytree) leaves the db
+        mesh for the consumers (replicated over the client mesh) in one
+        batched ``device_put`` call."""
+        sh = NamedSharding(self.client_mesh, P())
+        return jax.device_put(x, jax.tree.map(lambda _: sh, x))
 
     def describe(self) -> str:
         return (f"clustered(clients={tuple(self.client_mesh.shape.items())}, "
-                f"db={tuple(self.db_mesh.shape.items())}, fan_in={self.fan_in})")
+                f"db={tuple(self.db_mesh.shape.items())}, "
+                f"fan_in={self.fan_in}"
+                + (f", slab_axis={self.slab_axis!r}"
+                   if self.slab_axis else "") + ")")
 
 
 def make_colocated_1d(axis: str = "data", mesh: Mesh | None = None,
@@ -150,3 +296,15 @@ def make_colocated_1d(axis: str = "data", mesh: Mesh | None = None,
     spec = [None] * ndim
     spec[shard_dim] = axis
     return Colocated(mesh=mesh, elem_spec=P(*spec))
+
+
+def make_clustered_1d(db_fraction: float = 0.25, axis: str = "data",
+                      devices=None, elem_spec: P = P(),
+                      slab_axis: str | None = None) -> Clustered:
+    """Convenience: split the visible devices into client/db 1-D meshes
+    (``split_devices``) and build the ``Clustered`` deployment over them."""
+    client_devs, db_devs = split_devices(devices, db_fraction)
+    return Clustered(
+        client_mesh=Mesh(np.asarray(client_devs), (axis,)),
+        db_mesh=Mesh(np.asarray(db_devs), (axis,)),
+        elem_spec=elem_spec, slab_axis=slab_axis)

@@ -70,6 +70,9 @@ class ComponentResult:
     #: store dispatches attributable to this component (sequential runs
     #: only — concurrent components interleave on one op counter).
     op_delta: int | None = None
+    #: cross-mesh staged transfers attributable to this component
+    #: (sequential runs only; always 0 off a clustered deployment).
+    staged_delta: int | None = None
 
     @property
     def ok(self) -> bool:
@@ -137,6 +140,7 @@ class InSituDriver:
                 res = results[name]
                 t0 = time.perf_counter()
                 ops0 = self.server.op_count
+                staged0 = self.server.staged_transfers
                 try:
                     out = fn(clients[name], stop)
                     res.output = out
@@ -151,6 +155,8 @@ class InSituDriver:
                     res.wall_s = time.perf_counter() - t0
                     if sequential:
                         res.op_delta = self.server.op_count - ops0
+                        res.staged_delta = \
+                            self.server.staged_transfers - staged0
             return _run
 
         for i, (name, fn) in enumerate(components.items()):

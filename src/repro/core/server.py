@@ -47,7 +47,7 @@ import jax.numpy as jnp
 
 from . import store as S
 from .deployment import Colocated, Deployment
-from .telemetry import Timers
+from .telemetry import Timers, poll_backoff
 
 __all__ = ["StoreServer", "CaptureTxn"]
 
@@ -88,10 +88,16 @@ class StoreServer:
         self._meta_event = threading.Condition(self._lock)
         self._ops_lock = threading.Lock()
         self.op_count = 0                        # dispatched store ops
+        self.staged_transfers = 0                # cross-mesh staging hops
+        self._gathers: dict[tuple, Callable] = {}  # clustered gather cache
 
     def _bump_ops(self, n: int = 1) -> None:
         with self._ops_lock:
             self.op_count += n
+
+    def _bump_staged(self, n: int = 1) -> None:
+        with self._ops_lock:
+            self.staged_transfers += n
 
     # -- table management ---------------------------------------------------
 
@@ -172,13 +178,43 @@ class StoreServer:
 
     # -- verbs ---------------------------------------------------------------
 
-    def _staged(self, value):
+    def _staged(self, value, spec: S.TableSpec | None = None):
+        """Stage one element onto the store placement (per-verb path).
+
+        Threads the table's real ``TableSpec`` through to the deployment
+        so spec-dependent element layouts hold, and counts one staged
+        transfer whenever the deployment actually crosses meshes."""
         dep = self.deployment
-        return dep.stage(value) if dep is not None else value
+        if dep is None:
+            return value
+        if dep.crosses_mesh:
+            self._bump_staged()
+        return dep.stage(value, spec)
+
+    def _staged_batch(self, values, spec: S.TableSpec | None = None):
+        """Stage a ``[n, *shape]`` batch in ONE transfer (batched verbs)."""
+        dep = self.deployment
+        if dep is None:
+            return values
+        if dep.crosses_mesh:
+            self._bump_staged()
+        return dep.stage_batch(values, spec)
+
+    def stage_chunk(self, table: str, keys, values, mask):
+        """Stage a whole fused-capture chunk (keys + values + emit mask)
+        onto the store placement as ONE cross-mesh transfer — the
+        clustered fused put's only interconnect hop per dispatch.  A
+        no-op (and not counted) for deployments that never cross meshes.
+        """
+        dep = self.deployment
+        if dep is None or not dep.crosses_mesh:
+            return keys, values, mask
+        self._bump_staged()
+        return dep.stage_chunk(keys, values, mask, self._specs[table])
 
     def put(self, table: str, key, value) -> None:
         spec = self._specs[table]
-        value = self._staged(value)
+        value = self._staged(value, spec)
         key = jax.numpy.asarray(key, S.KEY_DTYPE)
         with self._table_locks[table]:
             self._state[table] = S.put(spec, self._state[table], key, value)
@@ -187,7 +223,7 @@ class StoreServer:
 
     def put_many(self, table: str, keys, values) -> None:
         spec = self._specs[table]
-        values = self._staged(values)
+        values = self._staged_batch(values, spec)
         keys = jax.numpy.asarray(keys, S.KEY_DTYPE)
         with self._table_locks[table]:
             self._state[table] = S.put_many(spec, self._state[table], keys,
@@ -198,7 +234,7 @@ class StoreServer:
     def put_stream(self, table: str, keys, values) -> None:
         """One dispatch for a whole trajectory of sends (fused pipeline)."""
         spec = self._specs[table]
-        values = self._staged(values)
+        values = self._staged_batch(values, spec)
         keys = jax.numpy.asarray(keys, S.KEY_DTYPE)
         n = int(keys.shape[0]) * (int(keys.shape[1]) if keys.ndim == 2 else 1)
         with self._table_locks[table]:
@@ -229,6 +265,45 @@ class StoreServer:
         self._bump_ops()
         return out
 
+    def _clustered_gather(self, table: str, n: int):
+        """Cached db-mesh gather executable for ``sample_staged`` (one per
+        (table, batch size); see ``store.make_clustered_gather``)."""
+        key = (table, n)
+        fn = self._gathers.get(key)
+        if fn is None:
+            spec = self._specs[table]
+            dep = self.deployment
+            db_mesh = getattr(dep, "db_mesh", None)
+            axis = getattr(dep, "slab_axis", None)
+            shards = dep.gather_shards(spec) \
+                if hasattr(dep, "gather_shards") else 1
+            fn = S.make_clustered_gather(spec, n, db_mesh=db_mesh,
+                                         axis=axis, shards=shards)
+            with self._lock:
+                self._gathers[key] = fn
+        return fn
+
+    def sample_staged(self, table: str, rng, n: int):
+        """Clustered read verb: sample ``n`` elements ON the store mesh
+        (shard-local gather + explicit psum when the slab is
+        slot-partitioned), then move the assembled batch back onto the
+        clients in ONE counted cross-mesh transfer.
+
+        One store dispatch (like ``sample``) plus one staged transfer —
+        the read-side mirror of the fused clustered put.  Degrades to a
+        plain sample (no staging, nothing counted) under co-located /
+        local deployments.  Returns ``(values [n, *shape], ok)``.
+        """
+        gather = self._clustered_gather(table, n)
+        with self._table_locks[table]:
+            values, ok = gather(self._state[table], rng)
+        dep = self.deployment
+        if dep is not None and dep.crosses_mesh:
+            values, ok = dep.stage_to_clients((values, ok))
+            self._bump_staged()
+        self._bump_ops()
+        return values, ok
+
     def latest(self, table: str, n: int):
         spec = self._specs[table]
         with self._table_locks[table]:
@@ -252,13 +327,19 @@ class StoreServer:
         self._bump_ops()
 
     def stats(self) -> dict:
-        """Telemetry snapshot: dispatched-op count plus every table's
-        cached watermark.  ``op_count`` counts host→device dispatches (one
-        per verb, one per fused capture) — the benchmarks' O(k)-vs-O(1)
-        dispatch claims are measured from deltas of this dict."""
+        """Telemetry snapshot: dispatched-op count, cross-mesh staged
+        transfers, plus every table's cached watermark.  ``op_count``
+        counts host→device dispatches (one per verb, one per fused
+        capture) — the benchmarks' O(k)-vs-O(1) dispatch claims are
+        measured from deltas of this dict.  ``staged_transfers`` counts
+        interconnect hops of a clustered deployment (one per staged verb
+        element/batch, one per fused chunk, one per staged gather) — the
+        Fig.-5 clustered traffic, measured."""
         with self._lock:
             marks = dict(self._counts)
-        return {"op_count": self.op_count, "watermarks": marks}
+        return {"op_count": self.op_count,
+                "staged_transfers": self.staged_transfers,
+                "watermarks": marks}
 
     def watermark(self, table: str) -> int:
         """Total writes so far — the consumer's freshness signal.
@@ -291,16 +372,14 @@ class StoreServer:
         the caller decides whether to proceed with stale data (straggler
         mitigation) or abort.
 
-        Polls the lock-free cached watermark with exponential backoff
-        (``interval`` doubling up to ``max_interval``) — zero device
-        dispatches and zero producer contention while spinning.
+        Polls the lock-free cached watermark with deadline-clamped
+        exponential backoff (``telemetry.poll_backoff``) — zero device
+        dispatches and zero producer contention while spinning, and the
+        call never overshoots ``timeout`` by a backoff step.
         """
-        deadline = time.perf_counter() + timeout
-        while time.perf_counter() < deadline:
+        for _ in poll_backoff(timeout, interval, max_interval):
             if self._counts[table] >= minimum:
                 return True
-            time.sleep(interval)
-            interval = min(interval * 2.0, max_interval)
         return self._counts[table] >= minimum
 
     # -- metadata (host KV, paper's "useful metadata") ------------------------

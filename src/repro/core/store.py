@@ -84,6 +84,7 @@ __all__ = [
     "init_table",
     "put",
     "put_many",
+    "put_masked",
     "put_stream",
     "get",
     "get_many",
@@ -96,10 +97,14 @@ __all__ = [
     "table_bytes",
     "capture_scan",
     "capture_scan_multi",
+    "capture_scan_collect",
+    "capture_scan_collect_multi",
+    "capture_rows",
     "capture_emit_count",
     "capture_emit_count_multi",
     "bucket_length",
     "sample_and_step",
+    "make_clustered_gather",
 ]
 
 KEY_DTYPE = jnp.uint32
@@ -304,6 +309,64 @@ def put_many_impl(spec: TableSpec, state: TableState, keys, values) -> TableStat
 
 
 put_many = partial(jax.jit, static_argnums=0, donate_argnums=1)(put_many_impl)
+
+
+def put_masked_impl(spec: TableSpec, state: TableState, keys, values,
+                    mask) -> TableState:
+    """Vectorized put of the *masked subset* of a chunk, in chunk order.
+
+    ``keys [n]`` / ``values [n, *shape]`` / ``mask [n]`` — exactly the
+    elements with ``mask`` set are inserted, equivalent to replaying their
+    single ``put`` verbs in order (ring slot assignment, version stamps,
+    ``count`` bumps and **last-writer-wins** collisions all match the
+    sequential reference; unmasked elements advance nothing).
+
+    This is the db-mesh half of the clustered fused put: a
+    :func:`capture_scan_collect` chunk — whose emit mask may be traced
+    (bucketed tails, ``emit_every`` gating against a traced ``t0``) — is
+    staged across the interconnect once and inserted in ONE dispatch.
+    """
+    keys = jnp.asarray(keys, KEY_DTYPE)
+    values = jnp.asarray(values, dtype=spec.dtype)
+    mask = jnp.asarray(mask, bool)
+    n = keys.shape[0]
+    if values.shape != (n, *spec.shape):
+        raise ValueError(
+            f"put_masked into {spec.name!r}: values {values.shape} != "
+            f"({n}, *{spec.shape})"
+        )
+    r = jnp.cumsum(mask.astype(jnp.int32)) - 1   # emission rank (masked)
+    total = jnp.sum(mask.astype(jnp.int32))
+    if spec.engine == "ring":
+        slots = (state.ptr + r) % spec.capacity
+        new_ptr = (state.ptr + total) % spec.capacity
+        # Masked elements occupy consecutive ring positions: rank r is
+        # overwritten only by rank r + capacity, r + 2·capacity, … → O(n).
+        is_last = r + spec.capacity >= total
+    else:
+        slots = (keys % jnp.uint32(spec.capacity)).astype(jnp.int32)
+        new_ptr = state.ptr
+        i = jnp.arange(n, dtype=jnp.int32)
+        # Last masked writer per slot via scatter-max — O(n + capacity),
+        # not the [n, n] pairwise mask (n here is a whole fused chunk,
+        # not one step's rank batch).  Unmasked elements dump into the
+        # extra bucket at index `capacity`.
+        dump = jnp.where(mask, slots, spec.capacity)
+        last = jnp.full((spec.capacity + 1,), -1, jnp.int32).at[dump].max(i)
+        is_last = last[dump] == i
+    stamps = state.count + 1 + r
+    slots = jnp.where(mask & is_last, slots, spec.capacity)
+    return TableState(
+        slab=state.slab.at[slots].set(values, mode="drop"),
+        keys=state.keys.at[slots].set(keys, mode="drop"),
+        version=state.version.at[slots].set(stamps, mode="drop"),
+        ptr=new_ptr,
+        count=state.count + total,
+    )
+
+
+put_masked = partial(jax.jit, static_argnums=0, donate_argnums=1)(
+    put_masked_impl)
 
 
 def put_stream_impl(spec: TableSpec, state: TableState, keys, values
@@ -619,6 +682,176 @@ def capture_emit_count_multi(n_ranks: int, length: int, emit_every: int = 1,
 
     ``t0`` is rank 0's start offset (the emission gate's clock)."""
     return n_ranks * capture_emit_count(length, emit_every, t0)
+
+
+def capture_rows(length: int, emit_every: int = 1) -> int:
+    """Static bound on the emissions of one collect chunk: the most
+    multiples of ``emit_every`` any ``length``-step window can contain
+    (the ``t0`` phase decides floor vs ceil; the buffer takes the ceil)."""
+    return -(-length // emit_every)
+
+
+def capture_scan_collect_impl(spec: TableSpec, step_fn: Callable, carry,
+                              length: int, emit_every: int = 1, t0=0,
+                              valid=None):
+    """Producer half of the *clustered* fused put: run ``length`` steps in
+    ONE dispatch and **collect** the would-be puts instead of applying
+    them.
+
+    Same step/emission/bucketing semantics as :func:`capture_scan_impl`,
+    but no table state is touched — emitting steps accumulate their
+    ``(key, value)`` into a compact ``rows = capture_rows(length,
+    emit_every)`` buffer rides in the scan carry, so the staged payload
+    scales with the *emissions*, not the raw step count (a sparse
+    ``emit_every`` never ships zero rows across the interconnect).  The
+    caller then moves the chunk across in ONE staged transfer
+    (``Deployment.stage_chunk``) and inserts it with ONE
+    :func:`put_masked` dispatch on the store mesh — so a clustered fused
+    producer costs one cross-mesh hop per chunk, not one per element.
+
+    Returns ``(carry, keys [rows], values [rows, *shape], mask [rows])``
+    — ``mask`` is the filled prefix; replaying the masked elements in
+    order is byte-identical to the equivalent :func:`capture_scan`.
+    """
+    rows = capture_rows(length, emit_every)
+
+    def live(st, i, t):
+        c, keys_buf, vals_buf, cursor = st
+        c, key, value = step_fn(c, t)
+        value = jnp.asarray(value, spec.dtype)
+        if value.shape != spec.shape:
+            raise ValueError(
+                f"capture into table {spec.name!r}: value shape "
+                f"{value.shape} != element shape {spec.shape}")
+        emit = t % emit_every == 0
+        idx = jnp.where(emit, cursor, rows)      # non-emitting: dropped
+        keys_buf = keys_buf.at[idx].set(jnp.asarray(key, KEY_DTYPE),
+                                        mode="drop")
+        vals_buf = vals_buf.at[idx].set(value, mode="drop")
+        return c, keys_buf, vals_buf, cursor + emit.astype(jnp.int32)
+
+    def dead(st, i, t):
+        return st
+
+    ts = jnp.asarray(t0, jnp.int32) + jnp.arange(length, dtype=jnp.int32)
+    its = (jnp.arange(length, dtype=jnp.int32), ts)
+    if valid is None:
+        def body(st, it):
+            return live(st, *it), None
+    else:
+        valid = jnp.asarray(valid, jnp.int32)
+
+        def body(st, it):
+            i, t = it
+            return jax.lax.cond(i < valid, live, dead, st, i, t), None
+    st0 = (carry, jnp.zeros((rows,), KEY_DTYPE),
+           jnp.zeros((rows, *spec.shape), spec.dtype),
+           jnp.zeros((), jnp.int32))
+    (carry, keys, values, cursor), _ = jax.lax.scan(body, st0, its)
+    return carry, keys, values, jnp.arange(rows, dtype=jnp.int32) < cursor
+
+
+capture_scan_collect = partial(jax.jit, static_argnums=(0, 1, 3, 4))(
+    capture_scan_collect_impl)
+
+
+def capture_scan_collect_multi_impl(spec: TableSpec, step_fn: Callable,
+                                    carry, length: int, n_ranks: int,
+                                    emit_every: int = 1, t0=0, valid=None):
+    """Multi-producer :func:`capture_scan_collect`: ``n_ranks`` producers
+    advance in lockstep, collecting instead of putting (the clustered
+    form of :func:`capture_scan_multi_impl` — same vmapped step, per-rank
+    ``t0`` clocks, rank-0-gated emission, same compact
+    ``rows = capture_rows(length, emit_every)`` buffering).
+
+    Returns ``(carry, keys [rows·R], values [rows·R, *shape],
+    mask [rows·R])`` flattened **rank-major within each emitting step**,
+    so the masked replay is byte-identical to the in-scan ``put_many``
+    path.
+    """
+    rows = capture_rows(length, emit_every)
+    ranks = jnp.arange(n_ranks, dtype=jnp.int32)
+    t0_arr = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (n_ranks,))
+
+    def live(st, i):
+        c, keys_buf, vals_buf, cursor = st
+        ts = t0_arr + i
+        c, keys, values = jax.vmap(step_fn, in_axes=(0, 0, 0))(c, ranks, ts)
+        values = jnp.asarray(values, spec.dtype)
+        if values.shape != (n_ranks, *spec.shape):
+            raise ValueError(
+                f"capture into table {spec.name!r}: rank values "
+                f"{values.shape} != ({n_ranks}, *{spec.shape})")
+        emit = ts[0] % emit_every == 0
+        idx = jnp.where(emit, cursor, rows)      # non-emitting: dropped
+        keys_buf = keys_buf.at[idx].set(jnp.asarray(keys, KEY_DTYPE),
+                                        mode="drop")
+        vals_buf = vals_buf.at[idx].set(values, mode="drop")
+        return c, keys_buf, vals_buf, cursor + emit.astype(jnp.int32)
+
+    def dead(st, i):
+        return st
+
+    steps = jnp.arange(length, dtype=jnp.int32)
+    if valid is None:
+        def body(st, i):
+            return live(st, i), None
+    else:
+        valid = jnp.asarray(valid, jnp.int32)
+
+        def body(st, i):
+            return jax.lax.cond(i < valid, live, dead, st, i), None
+    st0 = (carry, jnp.zeros((rows, n_ranks), KEY_DTYPE),
+           jnp.zeros((rows, n_ranks, *spec.shape), spec.dtype),
+           jnp.zeros((), jnp.int32))
+    (carry, keys, values, cursor), _ = jax.lax.scan(body, st0, steps)
+    mask = jnp.arange(rows, dtype=jnp.int32) < cursor
+    return (carry, keys.reshape(rows * n_ranks),
+            values.reshape(rows * n_ranks, *spec.shape),
+            jnp.repeat(mask, n_ranks))
+
+
+capture_scan_collect_multi = partial(jax.jit, static_argnums=(0, 1, 3, 4, 5))(
+    capture_scan_collect_multi_impl)
+
+
+def make_clustered_gather(spec: TableSpec, n: int, db_mesh=None,
+                          axis: str | None = None, shards: int = 1,
+                          mode: str | None = None):
+    """The db-mesh half of the clustered read path: ONE dispatch sampling
+    ``n`` elements from the table on its own mesh.
+
+    With ``shards > 1`` the slab is slot-partitioned over db-mesh axis
+    ``axis`` and the gather runs shard-local with one explicit ``psum``
+    (:func:`sample_sharded_impl` inside a ``shard_map`` over the db mesh
+    — the same structure as the co-located slab-sharded tier, except the
+    psum's reassembled batch then leaves the mesh: the cross-mesh staged
+    transfer the caller performs and counts).  Otherwise the plain
+    :func:`sample_impl` against the (possibly element-sharded) slab.
+
+    Returns a jitted ``fn(state, rng) -> (values [n,*shape], ok)``.
+    """
+    if shards > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        specs = TableState(slab=P(axis), keys=P(), version=P(),
+                           ptr=P(), count=P())
+
+        def sharded_body(state, rng):
+            vals, _, ok = sample_sharded_impl(spec, state, rng, n, axis,
+                                              mode)
+            return vals, ok
+
+        return jax.jit(shard_map(sharded_body, mesh=db_mesh,
+                                 in_specs=(specs, P()),
+                                 out_specs=(P(), P()),
+                                 check_rep=False))
+
+    def body(state, rng):
+        vals, _, ok = sample_impl(spec, state, rng, n, mode)
+        return vals, ok
+
+    return jax.jit(body)
 
 
 def sample_and_step_impl(spec: TableSpec, state: TableState, rng, n: int,

@@ -21,7 +21,30 @@ from typing import Any
 
 import jax
 
-__all__ = ["Timers", "TimerStats"]
+__all__ = ["Timers", "TimerStats", "poll_backoff"]
+
+
+def poll_backoff(timeout: float, interval: float, max_interval: float):
+    """Drive a deadline-bounded polling loop: yields once per probe,
+    sleeping with exponential backoff (``interval`` doubling up to
+    ``max_interval``) between probes, each sleep clamped to the time
+    remaining so the loop never overshoots ``timeout`` by a backoff
+    step.  Shared by every store poller (``Client.poll_tensor``,
+    ``StoreServer.wait_watermark``) so the clamp rule stays in lockstep.
+
+        for _ in poll_backoff(timeout, interval, max_interval):
+            if condition():
+                return True
+        return condition()   # one last look at the deadline
+    """
+    deadline = time.perf_counter() + timeout
+    while True:
+        yield
+        remaining = deadline - time.perf_counter()
+        if remaining <= 0:
+            return
+        time.sleep(min(interval, remaining))
+        interval = min(interval * 2.0, max_interval)
 
 
 @dataclass

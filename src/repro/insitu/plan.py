@@ -17,16 +17,27 @@ Tier names
 
 =============  =====================================================
 producer       ``per_verb`` | ``capture_scan`` | ``capture_scan_multi``
-trainer        ``per_verb`` | ``fused`` | ``sharded_fused`` | ``slab_sharded``
+trainer        ``per_verb`` | ``fused`` | ``sharded_fused`` |
+               ``slab_sharded`` | ``slab_sharded_clustered``
 inference      ``fused_registry`` | ``three_step``
 =============  =====================================================
 
 Besides dispatch counts, a plan predicts each component's *collective
 structure* (``predicted_collectives``): which collective ops the compiled
-hot path must / must not contain — the co-located put is collective-free,
-the sharded epochs contain the DDP all-reduce, and the slab-sharded epoch
-must NOT all-gather the table on entry.  ``plan(hlo=True)`` measures the
-ground truth from compiled HLO; the tests compare the two.
+hot path must / must not contain — the put path is collective-free under
+**every** deployment (clustered included: its interconnect hop is a
+host-driven staged reshard, never an in-program collective), the sharded
+epochs contain the DDP all-reduce, and the slab-sharded epochs must NOT
+all-gather the table on entry.  ``plan(hlo=True)`` measures the ground
+truth from compiled HLO; the tests compare the two.
+
+Clustered deployments additionally get *staged-transfer* predictions
+(``ComponentPlan.staged`` / ``staged_transfers``): how many cross-mesh
+hops each component pays — one per put verb on the per-verb tier, exactly
+ONE per ``capture_scan`` chunk on the fused tiers, one per epoch for the
+staged clustered gather — verified exactly against
+``StoreServer.stats()["staged_transfers"]``, with the deployment's
+producer:db ``fan_in`` ratio reported by ``Plan.explain()``.
 """
 
 from __future__ import annotations
@@ -42,12 +53,14 @@ __all__ = [
     "producer_tier", "trainer_tier", "inference_tier",
     "default_chunk", "ComponentPlan", "Plan",
     "producer_dispatches", "trainer_dispatches", "inference_dispatches",
+    "producer_staged", "trainer_staged", "inference_staged",
     "TRAINER_COLLECTIVE_PREDICTIONS", "COLLECTIVE_FREE",
     "trainer_collective_prediction",
 ]
 
 PRODUCER_TIERS = ("per_verb", "capture_scan", "capture_scan_multi")
-TRAINER_TIERS = ("per_verb", "fused", "sharded_fused", "slab_sharded")
+TRAINER_TIERS = ("per_verb", "fused", "sharded_fused", "slab_sharded",
+                 "slab_sharded_clustered")
 INFERENCE_TIERS = ("fused_registry", "three_step")
 
 
@@ -78,7 +91,8 @@ def producer_tier(comp) -> str:
 def trainer_tier(cfg, override: str | None = None) -> str:
     """Resolve a trainer tier from a ``TrainerConfig`` (the rule
     ``ml.trainer.insitu_train`` consults when no plan names one)."""
-    mesh_tiers = ("sharded_fused", "slab_sharded")
+    mesh_tiers = ("sharded_fused", "slab_sharded", "slab_sharded_clustered")
+    slab_tiers = ("slab_sharded", "slab_sharded_clustered")
     if override is not None:
         if override not in TRAINER_TIERS:
             raise ValueError(f"unknown trainer tier {override!r} "
@@ -88,12 +102,20 @@ def trainer_tier(cfg, override: str | None = None) -> str:
         if override not in mesh_tiers and cfg.mesh is not None:
             raise ValueError(
                 f"cfg.mesh is set; tier {override!r} would ignore it")
-        if override == "slab_sharded" and not cfg.slab_sharded:
-            raise ValueError("slab_sharded needs cfg.slab_sharded=True")
-        if override != "slab_sharded" and cfg.slab_sharded:
+        if override in slab_tiers and not cfg.slab_sharded:
+            raise ValueError(f"{override} needs cfg.slab_sharded=True")
+        if override not in slab_tiers and cfg.slab_sharded:
             raise ValueError(
                 f"cfg.slab_sharded is set; tier {override!r} would pass "
                 f"the table replicated")
+        if override == "slab_sharded_clustered" and cfg.db_mesh is None:
+            raise ValueError("slab_sharded_clustered needs cfg.db_mesh "
+                             "(the store's dedicated mesh; a session "
+                             "wires it from the Clustered deployment)")
+        if override != "slab_sharded_clustered" and cfg.db_mesh is not None:
+            raise ValueError(
+                f"cfg.db_mesh is set; tier {override!r} would ignore the "
+                f"dedicated store mesh")
         if override != "per_verb" and not cfg.fused:
             raise ValueError(f"tier {override!r} needs cfg.fused=True")
         return override
@@ -101,7 +123,10 @@ def trainer_tier(cfg, override: str | None = None) -> str:
         return "per_verb"
     if cfg.mesh is None:
         return "fused"
-    return "slab_sharded" if cfg.slab_sharded else "sharded_fused"
+    if cfg.slab_sharded:
+        return "slab_sharded_clustered" if cfg.db_mesh is not None \
+            else "slab_sharded"
+    return "sharded_fused"
 
 
 def inference_tier(comp) -> str:
@@ -142,6 +167,10 @@ TRAINER_COLLECTIVE_PREDICTIONS: dict[str, tuple[tuple[str, bool], ...]] = {
     "fused": COLLECTIVE_FREE,
     "sharded_fused": _pred(all_reduce=True),
     "slab_sharded": _pred(all_reduce=True),
+    # db-side gather psum + client-side DDP psum; the cross-mesh hop
+    # itself is a staged reshard, never an in-program collective — and
+    # the table is never all-gathered (the slab stays on the db mesh).
+    "slab_sharded_clustered": _pred(all_reduce=True),
 }
 
 
@@ -157,8 +186,12 @@ def trainer_collective_prediction(tier: str, table_sharded: bool = False
     anti-pattern the ``slab_sharded`` tier removes, and exactly what the
     contrast assertion in the tests proves.  The single-device ``fused``
     tier's structure on a sharded table is placement-dependent, so the
-    plan makes no claim there (``None``).
+    plan makes no claim there (``None``).  The clustered staged tier
+    never ingests the table into its shard_map at all, so its claim is
+    placement-independent.
     """
+    if tier == "slab_sharded_clustered":
+        return TRAINER_COLLECTIVE_PREDICTIONS[tier]
     if table_sharded and tier == "sharded_fused":
         return _pred(all_reduce=True, all_gather=True)
     if table_sharded and tier == "fused":
@@ -181,6 +214,9 @@ class ComponentPlan:
     mesh_devices: int = 1        # sharded trainer: devices in its slice
     #: predicted store dispatches this component will perform, by cause.
     dispatches: tuple[tuple[str, int], ...] = ()
+    #: predicted cross-mesh staged transfers (clustered deployments), by
+    #: cause — verified against ``stats()["staged_transfers"]`` exactly.
+    staged: tuple[tuple[str, int], ...] = ()
     #: collective-op counts from compiled HLO of the component's hot path
     #: (``None`` until the session resolved them with ``plan(hlo=True)``).
     collectives: tuple[tuple[str, int], ...] | None = None
@@ -193,6 +229,11 @@ class ComponentPlan:
     @property
     def store_dispatches(self) -> int:
         return sum(n for _, n in self.dispatches)
+
+    @property
+    def staged_transfers(self) -> int:
+        """Predicted interconnect hops (0 off the clustered deployment)."""
+        return sum(n for _, n in self.staged)
 
     def check_collectives(self) -> None:
         """Assert the measured HLO collective counts (``plan(hlo=True)``)
@@ -215,6 +256,9 @@ class ComponentPlan:
             "store_dispatches": self.store_dispatches,
             "dispatch_detail": dict(self.dispatches),
         }
+        if self.staged:
+            out["staged_transfers"] = self.staged_transfers
+            out["staged_detail"] = dict(self.staged)
         if self.kind == "producer":
             out["ranks"] = self.ranks
             out["dispatches_per_step"] = \
@@ -222,6 +266,10 @@ class ComponentPlan:
             if self.tier != "per_verb":
                 out["chunk"] = self.chunk
                 out["bucketed"] = self.bucketed
+                if self.staged:
+                    # THE clustered fused claim: one hop per chunk dispatch
+                    out["staged_per_chunk"] = \
+                        self.staged_transfers / max(1, self.store_dispatches)
         if self.kind == "trainer":
             d = dict(self.dispatches)
             out["dispatches_per_epoch"] = \
@@ -249,6 +297,10 @@ class Plan:
 
     deployment: str
     components: tuple[ComponentPlan, ...]
+    #: clients per store shard (``Deployment.fan_in``; 1 off clustered) —
+    #: the paper's Fig.-5 contention knob, carried so ``explain()`` can
+    #: relate predicted staged traffic to the shard ratio that carries it.
+    fan_in: int = 1
 
     def __post_init__(self):
         names = [c.name for c in self.components]
@@ -270,14 +322,24 @@ class Plan:
         """Predicted total store dispatches for one session run."""
         return sum(c.store_dispatches for c in self.components)
 
+    @property
+    def staged_transfers(self) -> int:
+        """Predicted total cross-mesh staged transfers (0 off clustered)."""
+        return sum(c.staged_transfers for c in self.components)
+
     def explain(self) -> dict:
-        """Chosen tiers, expected dispatch counts, and (when resolved)
-        compiled-HLO collective counts — the whole *how* as one dict."""
-        return {
+        """Chosen tiers, expected dispatch counts, clustered staging
+        traffic + fan-in, and (when resolved) compiled-HLO collective
+        counts — the whole *how* as one dict."""
+        out = {
             "deployment": self.deployment,
             "store_dispatches": self.store_dispatches,
             "components": {c.name: c.explain() for c in self.components},
         }
+        if self.fan_in != 1 or self.staged_transfers:
+            out["fan_in"] = self.fan_in
+            out["staged_transfers"] = self.staged_transfers
+        return out
 
     def describe(self) -> str:
         """One line per component, for logs and reports."""
@@ -333,3 +395,46 @@ def inference_dispatches(tier: str, steps: int) -> tuple[tuple[str, int], ...]:
     if tier == "fused_registry":
         return ()
     return (("three_step", 4 * steps),)
+
+
+# ---------------------------------------------------------------------------
+# Staged-transfer predictions (the clustered deployment's interconnect
+# traffic; every function returns () off a cross-mesh deployment)
+# ---------------------------------------------------------------------------
+
+def producer_staged(tier: str, steps: int, emit_every: int, ranks: int,
+                    chunk: int, crosses_mesh: bool
+                    ) -> tuple[tuple[str, int], ...]:
+    """Predicted cross-mesh hops of a producer run, by cause.
+
+    Per-verb: every put verb stages its element — one hop per rank per
+    emitting step (the paper's per-message clustered TCP cost).  Fused:
+    the whole chunk crosses in ONE batched reshard per capture dispatch —
+    ``ceil(steps / chunk)`` total, the O(k)→O(1) transfer claim.
+    """
+    if not crosses_mesh:
+        return ()
+    if tier == "per_verb":
+        return (("elem_stage", ranks * S.capture_emit_count(steps,
+                                                            emit_every)),)
+    return (("chunk_stage", -(-steps // chunk)),)
+
+
+def trainer_staged(tier: str, epochs: int, crosses_mesh: bool
+                   ) -> tuple[tuple[str, int], ...]:
+    """Predicted cross-mesh hops of one trainer replica: only the
+    clustered staged tier moves bytes (one gathered batch per epoch);
+    every other tier reads the table wherever it lives."""
+    if crosses_mesh and tier == "slab_sharded_clustered":
+        return (("gather_stage", epochs),)
+    return ()
+
+
+def inference_staged(tier: str, steps: int, crosses_mesh: bool
+                     ) -> tuple[tuple[str, int], ...]:
+    """The three-step protocol stages its put legs (input in, prediction
+    out → 2 hops per step); the fused registry path never touches the
+    store."""
+    if crosses_mesh and tier == "three_step":
+        return (("put_stage", 2 * steps),)
+    return ()

@@ -89,6 +89,11 @@ class SessionResult:
         """Store dispatches attributed to one component (sequential runs)."""
         return self.run.components[name].op_delta
 
+    def staged_delta(self, name: str) -> int | None:
+        """Cross-mesh staged transfers attributed to one component
+        (sequential runs; 0 off a clustered deployment)."""
+        return self.run.components[name].staged_delta
+
     def client(self, rank: int = 99) -> Client:
         return self.driver.client(rank=rank)
 
@@ -145,10 +150,13 @@ class InSituSession:
         """
         entries: list[P.ComponentPlan] = []
         first_trainer = True
-        # Clustered staging pushes transfers across the interconnect by
-        # design — the plan makes no collective-freedom claim for it.
-        put_pred = None if isinstance(self.deployment, Clustered) \
-            else P.COLLECTIVE_FREE
+        crosses = self.deployment is not None \
+            and self.deployment.crosses_mesh
+        # The put path compiles collective-free under EVERY deployment —
+        # clustered included: its interconnect hop is a host-driven staged
+        # reshard (predicted in ``staged``, measured in
+        # ``stats()["staged_transfers"]``), never an in-program collective.
+        put_pred = P.COLLECTIVE_FREE
         for comp in self.components:
             if isinstance(comp, Producer):
                 tier = P.producer_tier(comp)
@@ -161,6 +169,9 @@ class InSituSession:
                     dispatches=P.producer_dispatches(
                         tier, comp.steps, comp.emit_every, comp.ranks,
                         chunk),
+                    staged=P.producer_staged(
+                        tier, comp.steps, comp.emit_every, comp.ranks,
+                        chunk, crosses),
                     predicted_collectives=put_pred,
                     collectives=self._producer_collectives(comp, tier, chunk)
                     if hlo else None))
@@ -179,6 +190,7 @@ class InSituSession:
                         mesh_devices=ndev,
                         dispatches=P.trainer_dispatches(
                             tier, cfg.epochs, bootstrap=first_trainer),
+                        staged=P.trainer_staged(tier, cfg.epochs, crosses),
                         predicted_collectives=
                         P.trainer_collective_prediction(
                             tier, self._table_is_sharded(cfg.table)),
@@ -191,23 +203,38 @@ class InSituSession:
                 entries.append(P.ComponentPlan(
                     name=comp.name, kind="inference", tier=tier,
                     steps=comp.steps,
-                    dispatches=P.inference_dispatches(tier, comp.steps)))
+                    dispatches=P.inference_dispatches(tier, comp.steps),
+                    staged=P.inference_staged(tier, comp.steps, crosses)))
             else:
                 raise TypeError(f"unknown component type {type(comp)!r}")
         dep = self.deployment.describe() if self.deployment is not None \
             else "local"
-        return P.Plan(deployment=dep, components=tuple(entries))
+        return P.Plan(deployment=dep, components=tuple(entries),
+                      fan_in=self.deployment.fan_in
+                      if self.deployment is not None else 1)
 
     def _consumer_meshes(self, comp: TrainerConsumer):
         if comp.count == 1:
             return [comp.cfg.mesh]
-        return disjoint_data_meshes(comp.count)
+        # multi-consumer slices must never claim the store's dedicated
+        # devices — under Clustered, carve the replicas out of the
+        # CLIENT mesh only
+        devices = list(self.deployment.client_mesh.devices.ravel()) \
+            if isinstance(self.deployment, Clustered) else None
+        return disjoint_data_meshes(comp.count, devices=devices)
 
-    @staticmethod
-    def _replica_cfg(comp: TrainerConsumer, idx: int, mesh):
+    def _replica_cfg(self, comp: TrainerConsumer, idx: int, mesh):
         cfg = comp.cfg
         if comp.count > 1:
             cfg = _dc_replace(cfg, mesh=mesh, seed=cfg.seed + idx)
+        # A slab-sharded trainer under a Clustered deployment reads a
+        # table living on the DEDICATED db mesh: wire that mesh into the
+        # config so the tier resolves to ``slab_sharded_clustered`` and
+        # the epoch gathers on the db side (one staged transfer back).
+        if isinstance(self.deployment, Clustered) and cfg.slab_sharded \
+                and cfg.db_mesh is None:
+            cfg = _dc_replace(cfg, db_mesh=self.deployment.db_mesh,
+                              db_axis=self.deployment.slab_axis)
         return cfg
 
     def _spec(self, table: str) -> S.TableSpec:
@@ -221,25 +248,63 @@ class InSituSession:
     def _producer_collectives(self, comp: Producer, tier: str, chunk: int):
         """Compile one put / one capture chunk against the table's actual
         placement (deployment rule, or the slab-sharded trainer's
-        partitioned slab) and count its collective ops."""
+        partitioned slab) and count its collective ops.
+
+        Under a clustered deployment the fused put is two programs —
+        the client-side collect scan and the db-side masked insert
+        (the staged reshard between them is host-driven, not HLO) — so
+        both are compiled and their counts summed: the claim covers the
+        WHOLE put path, closing the plan's former "no claim" hole."""
         from ..analysis.hlo import COLLECTIVE_OPS, count_ops
         spec = self._spec(comp.table)
+        dep = self.deployment
+        staged = dep is not None and dep.crosses_mesh
         state = S.init_table(spec, self._table_placement(spec))
+        n = min(chunk, comp.steps)
         if tier == "per_verb":
             val = jnp.zeros(spec.shape, spec.dtype)
+            if staged:
+                val = dep.stage(val, spec)
             txt = jax.jit(lambda st: S.put_impl(
                 spec, st, jnp.uint32(1), val)).lower(state).compile()
+            counts = count_ops(txt.as_text())
+        elif staged:
+            single = tier == "capture_scan"
+            sf = _single_rank(comp.step_fn) if single else comp.step_fn
+            rows = S.capture_rows(n, comp.emit_every)
+            if single:
+                collect = jax.jit(lambda c: S.capture_scan_collect_impl(
+                    spec, sf, c, n, comp.emit_every)).lower(
+                        comp.carry).compile()
+                chunk_n = rows
+            else:
+                collect = jax.jit(
+                    lambda c: S.capture_scan_collect_multi_impl(
+                        spec, sf, c, n, comp.ranks,
+                        comp.emit_every)).lower(comp.carry).compile()
+                chunk_n = rows * comp.ranks
+            keys, vals, mask = dep.stage_chunk(
+                jnp.zeros((chunk_n,), S.KEY_DTYPE),
+                jnp.zeros((chunk_n, *spec.shape), spec.dtype),
+                jnp.zeros((chunk_n,), bool), spec)
+            insert = jax.jit(lambda st, k, v, m: S.put_masked_impl(
+                spec, st, k, v, m)).lower(state, keys, vals,
+                                          mask).compile()
+            counts = count_ops(collect.as_text())
+            for op, c in count_ops(insert.as_text()).items():
+                counts[op] = counts.get(op, 0) + c
         elif tier == "capture_scan":
             sf = _single_rank(comp.step_fn)
             txt = jax.jit(lambda st, c: S.capture_scan_impl(
-                spec, st, sf, c, min(chunk, comp.steps),
+                spec, st, sf, c, n,
                 comp.emit_every)).lower(state, comp.carry).compile()
+            counts = count_ops(txt.as_text())
         else:
             txt = jax.jit(lambda st, c: S.capture_scan_multi_impl(
-                spec, st, comp.step_fn, c, min(chunk, comp.steps),
+                spec, st, comp.step_fn, c, n,
                 comp.ranks, comp.emit_every)).lower(
                     state, comp.carry).compile()
-        counts = count_ops(txt.as_text())
+            counts = count_ops(txt.as_text())
         return tuple((op, counts.get(op, 0)) for op in COLLECTIVE_OPS)
 
     def _trainer_collectives(self, comp: TrainerConsumer, cfg, tier: str):
@@ -259,6 +324,30 @@ class InSituSession:
         epoch_fn = tr.EPOCH_BUILDERS[tier](cfg, levels, tx, spec)
         dummy = S.init_table(spec, self._table_placement(spec))
         mu = jnp.zeros((spec.shape[0],))
+        if tier == "slab_sharded_clustered":
+            # two programs: the db-mesh staged gather (shard-local rows +
+            # explicit psum) and the client-mesh DDP epoch on the staged
+            # batch; the hop between them is a reshard, not HLO — sum
+            # both sides so the claim covers the whole read path.
+            from jax.sharding import NamedSharding, PartitionSpec
+            # the shard-count rule is the DEPLOYMENT's (the same one the
+            # server's runtime gather consults) — never recompute it here
+            shards = self.deployment.gather_shards(spec) \
+                if isinstance(self.deployment, Clustered) else 1
+            gather = S.make_clustered_gather(
+                spec, cfg.gather, db_mesh=cfg.db_mesh, axis=cfg.db_axis,
+                shards=shards)
+            counts = count_ops(gather.lower(
+                dummy, jax.random.key(0)).compile().as_text())
+            vals = jax.device_put(
+                jnp.zeros((cfg.gather, *spec.shape), spec.dtype),
+                NamedSharding(cfg.mesh, PartitionSpec()))
+            train_txt = epoch_fn.train_fn.lower(
+                vals, jnp.asarray(True), state, jax.random.key(0), mu,
+                mu + 1.0).compile().as_text()
+            for op, c in count_ops(train_txt).items():
+                counts[op] = counts.get(op, 0) + c
+            return tuple((op, counts.get(op, 0)) for op in COLLECTIVE_OPS)
         txt = epoch_fn.lower(dummy, state, jax.random.key(0), mu,
                              mu + 1.0).compile().as_text()
         counts = count_ops(txt)
@@ -285,10 +374,14 @@ class InSituSession:
 
     def _table_placement(self, spec: S.TableSpec):
         """Where this table's slab lives: a slab-sharded trainer's table is
-        placed pre-partitioned over its mesh (``slab_sharding``); otherwise
-        the deployment's rule applies (``None`` = server default)."""
+        placed pre-partitioned over its mesh (``slab_sharding``); under a
+        Clustered deployment the DEPLOYMENT owns placement instead — the
+        slab stays on the dedicated db mesh (slot-partitioned when
+        ``slab_axis`` is set) and the trainer reaches it through the
+        staged gather, never through its own mesh.  Otherwise the
+        deployment's rule applies (``None`` = server default)."""
         cfg = self._slab_trainer_cfg(spec.name)
-        if cfg is not None:
+        if cfg is not None and not isinstance(self.deployment, Clustered):
             return slab_sharding(spec, cfg.mesh, cfg.mesh_axis)
         if self.deployment is not None:
             return self.deployment.slab_sharding(spec)
@@ -296,8 +389,11 @@ class InSituSession:
 
     def _table_shardings(self) -> dict[str, Any]:
         """Explicit per-table placements for the driver (only tables that
-        deviate from the deployment default appear)."""
+        deviate from the deployment default appear; a Clustered
+        deployment's own rule already covers its tables)."""
         out = {}
+        if isinstance(self.deployment, Clustered):
+            return out
         for t in self.tables:
             cfg = self._slab_trainer_cfg(t.name)
             if cfg is not None:
@@ -410,6 +506,13 @@ class InSituSession:
                 # Pre-compile every executable the chunked loop will need —
                 # one per (bucketed) chunk length — on a throwaway table so
                 # the timed loop measures enqueue + solve, not compilation.
+                # The clustered staged path runs DIFFERENT executables
+                # (collect scan + masked insert against the deployment-
+                # placed slab), so warm exactly those; staging the warmup
+                # chunk goes through the deployment directly, leaving the
+                # server's staged-transfer telemetry untouched.
+                dep = client.server.deployment
+                staged = dep is not None and dep.crosses_mesh
                 lengths = {min(chunk, comp.steps - base)
                            for base in range(0, comp.steps, chunk)}
                 with client.timers.time("jit_compile"):
@@ -417,7 +520,24 @@ class InSituSession:
                         padded, valid = (S.bucket_length(k),
                                          jnp.asarray(k, jnp.int32)) \
                             if entry.bucketed else (k, None)
-                        if single:
+                        if staged:
+                            if single:
+                                _, keys, vals, mask = S.capture_scan_collect(
+                                    spec, step_fn, carry, padded,
+                                    comp.emit_every, t0=0, valid=valid)
+                            else:
+                                _, keys, vals, mask = \
+                                    S.capture_scan_collect_multi(
+                                        spec, step_fn, carry, padded,
+                                        comp.ranks, comp.emit_every, t0=0,
+                                        valid=valid)
+                            keys, vals, mask = dep.stage_chunk(
+                                keys, vals, mask, spec)
+                            wst = S.put_masked(
+                                spec,
+                                S.init_table(spec, dep.slab_sharding(spec)),
+                                keys, vals, mask)
+                        elif single:
                             wst, _ = S.capture_scan(
                                 spec, S.init_table(spec), step_fn, carry,
                                 padded, comp.emit_every, t0=0, valid=valid)

@@ -48,7 +48,7 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from ..core import store as S
@@ -59,8 +59,8 @@ from . import autoencoder as ae
 
 __all__ = ["TrainState", "TrainerConfig", "make_train_step",
            "make_fused_epoch", "make_sharded_fused_epoch",
-           "make_per_verb_epoch", "EPOCH_BUILDERS", "insitu_train",
-           "EpochResult"]
+           "make_clustered_sharded_epoch", "make_per_verb_epoch",
+           "EPOCH_BUILDERS", "insitu_train", "EpochResult"]
 
 
 class TrainState(NamedTuple):
@@ -109,6 +109,17 @@ class TrainerConfig:
       table memory O(capacity/D), results bit-identical to the
       replicated-entry tier.  Requires ``mesh`` and a table capacity
       divisible by the mesh-axis size.
+    * ``db_mesh`` / ``db_axis`` — the slab-sharded *clustered* data
+      plane (tier ``slab_sharded_clustered``): the table lives
+      slot-partitioned on a *dedicated* db mesh (a ``Clustered``
+      deployment's store devices; the session wires these from the
+      deployment) while the trainer's ``shard_map`` runs on ``mesh``
+      (the client devices).  Each epoch gathers ON the db mesh
+      (shard-local rows + one explicit psum), moves the assembled batch
+      across the interconnect in ONE counted staged transfer, and
+      trains on the client mesh — the gather psum becomes an explicit
+      cross-mesh hop instead of an implicit replication.  Requires
+      ``slab_sharded=True`` and ``mesh``.
     """
 
     ae: ae.AEConfig
@@ -127,6 +138,8 @@ class TrainerConfig:
     ddp: str = "psum"            # "psum" (exact) | "int8" (compressed wire)
     ddp_error_feedback: bool = True   # int8: residual rides the scan carry
     slab_sharded: bool = False   # table enters the shard_map pre-sharded
+    db_mesh: Any = None          # clustered: the store's dedicated mesh
+    db_axis: str | None = None   # clustered: slot-partition axis on db_mesh
 
     def __post_init__(self):
         if self.ddp not in ("psum", "int8"):
@@ -136,6 +149,9 @@ class TrainerConfig:
         if self.slab_sharded and self.mesh is None:
             raise ValueError("slab_sharded needs a mesh (the slab shards "
                              "over cfg.mesh_axis)")
+        if self.db_mesh is not None and not self.slab_sharded:
+            raise ValueError("db_mesh is the slab-sharded clustered data "
+                             "plane; it needs slab_sharded=True")
 
     @property
     def scaled_lr(self) -> float:
@@ -380,15 +396,40 @@ def make_sharded_fused_epoch(cfg: TrainerConfig, levels,
         sample = None
         slab_spec = P()
 
-    def loss_fn(params, batch):
-        return ae.loss_fn(params, cfg.ae, levels, batch)
-
-    use_ef = cfg.ddp == "int8" and cfg.ddp_error_feedback
+    run = _make_ddp_scan(cfg, levels, tx, axis, ndev, bs, n_train,
+                         n_batches)
 
     def epoch_body(table_state: S.TableState, state: TrainState, rng,
                    mu, sd):
         train, val, ok = _epoch_data(cfg, spec, table_state, rng, mu, sd,
                                      sample=sample)
+        return run(state, train, val, ok)
+
+    table_specs = S.TableState(slab=slab_spec, keys=P(), version=P(),
+                               ptr=P(), count=P())
+    sharded = shard_map(epoch_body, mesh=mesh,
+                        in_specs=(table_specs, P(), P(), P(), P()),
+                        out_specs=(P(), P()),
+                        check_rep=False)
+    return jax.jit(sharded)
+
+
+def _make_ddp_scan(cfg: TrainerConfig, levels, tx, axis: str, ndev: int,
+                   bs: int, n_train: int, n_batches: int):
+    """The DDP mini-batch SGD scan + validation, traceable inside a
+    ``shard_map`` over mesh axis ``axis`` — the epoch half shared by
+    :func:`make_sharded_fused_epoch` (gather in-dispatch) and
+    :func:`make_clustered_sharded_epoch` (batch staged across meshes).
+
+    Returns ``run(state, train, val, ok) -> (state, metrics)``.
+    """
+    bl = bs // ndev
+    use_ef = cfg.ddp == "int8" and cfg.ddp_error_feedback
+
+    def loss_fn(params, batch):
+        return ae.loss_fn(params, cfg.ae, levels, batch)
+
+    def run(state: TrainState, train, val, ok):
         starts = jnp.clip(jnp.arange(n_batches) * bs, 0, n_train - bs)
         ridx = jax.lax.axis_index(axis)
 
@@ -421,13 +462,87 @@ def make_sharded_fused_epoch(cfg: TrainerConfig, levels,
         val_rel = ae.rel_frobenius(val, rec)
         return state, (jnp.mean(losses), val_loss, val_rel, ok)
 
-    table_specs = S.TableState(slab=slab_spec, keys=P(), version=P(),
-                               ptr=P(), count=P())
-    sharded = shard_map(epoch_body, mesh=mesh,
-                        in_specs=(table_specs, P(), P(), P(), P()),
-                        out_specs=(P(), P()),
-                        check_rep=False)
-    return jax.jit(sharded)
+    return run
+
+
+def make_clustered_sharded_epoch(cfg: TrainerConfig, levels,
+                                 tx: opt.GradientTransformation,
+                                 spec: S.TableSpec):
+    """The slab-sharded *clustered* tier: db mesh ≠ trainer mesh.
+
+    The table slab lives slot-partitioned on the deployment's dedicated
+    ``cfg.db_mesh`` (``Clustered(slab_axis=...)`` placement) while the
+    trainer's DDP ``shard_map`` runs on ``cfg.mesh`` (the client
+    devices), so one jitted program cannot span both.  Each epoch is
+    therefore:
+
+    1. ONE staged-gather store verb (``Client.sample_staged``): slot
+       selection + shard-local row gather + the explicit batch-assembly
+       ``psum`` run on the db mesh (``store.make_clustered_gather``), and
+       the assembled ``[gather, *shape]`` batch crosses the interconnect
+       in ONE counted staged transfer — the co-located tier's gather psum
+       made an explicit cross-mesh hop;
+    2. ONE client-mesh ``shard_map`` dispatch running the identical DDP
+       epoch body (:func:`_make_ddp_scan`) on the staged batch.
+
+    Client-driven signature like :func:`make_per_verb_epoch`:
+    ``epoch(client, state, rng, mu, sd)``.  The epoch rng stream matches
+    every other tier exactly — the staged gather consumes the same
+    ``k_samp`` the fused tiers split off in ``_epoch_data``, so slot
+    selection (and hence training data) is tier-independent.  One store
+    dispatch per epoch; the db-side gather executable compiles lazily on
+    the first epoch (server-side cache), charged to its retrieve bucket.
+    """
+    mesh = cfg.mesh
+    if mesh is None:
+        raise ValueError("make_clustered_sharded_epoch needs cfg.mesh")
+    axis = cfg.mesh_axis
+    ndev = int(mesh.shape[axis])
+    n_train = max(cfg.gather - 1, 1)
+    bs = min(cfg.batch_size, n_train)
+    if bs % ndev:
+        raise ValueError(
+            f"batch_size {bs} must divide by mesh axis {axis!r} size {ndev}")
+    n_batches = -(-n_train // bs)
+    run = _make_ddp_scan(cfg, levels, tx, axis, ndev, bs, n_train,
+                         n_batches)
+
+    def train_body(vals, ok_in, state: TrainState, rng, mu, sd):
+        # _epoch_data splits the same epoch rng; its k_samp was already
+        # consumed by the staged gather, so the sample override just
+        # injects the staged batch — identical stream to the fused tiers.
+        train, val, ok = _epoch_data(
+            cfg, spec, None, rng, mu, sd,
+            sample=lambda _ts, _k, _n: (vals, None, ok_in))
+        return run(state, train, val, ok)
+
+    train_fn = jax.jit(shard_map(train_body, mesh=mesh,
+                                 in_specs=(P(),) * 6,
+                                 out_specs=(P(), P()),
+                                 check_rep=False))
+
+    def epoch(client: Client, state: TrainState, rng, mu, sd):
+        k_samp = jax.random.split(rng, 3)[0]
+        vals, ok = client.sample_staged(cfg.table, cfg.gather, k_samp)
+        with client.timers.time("train"):
+            state, metrics = train_fn(vals, ok, state, rng, mu, sd)
+            jax.block_until_ready(state.params)
+        return state, metrics
+
+    def warmup(state, mu, sd):
+        """Pre-compile the client-mesh half on a zero batch placed like
+        the staged one (no store ops — dispatch accounting stays exact;
+        the db-side gather compiles on the first real epoch)."""
+        vals = jax.device_put(
+            jnp.zeros((cfg.gather, *spec.shape), spec.dtype),
+            NamedSharding(mesh, P()))
+        jax.block_until_ready(
+            train_fn(vals, jnp.asarray(True), state, jax.random.key(0),
+                     mu, sd)[1])
+
+    epoch.warmup = warmup
+    epoch.train_fn = train_fn      # HLO accounting (plan(hlo=True))
+    return epoch
 
 
 #: Consumer tier -> epoch builder.  Tier *selection* is plan data
@@ -440,8 +555,13 @@ EPOCH_BUILDERS: dict[str, Callable] = {
     "fused": make_fused_epoch,
     "sharded_fused": make_sharded_fused_epoch,
     "slab_sharded": make_sharded_fused_epoch,
+    "slab_sharded_clustered": make_clustered_sharded_epoch,
     "per_verb": make_per_verb_epoch,
 }
+
+#: tiers whose epoch is driven through a live ``Client`` (one verb per
+#: component) instead of a fused capture against checked-out table state.
+CLIENT_DRIVEN_TIERS = ("per_verb", "slab_sharded_clustered")
 
 
 def _strong(x):
@@ -495,7 +615,10 @@ def insitu_train(client: Client, coords: jax.Array, cfg: TrainerConfig,
         state = init_state(cfg, jax.random.key(cfg.seed), tx)
     epoch_fn = EPOCH_BUILDERS[tier](cfg, levels, tx,
                                     client.server.spec(cfg.table))
-    fused = tier != "per_verb"
+    # capture-driven tiers dispatch one fused epoch against checked-out
+    # table state; client-driven tiers (per-verb, the clustered staged
+    # gather) run their epoch through live store verbs instead.
+    fused = tier not in CLIENT_DRIVEN_TIERS
     rng = jax.random.key(cfg.seed + 1)
 
     # Paper: "the ML workload must query the database multiple times while
@@ -513,6 +636,13 @@ def insitu_train(client: Client, coords: jax.Array, cfg: TrainerConfig,
         client.put_metadata("norm_stats", (mu, sd))
         mu_sd = (mu, sd)
     mu, sd = mu_sd
+    if tier == "slab_sharded_clustered":
+        # The bootstrap stats were computed from a sample living on the
+        # store's db mesh; pin them onto the trainer's client mesh so the
+        # staged epoch stays a pure client-mesh program (one jitted
+        # computation cannot span both device sets).
+        sh = NamedSharding(cfg.mesh, P())
+        mu, sd = jax.device_put(mu, sh), jax.device_put(sd, sh)
 
     if fused:
         # Warm the fused-epoch executable on a throwaway empty table so the
@@ -520,7 +650,9 @@ def insitu_train(client: Client, coords: jax.Array, cfg: TrainerConfig,
         # component bucket, like the paper's one-off model-load cost).  The
         # slab-sharded tier places the dummy like the live table — jit
         # caches on input shardings, so a replicated dummy would compile a
-        # second executable the timed loop never uses.
+        # second executable the timed loop never uses.  (Every other tier
+        # keeps the dummy uncommitted: jit re-places it freely, which is
+        # what the epoch does to the live single-device state too.)
         with client.timers.time("jit_compile"):
             dummy_sharding = None
             if tier == "slab_sharded":

@@ -3,8 +3,12 @@ dispatches must equal the measured ``StoreServer.stats()["op_count"]``
 EXACTLY — not pointwise (PR 3's tests) but quantified over random
 declarations drawn from the whole
 (deployment x producer tier x trainer tier x ranks x chunk x emit_every x
-bucketing) grid.  The cached-watermark bookkeeping rides along: the
-producer table's watermark must equal the statically predicted put count.
+bucketing) grid, where deployment now spans {local, colocated,
+CLUSTERED}: on the clustered cells the predicted cross-mesh
+``staged_transfers`` must equal the measured
+``stats()["staged_transfers"]`` exactly too (per component and in
+total).  The cached-watermark bookkeeping rides along: the producer
+table's watermark must equal the statically predicted put count.
 
 With hypothesis installed (CI) the grid is explored by strategy; without
 it, a seeded-random sweep of the same space runs the same 50+ scenarios
@@ -26,7 +30,7 @@ from _hyp import HAVE_HYPOTHESIS, HealthCheck, given, settings, st
 
 from repro.core import TableSpec
 from repro.core import store as S
-from repro.core.deployment import make_colocated_1d
+from repro.core.deployment import make_clustered_1d, make_colocated_1d
 from repro.insitu import InSituSession, Producer, TrainerConsumer
 from repro.ml import autoencoder as ae
 from repro.ml import trainer as tr
@@ -50,12 +54,23 @@ def _step(carry, rank, t):
     return carry, S.make_key(rank, t), SNAPS[t % _SNAP_COUNT]
 
 
+def _make_deployment(kind: str):
+    if kind == "colocated":
+        return make_colocated_1d(ndim=2)
+    if kind == "clustered":
+        # degenerate on one visible device (client and db share it) —
+        # the staging path and its telemetry are structural either way
+        return make_clustered_1d()
+    return None
+
+
 def _run_scenario(*, ranks: int, steps: int, emit_every: int,
                   chunk: int | None, bucket: bool, producer_per_verb: bool,
-                  trainer_tier: str | None, epochs: int, colocated: bool,
+                  trainer_tier: str | None, epochs: int, deployment: str,
                   capacity: int = 16):
     """Build one random declaration, run it sequentially, and assert the
-    plan's dispatch predictions are exact."""
+    plan's dispatch (and, clustered, staged-transfer) predictions are
+    exact."""
     carry = jnp.zeros(()) if ranks == 1 else jnp.zeros((ranks,))
     components = [Producer(
         _step, table="field", steps=steps, ranks=ranks, carry=carry,
@@ -70,7 +85,7 @@ def _run_scenario(*, ranks: int, steps: int, emit_every: int,
         tables=[TableSpec("field", shape=(4, N), capacity=capacity,
                           engine="ring")],
         components=components,
-        deployment=make_colocated_1d(ndim=2) if colocated else None)
+        deployment=_make_deployment(deployment))
     plan = sess.plan()
     res = sess.run(plan=plan, sequential=True, max_wall_s=240)
     assert res.ok, {k: v.error for k, v in res.run.components.items()}
@@ -79,12 +94,24 @@ def _run_scenario(*, ranks: int, steps: int, emit_every: int,
         assert res.op_delta(entry.name) == entry.store_dispatches, \
             (entry.name, entry.tier, res.op_delta(entry.name),
              entry.store_dispatches)
-    assert res.server.stats()["op_count"] == plan.store_dispatches
+        assert res.staged_delta(entry.name) == entry.staged_transfers, \
+            (entry.name, entry.tier, res.staged_delta(entry.name),
+             entry.staged_transfers)
+    stats = res.server.stats()
+    assert stats["op_count"] == plan.store_dispatches
+    # Clustered: the staged-transfer predictions are exact too; every
+    # other deployment never stages.
+    assert stats["staged_transfers"] == plan.staged_transfers
+    if deployment != "clustered":
+        assert plan.staged_transfers == 0
     # Watermark bookkeeping: cached count == statically predicted puts
     # == device ground truth.
     puts = ranks * S.capture_emit_count(steps, emit_every)
     assert res.server.watermark("field") == puts \
         == res.server.watermark_device("field")
+
+
+_DEPLOYMENTS = ("none", "colocated", "clustered")
 
 
 def _draw_scenario(rng: random.Random) -> dict:
@@ -99,7 +126,7 @@ def _draw_scenario(rng: random.Random) -> dict:
         producer_per_verb=rng.random() < 0.3,
         trainer_tier=rng.choice([None, "fused", "fused", "per_verb"]),
         epochs=rng.randint(1, 2),
-        colocated=rng.random() < 0.5,
+        deployment=rng.choice(_DEPLOYMENTS),
     )
 
 
@@ -132,17 +159,17 @@ def test_seeded_scenario_grid():
        producer_per_verb=st.booleans(),
        trainer_tier=st.sampled_from([None, "fused", "per_verb"]),
        epochs=st.integers(1, 2),
-       colocated=st.booleans())
+       deployment=st.sampled_from(_DEPLOYMENTS))
 def test_hypothesis_scenario_grid(ranks, steps, emit_every, chunk, bucket,
                                   producer_per_verb, trainer_tier, epochs,
-                                  colocated):
+                                  deployment):
     """The same property, hypothesis-quantified (shrinks to a minimal
     counterexample on failure)."""
     _run_scenario(ranks=ranks, steps=steps, emit_every=emit_every,
                   chunk=chunk, bucket=bucket,
                   producer_per_verb=producer_per_verb,
                   trainer_tier=trainer_tier, epochs=epochs,
-                  colocated=colocated)
+                  deployment=deployment)
 
 
 class TestSlabShardedResolution:
@@ -168,6 +195,26 @@ class TestSlabShardedResolution:
             P.trainer_tier(self._cfg(mesh=mesh), "slab_sharded")
         with pytest.raises(ValueError):   # no mesh
             P.trainer_tier(self._cfg(), "slab_sharded")
+
+    def test_clustered_tier_resolution(self):
+        """The slab-sharded CLUSTERED tier: resolved when the config
+        carries the dedicated db mesh, with override conflicts rejected
+        both ways."""
+        from repro.insitu import plan as P
+        from repro.parallel.sharding import data_mesh
+        mesh = data_mesh(1)
+        cfg = self._cfg(mesh=mesh, slab_sharded=True, db_mesh=mesh,
+                        db_axis="data")
+        assert P.trainer_tier(cfg) == "slab_sharded_clustered"
+        assert P.trainer_tier(cfg, "slab_sharded_clustered") \
+            == "slab_sharded_clustered"
+        with pytest.raises(ValueError):   # tier named, db_mesh unset
+            P.trainer_tier(self._cfg(mesh=mesh, slab_sharded=True),
+                           "slab_sharded_clustered")
+        with pytest.raises(ValueError):   # db_mesh set, tier ignores it
+            P.trainer_tier(cfg, "slab_sharded")
+        with pytest.raises(ValueError):   # db_mesh without slab_sharded
+            self._cfg(mesh=mesh, db_mesh=mesh)
 
     def test_builder_on_degenerate_mesh(self):
         """A 1-device mesh is a valid slab-sharded deployment (laptop

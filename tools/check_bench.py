@@ -5,8 +5,9 @@ Run from the repo root (CI bench-smoke job):
     PYTHONPATH=src python -m benchmarks.run --json --smoke --json-dir out
     python tools/check_bench.py --fresh-dir out
 
-Checks ``BENCH_fused_pipeline.json`` (the session-API pipeline bench) and
-``BENCH_sharded_epoch.json`` (the sharded-epoch / data-plane-entry bench):
+Checks ``BENCH_fused_pipeline.json`` (the session-API pipeline bench),
+``BENCH_sharded_epoch.json`` (the sharded-epoch / data-plane-entry bench)
+and ``BENCH_weak_scaling.json`` (the fig5 clustered fan-in sweep):
 
 1. **Structural** (hardware-independent, hard):
    * fused consumer ``store_dispatches_per_epoch`` must stay <= 1.0 — the
@@ -35,6 +36,19 @@ For the sharded-epoch bench the gates are the data-plane claims:
   meaningful throughput.  An absolute floor, not a trajectory delta:
   on a time-sliced CPU the two subprocess timings carry ±20-25% noise,
   so the true ~1.0 ratio would flake against any committed value.
+
+For the weak-scaling bench the gates are the clustered data-plane claims:
+
+* **Structural** (hard): every fan-in cell performs exactly ONE
+  cross-mesh staged transfer per ``capture_scan`` chunk
+  (``staged_per_chunk == 1.0``), and the measured
+  ``staged_transfers`` / ``op_count`` equal the plan's predictions —
+  the fused clustered producer must never degrade back to per-element
+  hops.
+* **Performance** (same-run band, like fig10): the highest:lowest
+  fan-in ``throughput_ratio`` must stay above ``1 - 2*tol`` — producer
+  work is identical across cells, so a collapsing ratio means the
+  fan-in path started paying per-element costs.
 """
 
 from __future__ import annotations
@@ -129,6 +143,46 @@ def check_sharded_epoch(base: dict, fresh: dict, tol: float) -> list[str]:
     return errors
 
 
+def check_weak_scaling(fresh: dict, tol: float) -> list[str]:
+    """Every fig5 gate is same-run (structural counts + the fan-in band
+    measured between cells of one sweep), so no committed baseline is
+    read — ``BENCH_weak_scaling.json`` at the repo root is the perf
+    trajectory record, not a gate input."""
+    errors: list[str] = []
+
+    # -- structural invariants (hard) -------------------------------------
+    for cell in fresh["cells"]:
+        where = f"fig5 fan_in={cell['fan_in']}"
+        if abs(cell["staged_per_chunk"] - 1.0) > EPS:
+            errors.append(
+                f"{where}: staged transfers per chunk = "
+                f"{cell['staged_per_chunk']} (!= 1.0): the clustered "
+                f"fused put degraded from one reshard per chunk")
+        if cell["staged_transfers"] != cell["predicted_staged"]:
+            errors.append(
+                f"{where}: measured staged_transfers "
+                f"{cell['staged_transfers']} != plan prediction "
+                f"{cell['predicted_staged']}")
+        if cell["op_count"] != cell["predicted_ops"]:
+            errors.append(
+                f"{where}: measured op_count {cell['op_count']} != plan "
+                f"prediction {cell['predicted_ops']}")
+
+    # -- performance (same-run, same-hardware cell pair; absolute band) ---
+    cmp = fresh.get("fanin_comparison")
+    if cmp is None:
+        errors.append("fig5: no fan-in sweep pair (fanin_comparison "
+                      "missing)")
+        return errors
+    floor = 1.0 - 2.0 * tol
+    if cmp["throughput_ratio"] < floor:
+        errors.append(
+            f"fig5 fan-in {cmp['fan_in_hi']}:{cmp['fan_in_lo']} "
+            f"throughput ratio {cmp['throughput_ratio']:.3f} below floor "
+            f"{floor:.2f}: clustered staging is paying per-element costs")
+    return errors
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh-dir", default="out",
@@ -150,13 +204,17 @@ def main() -> int:
         _load(Path(args.baseline_dir) / "BENCH_sharded_epoch.json"),
         _load(Path(args.fresh_dir) / "BENCH_sharded_epoch.json"),
         args.tol)
+    errors += check_weak_scaling(
+        _load(Path(args.fresh_dir) / "BENCH_weak_scaling.json"),
+        args.tol)
     if errors:
         print("bench check FAILED:")
         for e in errors:
             print(" -", e)
         return 1
     print("bench check OK (BENCH_fused_pipeline.json + "
-          "BENCH_sharded_epoch.json within tolerance)")
+          "BENCH_sharded_epoch.json + BENCH_weak_scaling.json within "
+          "tolerance)")
     return 0
 
 
