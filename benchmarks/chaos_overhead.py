@@ -1,0 +1,106 @@
+"""Fault-machinery overhead: what exactly-once + recovery actually cost.
+
+Three measured cells over the same producer + fused-trainer session:
+
+* ``disarmed`` — no ``FaultPlan``: the pre-chaos fast path (no chunk ids,
+  no WAL, no injector consults);
+* ``armed`` — an *empty* ``FaultPlan``: the logged exactly-once path
+  (chunk acks + write-ahead log + checkpoint saves) with zero faults —
+  the steady-state tax of being recoverable;
+* ``faulted`` — a seeded plan injecting transient unavailability, a
+  dropped chunk, a producer crash and a store restart: the recovery tax,
+  with the plan's predicted retry/replay overhead reported next to the
+  measured ``stats()`` counters (they must match exactly — the chaos
+  test grid asserts it; the bench just prints the same parity).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import Row
+
+
+def _session(faults, steps: int, epochs: int):
+    from repro.core import TableSpec
+    from repro.core import store as S
+    from repro.insitu import InSituSession, Producer, TrainerConsumer
+    from repro.ml import autoencoder as ae
+    from repro.ml import trainer as tr
+    from repro.sim import flatplate as fp
+
+    fcfg = fp.FlatPlateConfig(nx=4, ny=4, nz=2)
+    coords = fp.grid_coords(fcfg)
+    snaps = jnp.stack([fp.snapshot(fcfg, jax.random.key(0), t)
+                       for t in range(8)])
+
+    def step(carry, rank, t):
+        return carry, S.make_key(rank, t), snaps[t % 8]
+
+    cfg = tr.TrainerConfig(
+        ae=ae.AEConfig(n_points=fcfg.n_points, mode="ref", latent=4,
+                       internal=4, blocks=1, mlp_width=8, mlp_depth=2),
+        epochs=epochs, gather=4, batch_size=2, lr=1e-3)
+    return InSituSession(
+        tables=[TableSpec("field", shape=(4, fcfg.n_points), capacity=16,
+                          engine="ring")],
+        components=[
+            Producer(step, table="field", steps=steps, ranks=1,
+                     carry=jnp.zeros(()), chunk=4),
+            TrainerConsumer(cfg, coords)],
+        faults=faults)
+
+
+def run(quick: bool = True):
+    from repro.core.faults import FaultEvent, FaultPlan, RetryPolicy
+
+    steps = 16 if quick else 64
+    epochs = 3 if quick else 10
+    retry = RetryPolicy(interval=1e-4, max_interval=1e-3)
+    chaos = FaultPlan(events=(
+        FaultEvent("unavailable", verb="capture", at=1, count=2),
+        FaultEvent("drop_chunk", table="field", at=2),
+        FaultEvent("crash", component="producer", at=2),
+        FaultEvent("snapshot", table="field", at=2),
+        FaultEvent("restart", table="field", at=3),
+    ), retry=retry)
+    cells = (("disarmed", None),
+             ("armed", FaultPlan(events=(), retry=retry)),
+             ("faulted", chaos))
+
+    rows = []
+    walls = {}
+    for name, plan in cells:
+        sess = _session(plan, steps, epochs)
+        splan = sess.plan()
+        t0 = time.perf_counter()
+        res = sess.run(plan=splan, sequential=True, max_wall_s=600)
+        walls[name] = time.perf_counter() - t0
+        assert res.ok, {k: v.error for k, v in res.run.components.items()}
+        stats = res.server.stats()
+        per_step = walls[name] / steps
+        rows.append(Row(
+            f"chaos/{name}/wall", per_step * 1e6,
+            f"wall_s={walls[name]:.3f};ops={stats['op_count']};"
+            f"predicted_ops={splan.store_dispatches};"
+            f"retries={stats['retries']};"
+            f"recoveries={stats['recoveries']};"
+            f"faults={stats['faults_injected']}"))
+        assert stats["op_count"] == splan.store_dispatches
+    rows.append(Row(
+        "chaos/armed_vs_disarmed", walls["armed"] * 1e6,
+        f"ratio={walls['armed'] / walls['disarmed']:.3f};"
+        f"meaning=exactly-once_tax"))
+    rows.append(Row(
+        "chaos/faulted_vs_armed", walls["faulted"] * 1e6,
+        f"ratio={walls['faulted'] / walls['armed']:.3f};"
+        f"meaning=recovery_tax"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=True))

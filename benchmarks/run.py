@@ -37,10 +37,10 @@ def main() -> None:
         ap.error("--full and --smoke are mutually exclusive")
     quick = not args.full
 
-    from . import (fig3_store_budget, fig4_size_sweep, fig5_weak_scaling,
-                   fig6_strong_scaling, fig7_inference_components,
-                   fig8_inference_scaling, fig9_fused_pipeline,
-                   fig10_sharded_epoch, roofline_table,
+    from . import (chaos_overhead, fig3_store_budget, fig4_size_sweep,
+                   fig5_weak_scaling, fig6_strong_scaling,
+                   fig7_inference_components, fig8_inference_scaling,
+                   fig9_fused_pipeline, fig10_sharded_epoch, roofline_table,
                    table12_insitu_overhead)
     benches = {
         "fig3": fig3_store_budget.run,
@@ -53,6 +53,7 @@ def main() -> None:
         "fig10": fig10_sharded_epoch.run,
         "table12": table12_insitu_overhead.run,
         "roofline": roofline_table.run,
+        "chaos": chaos_overhead.run,
     }
     if args.smoke:
         benches = {k: v for k, v in benches.items()

@@ -10,6 +10,9 @@ from . import store
 from .client import Client
 from .deployment import (Clustered, Colocated, Deployment,
                          make_clustered_1d, make_colocated_1d, split_devices)
+from .faults import (FaultEvent, FaultPlan, InjectedCrash, RetryPolicy,
+                     StoreError, StoreTimeout, StoreUnavailable,
+                     TransferDropped, WatermarkTimeout)
 from .orchestrator import InSituDriver, RunResult, StragglerPolicy
 from .server import StoreServer
 from .store import TableSpec, TableState, make_key, name_key
@@ -24,6 +27,15 @@ __all__ = [
     "make_clustered_1d",
     "make_colocated_1d",
     "split_devices",
+    "FaultEvent",
+    "FaultPlan",
+    "InjectedCrash",
+    "RetryPolicy",
+    "StoreError",
+    "StoreTimeout",
+    "StoreUnavailable",
+    "TransferDropped",
+    "WatermarkTimeout",
     "InSituDriver",
     "RunResult",
     "StragglerPolicy",

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from . import store as S
+from .faults import StoreTimeout, call_with_retry
 from .server import StoreServer
 from .telemetry import Timers, poll_backoff
 
@@ -42,16 +43,56 @@ class Client:
         self.server = server
         self.rank = int(rank)
         self.timers = timers or Timers()
+        #: fault-tolerance telemetry, surfaced through ComponentResult:
+        #: verb retries absorbed, restarts survived, straggler events seen.
+        self.retries = 0
+        self.restarts = 0
+        self.straggler_events = 0
+        self._seq = 0            # next fused-chunk sequence number
         # "Client initialization" = establishing the connection in the paper;
         # here: binding the server reference and warming the key hasher.
         S.name_key("__warmup__")
         self.timers.record("client_init", time.perf_counter() - t0)
 
+    # -- fault boundary --------------------------------------------------------
+
+    def _count_retry(self) -> None:
+        self.retries += 1
+        self.server._bump_retry()
+
+    def _call_verb(self, verb: str, table: str | None, call):
+        """Route one store verb through the fault boundary: the server's
+        injector (if armed) sees one attempt per call, transient
+        ``StoreUnavailable`` windows are absorbed by the plan's
+        ``RetryPolicy`` (bounded, jittered, deadline-clamped backoff), and
+        every absorbed retry is counted on both the client and the server.
+        Without a ``FaultPlan`` this is a plain call — zero overhead."""
+        inj = self.server.faults
+        if inj is None:
+            return call()
+
+        def attempt():
+            inj.on_verb(verb, table)
+            return call()
+
+        return call_with_retry(attempt, inj.retry, self._count_retry)
+
+    def fault_point(self, component: str, idx: int) -> None:
+        """A declared crash point: raises
+        :class:`~repro.core.faults.InjectedCrash` exactly once if the plan
+        says ``component`` dies at ``idx`` (the caller's restart loop
+        catches it and resumes from the watermark / checkpoint)."""
+        inj = self.server.faults
+        if inj is not None:
+            inj.maybe_crash(component, idx)
+
     # -- named tensors ---------------------------------------------------------
 
     def put_tensor(self, name: str, value, table: str = "default") -> None:
         with self.timers.time("send", payload=value):
-            self.server.put(table, S.name_key(name), value)
+            self._call_verb("put", table,
+                            lambda: self.server.put(table, S.name_key(name),
+                                                    value))
 
     def get_tensor(self, name: str, table: str = "default"):
         with self.timers.time("retrieve") as box:
@@ -64,18 +105,24 @@ class Client:
 
     def poll_tensor(self, name: str, table: str = "default",
                     timeout: float = 10.0, interval: float = 0.001,
-                    max_interval: float = 0.05) -> bool:
+                    max_interval: float = 0.05, strict: bool = True) -> bool:
         """Poll until the key exists (SmartRedis ``poll_tensor``).
 
         Each probe dispatches one device op, so the spin uses exponential
         backoff (``interval`` doubling up to ``max_interval``) instead of a
-        fixed-rate busy loop hammering the dispatch queue.
+        fixed-rate busy loop hammering the dispatch queue.  On timeout
+        raises :class:`~repro.core.faults.StoreTimeout` naming the tensor
+        and the deadline; ``strict=False`` restores the old silent-False
+        contract for callers probing optional keys.
         """
         key = S.name_key(name)
         with self.timers.time("metadata"):
             for _ in poll_backoff(timeout, interval, max_interval):
                 if self.server.poll(table, key):
                     return True
+            if strict:
+                raise StoreTimeout("tensor", name, timeout,
+                                   f"table {table!r}")
             return False
 
     # -- rank/step-keyed streaming (the simulation path) ------------------------
@@ -84,7 +131,17 @@ class Client:
         """Send this rank's contribution of one time step (unique key per
         rank and step, exactly the paper's keying scheme)."""
         with self.timers.time("send", payload=value):
-            self.server.put(table, S.make_key(self.rank, step), value)
+            self._call_verb(
+                "put", table,
+                lambda: self.server.put(table, S.make_key(self.rank, step),
+                                        value))
+
+    def put_kv(self, table: str, key, value) -> None:
+        """Pre-made-key put through the fault boundary (the session's
+        per-verb producer path — retried on transient unavailability)."""
+        with self.timers.time("send", payload=value):
+            self._call_verb("put", table,
+                            lambda: self.server.put(table, key, value))
 
     def retrieve_step(self, table: str, rank: int, step: int):
         with self.timers.time("retrieve") as box:
@@ -160,31 +217,51 @@ class Client:
             valid = jnp.asarray(length, jnp.int32)
         dep = self.server.deployment
         staged = dep is not None and dep.crosses_mesh
+        # The put-count accounting is deployment-independent — one source,
+        # whichever branch dispatches below.
+        puts = S.capture_emit_count(length, emit_every, t0_gate) \
+            if n_ranks is None else S.capture_emit_count_multi(
+                n_ranks, length, emit_every, t0_gate)
+        # Crossing deployments must go collect → stage → masked-insert; an
+        # armed FaultPlan routes every deployment through the same logged
+        # path, because exactly-once needs the chunk boundary: the chunk
+        # gets a stable (rank, seq) id — the SAME id on every retry, a NEW
+        # id per chunk — that the server's ack set deduplicates, and the
+        # applied chunk lands in the WAL for replay after a store restart.
+        logged = staged or self.server.wal_enabled
         with self.timers.time("send"):
+            if logged:
+                chunk_id = (self.rank, self._seq)
+                self._seq += 1
+                inj = self.server.faults
+
+                def attempt():
+                    if inj is not None:
+                        inj.on_verb("capture", table)
+                    with self.server.capture(table) as txn:
+                        if n_ranks is None:
+                            new_carry, keys, vals, mask = \
+                                S.capture_scan_collect(
+                                    spec, step_fn, carry, padded,
+                                    emit_every, t0=t0, valid=valid)
+                        else:
+                            new_carry, keys, vals, mask = \
+                                S.capture_scan_collect_multi(
+                                    spec, step_fn, carry, padded, n_ranks,
+                                    emit_every, t0=t0, valid=valid)
+                        self.server.apply_chunk(table, chunk_id, txn, keys,
+                                                vals, mask, puts)
+                    return new_carry
+
+                # collect never donates the carry, so a dropped transfer
+                # retries the whole attempt against the original carry
+                if inj is None:
+                    return attempt()
+                return call_with_retry(attempt, inj.retry,
+                                       self._count_retry)
             with self.capture(table) as txn:
-                # The put-count accounting is deployment-independent —
-                # one source, whichever branch dispatches below.
-                txn.puts = S.capture_emit_count(length, emit_every,
-                                                t0_gate) \
-                    if n_ranks is None else S.capture_emit_count_multi(
-                        n_ranks, length, emit_every, t0_gate)
-                if staged:
-                    # clustered fused put: collect → ONE staged reshard →
-                    # one masked insert on the store mesh
-                    if n_ranks is None:
-                        carry, keys, vals, mask = S.capture_scan_collect(
-                            spec, step_fn, carry, padded, emit_every,
-                            t0=t0, valid=valid)
-                    else:
-                        carry, keys, vals, mask = \
-                            S.capture_scan_collect_multi(
-                                spec, step_fn, carry, padded, n_ranks,
-                                emit_every, t0=t0, valid=valid)
-                    keys, vals, mask = self.server.stage_chunk(
-                        table, keys, vals, mask)
-                    txn.state = S.put_masked(spec, txn.state, keys, vals,
-                                             mask)
-                elif n_ranks is None:
+                txn.puts = puts
+                if n_ranks is None:
                     txn.state, carry = S.capture_scan(
                         spec, txn.state, step_fn, carry, padded, emit_every,
                         t0=t0, valid=valid)
@@ -199,7 +276,8 @@ class Client:
     def sample_batch(self, table: str, n: int, rng):
         """Random gather of ``n`` stored tensors (the paper's data loader)."""
         with self.timers.time("retrieve") as box:
-            values, keys, ok = self.server.sample(table, rng, n)
+            values, keys, ok = self._call_verb(
+                "sample", table, lambda: self.server.sample(table, rng, n))
             box[0] = values
         return values, keys, ok
 
@@ -209,9 +287,30 @@ class Client:
         staged transfer (``StoreServer.sample_staged``).  Returns
         ``(values [n,*shape], ok)``."""
         with self.timers.time("retrieve") as box:
-            values, ok = self.server.sample_staged(table, rng, n)
+            values, ok = self._call_verb(
+                "sample_staged", table,
+                lambda: self.server.sample_staged(table, rng, n))
             box[0] = values
         return values, ok
+
+    def capture_epoch(self, table: str, body):
+        """One fused read-only capture through the fault boundary: a
+        transient ``StoreUnavailable`` window on the "capture" verb is
+        absorbed *before* the table lock is taken, so a failed attempt
+        dispatches nothing and bumps no counters — the retried capture is
+        the one that counts.  ``body(txn)``'s return value is passed
+        through (the fused trainer's ``(state, metrics)``)."""
+        inj = self.server.faults
+
+        def attempt():
+            if inj is not None:
+                inj.on_verb("capture", table)
+            with self.server.capture(table) as txn:
+                return body(txn)
+
+        if inj is None:
+            return attempt()
+        return call_with_retry(attempt, inj.retry, self._count_retry)
 
     def latest_batch(self, table: str, n: int):
         with self.timers.time("retrieve") as box:
@@ -222,9 +321,12 @@ class Client:
     def wait_for_data(self, table: str, minimum: int = 1,
                       timeout: float = 60.0) -> bool:
         """Paper: "the ML workload must query the database multiple times
-        while waiting for the first training snapshot"."""
+        while waiting for the first training snapshot".  Keeps the bool
+        contract (``strict=False``): on timeout the trainer proceeds with
+        whatever data exists — the straggler mitigation path."""
         with self.timers.time("metadata"):
-            return self.server.wait_watermark(table, minimum, timeout)
+            return self.server.wait_watermark(table, minimum, timeout,
+                                              strict=False)
 
     def watermark(self, table: str) -> int:
         with self.timers.time("metadata"):
@@ -236,11 +338,16 @@ class Client:
         with self.timers.time("metadata"):
             self.server.put_meta(name, value)
 
-    def get_metadata(self, name: str, timeout: float | None = None):
+    def get_metadata(self, name: str, timeout: float | None = None,
+                     strict: bool = False):
+        """Non-strict by default (None on a missed ``timeout`` wait) — the
+        inference consumer polls this in a loop; pass ``strict=True`` to
+        get a typed :class:`~repro.core.faults.StoreTimeout` instead."""
         with self.timers.time("metadata"):
             if timeout is None:
                 return self.server.get_meta(name)
-            return self.server.wait_meta(name, timeout=timeout)
+            return self.server.wait_meta(name, timeout=timeout,
+                                         strict=strict)
 
     # -- models (RedisAI verbs) -------------------------------------------------------
 

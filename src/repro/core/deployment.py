@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .faults import FaultPlan
 from .store import TableSpec
 
 __all__ = ["Deployment", "Colocated", "Clustered", "split_devices",
@@ -81,6 +82,9 @@ class Deployment:
     #: does ``stage`` move bytes across the interconnect?  The server
     #: counts one staged transfer per stage call only when this is set.
     crosses_mesh: bool = False
+    #: declared fault plan (``core.faults.FaultPlan``) — a server built on
+    #: this deployment arms its injector + exactly-once machinery with it.
+    faults: FaultPlan | None = None
 
     def slab_sharding(self, spec: TableSpec):
         raise NotImplementedError
@@ -128,6 +132,7 @@ class Colocated(Deployment):
 
     fan_in: int = 1
     crosses_mesh: bool = False
+    faults: FaultPlan | None = None
 
     def slab_sharding(self, spec: TableSpec) -> NamedSharding:
         return NamedSharding(self.mesh, P(self.capacity_axis, *self.elem_spec))
@@ -196,6 +201,7 @@ class Clustered(Deployment):
     slab_axis: str | None = None  # slot-partition the slab over this axis
 
     crosses_mesh: bool = True
+    faults: FaultPlan | None = None
 
     def __post_init__(self):
         n_clients = int(np.prod(list(self.client_mesh.shape.values())))
@@ -289,22 +295,24 @@ class Clustered(Deployment):
 
 
 def make_colocated_1d(axis: str = "data", mesh: Mesh | None = None,
-                      shard_dim: int = 0, ndim: int = 1) -> Colocated:
+                      shard_dim: int = 0, ndim: int = 1,
+                      faults: FaultPlan | None = None) -> Colocated:
     """Convenience: co-located deployment sharding element dim 0 over `axis`."""
     if mesh is None:
         mesh = jax.make_mesh((len(jax.devices()),), (axis,))
     spec = [None] * ndim
     spec[shard_dim] = axis
-    return Colocated(mesh=mesh, elem_spec=P(*spec))
+    return Colocated(mesh=mesh, elem_spec=P(*spec), faults=faults)
 
 
 def make_clustered_1d(db_fraction: float = 0.25, axis: str = "data",
                       devices=None, elem_spec: P = P(),
-                      slab_axis: str | None = None) -> Clustered:
+                      slab_axis: str | None = None,
+                      faults: FaultPlan | None = None) -> Clustered:
     """Convenience: split the visible devices into client/db 1-D meshes
     (``split_devices``) and build the ``Clustered`` deployment over them."""
     client_devs, db_devs = split_devices(devices, db_fraction)
     return Clustered(
         client_mesh=Mesh(np.asarray(client_devs), (axis,)),
         db_mesh=Mesh(np.asarray(db_devs), (axis,)),
-        elem_spec=elem_spec, slab_axis=slab_axis)
+        elem_spec=elem_spec, slab_axis=slab_axis, faults=faults)

@@ -32,6 +32,7 @@ from typing import Any, Callable, Sequence
 from . import store as S
 from .client import Client
 from .deployment import Deployment
+from .faults import FaultPlan
 from .server import StoreServer
 from .telemetry import Timers
 
@@ -61,7 +62,15 @@ class ComponentResult:
     name: str
     steps: int = 0
     error: str | None = None
+    #: the exception class name behind ``error`` — the typed taxonomy
+    #: (``WatermarkTimeout``, ``InjectedCrash``, …) survives formatting.
+    error_type: str | None = None
     straggler_events: int = 0
+    #: transient-fault verb retries this component's client absorbed.
+    retries: int = 0
+    #: crash-recovery restarts this component survived (producer: resumed
+    #: from the table watermark; trainer: from ``MemoryCheckpoint``).
+    restarts: int = 0
     wall_s: float = 0.0
     #: whatever the component callable returned (an int is also recorded as
     #: ``steps``; richer objects — e.g. the trainer's final state — ride
@@ -84,6 +93,9 @@ class RunResult:
     components: dict[str, ComponentResult]
     timers: Timers
     wall_s: float
+    #: which component's failure triggered the shutdown (``None`` when the
+    #: run completed or ``stop_on_error`` was off).
+    failed: str | None = None
 
     @property
     def ok(self) -> bool:
@@ -101,8 +113,9 @@ class InSituDriver:
     def __init__(self, deployment: Deployment | None = None,
                  tables: Sequence[S.TableSpec] = (),
                  straggler: StragglerPolicy | None = None,
-                 table_shardings: dict[str, Any] | None = None):
-        self.server = StoreServer(deployment)
+                 table_shardings: dict[str, Any] | None = None,
+                 faults: FaultPlan | None = None):
+        self.server = StoreServer(deployment, faults=faults)
         self.straggler = straggler or StragglerPolicy()
         table_shardings = table_shardings or {}
         for spec in tables:
@@ -114,7 +127,8 @@ class InSituDriver:
 
     def run(self, components: dict[str, Callable[[Client, "threading.Event"], int]],
             max_wall_s: float = 300.0, ranks: dict[str, int] | None = None,
-            sequential: bool = False) -> RunResult:
+            sequential: bool = False, stop_on_error: bool = True
+            ) -> RunResult:
         """Run each component loop on its own thread.
 
         A component is ``fn(client, stop_event) -> steps_completed`` (or a
@@ -128,31 +142,51 @@ class InSituDriver:
         attribution (``ComponentResult.op_delta``) for benchmarks and the
         plan-parity tests, and the natural mode for producer-then-train
         offline workflows.  The wall budget covers the whole sequence.
+
+        ``stop_on_error`` (default on): the first component failure fires
+        the stop event immediately, so siblings drain and exit instead of
+        burning the rest of ``max_wall_s``; the triggering component lands
+        in ``RunResult.failed``.  Pass ``stop_on_error=False`` to keep the
+        old fully-loose coupling (siblings run to their own budgets —
+        e.g. a consumer deliberately finishing on stale data after its
+        producer died).
         """
         ranks = ranks or {}
         stop = threading.Event()
         results: dict[str, ComponentResult] = {}
         clients: dict[str, Client] = {}
         threads = []
+        failed: list[str] = []
 
         def _wrap(name: str, fn):
             def _run():
                 res = results[name]
+                cl = clients[name]
                 t0 = time.perf_counter()
                 ops0 = self.server.op_count
                 staged0 = self.server.staged_transfers
                 try:
-                    out = fn(clients[name], stop)
+                    out = fn(cl, stop)
                     res.output = out
                     if isinstance(out, (int, type(None))):
                         res.steps = int(out or 0)
                         res.output = None
                     else:
                         res.steps = int(getattr(out, "steps", 0) or 0)
-                except Exception:  # noqa: BLE001 — component isolation
+                except Exception as exc:  # noqa: BLE001 — component isolation
                     res.error = traceback.format_exc()
+                    res.error_type = type(exc).__name__
+                    if stop_on_error:
+                        # prompt shutdown: siblings see the stop event now,
+                        # not when their own wall budget expires
+                        if not failed:
+                            failed.append(name)
+                        stop.set()
                 finally:
                     res.wall_s = time.perf_counter() - t0
+                    res.retries = cl.retries
+                    res.restarts = cl.restarts
+                    res.straggler_events = cl.straggler_events
                     if sequential:
                         res.op_delta = self.server.op_count - ops0
                         res.staged_delta = \
@@ -187,4 +221,5 @@ class InSituDriver:
         for name, cl in clients.items():
             timers.merge(cl.timers)
         return RunResult(components=results, timers=timers,
-                         wall_s=time.perf_counter() - t0)
+                         wall_s=time.perf_counter() - t0,
+                         failed=failed[0] if failed else None)

@@ -47,6 +47,8 @@ import jax.numpy as jnp
 
 from . import store as S
 from .deployment import Colocated, Deployment
+from .faults import (FaultInjector, FaultPlan, StoreTimeout,
+                     WatermarkTimeout)
 from .telemetry import Timers, poll_backoff
 
 __all__ = ["StoreServer", "CaptureTxn"]
@@ -75,7 +77,8 @@ class StoreServer:
     """Thread-safe owner of a set of store tables plus the model registry."""
 
     def __init__(self, deployment: Deployment | None = None,
-                 timers: Timers | None = None):
+                 timers: Timers | None = None,
+                 faults: FaultPlan | None = None):
         self.deployment = deployment
         self.timers = timers or Timers()
         self._lock = threading.RLock()           # registries + metadata only
@@ -83,6 +86,7 @@ class StoreServer:
         self._specs: dict[str, S.TableSpec] = {}
         self._state: dict[str, S.TableState] = {}
         self._counts: dict[str, int] = {}        # cached watermarks
+        self._placements: dict[str, Any] = {}    # slab shardings (recovery)
         self._models: dict[str, tuple[Callable, Any]] = {}
         self._meta: dict[str, Any] = {}          # tiny host-side metadata KV
         self._meta_event = threading.Condition(self._lock)
@@ -90,6 +94,18 @@ class StoreServer:
         self.op_count = 0                        # dispatched store ops
         self.staged_transfers = 0                # cross-mesh staging hops
         self._gathers: dict[tuple, Callable] = {}  # clustered gather cache
+        # -- fault/recovery machinery (armed by a declared FaultPlan, even
+        # an empty one — the fault-free chaos baseline takes this path too)
+        plan = faults if faults is not None \
+            else getattr(deployment, "faults", None)
+        self.faults = FaultInjector(plan) if plan is not None else None
+        self.wal_enabled = plan is not None
+        self.retries = 0                         # verb retries (clients')
+        self.recoveries = 0                      # completed store restarts
+        self._wal: dict[str, list] = {}          # per-table write-ahead log
+        self._wal_base: dict[str, int] = {}      # replay floor (snapshot)
+        self._acked: set = set()                 # applied chunk ids
+        self._recovery: dict[str, S.TableState] | None = None
 
     def _bump_ops(self, n: int = 1) -> None:
         with self._ops_lock:
@@ -98,6 +114,10 @@ class StoreServer:
     def _bump_staged(self, n: int = 1) -> None:
         with self._ops_lock:
             self.staged_transfers += n
+
+    def _bump_retry(self, n: int = 1) -> None:
+        with self._ops_lock:
+            self.retries += n
 
     # -- table management ---------------------------------------------------
 
@@ -119,7 +139,15 @@ class StoreServer:
             self._state[spec.name] = S.init_table(spec, slab_sharding)
             self._table_locks[spec.name] = threading.RLock()
             self._counts[spec.name] = 0
+            self._placements[spec.name] = slab_sharding
+            self._wal[spec.name] = []
+            self._wal_base[spec.name] = 0
         return spec
+
+    def placement(self, table: str):
+        """The slab sharding ``table`` was created with (``None`` = default
+        placement) — what a recovering restart re-allocates against."""
+        return self._placements[table]
 
     def spec(self, table: str) -> S.TableSpec:
         return self._specs[table]
@@ -165,6 +193,7 @@ class StoreServer:
         untouched.  (Assign the fused op's result to ``txn.state`` in the
         same statement as the dispatch.)
         """
+        committed = False
         with self._table_locks[table]:
             txn = CaptureTxn(self._specs[table], self._state[table])
             try:
@@ -173,8 +202,11 @@ class StoreServer:
                 if txn.state is not txn._orig:
                     self._state[table] = txn.state
                     self._counts[table] += txn.puts
+                    committed = True
         # One capture == one fused dispatch (read-only captures included).
         self._bump_ops()
+        if committed:
+            self._after_commit(table)
 
     # -- verbs ---------------------------------------------------------------
 
@@ -212,6 +244,61 @@ class StoreServer:
         self._bump_staged()
         return dep.stage_chunk(keys, values, mask, self._specs[table])
 
+    def apply_chunk(self, table: str, chunk_id: tuple, txn: CaptureTxn,
+                    keys, values, mask, puts: int) -> None:
+        """Exactly-once insert of one collected chunk (the WAL-logged form
+        of ``stage_chunk`` + ``put_masked``, used whenever a ``FaultPlan``
+        is armed).
+
+        ``chunk_id`` is the client's stable ``(rank, seq)`` — the SAME id
+        on every retry of the same chunk, a NEW id per new chunk.  The
+        acknowledged-id set gives exactly-once semantics on an at-least-
+        once transport: ``store.put_masked`` is last-writer-wins but not
+        idempotent (ring pointer and count advance per apply), so a
+        duplicated delivery is *deduplicated* here rather than re-applied,
+        and a dropped delivery is retried by the client under the same id.
+        The staging hop is counted (and the injector consulted) *before*
+        the transfer: a dropped chunk still paid its interconnect hop, a
+        duplicated chunk pays one extra.
+        """
+        spec = self._specs[table]
+        dep = self.deployment
+        crossing = dep is not None and dep.crosses_mesh
+        if crossing:
+            self._bump_staged()
+        # may raise TransferDropped (hop already paid, nothing applied);
+        # dup=True means a second copy of this chunk arrives right after
+        dup = self.faults.on_stage(table) if self.faults is not None \
+            else False
+        if chunk_id not in self._acked:
+            if crossing:
+                keys, values, mask = dep.stage_chunk(keys, values, mask,
+                                                     spec)
+            txn.state = S.put_masked(spec, txn.state, keys, values, mask)
+            txn.puts = puts
+            self._acked.add(chunk_id)
+            if self.wal_enabled:
+                self._wal[table].append(("chunk", (keys, values, mask),
+                                         puts))
+        if dup:
+            # the duplicate delivery: one more hop, then the ack set makes
+            # it a no-op — the table state never sees the second apply
+            if crossing:
+                self._bump_staged()
+            assert chunk_id in self._acked
+
+    def _after_commit(self, table: str) -> None:
+        """Injected-operator actions at a commit boundary: a declared
+        ``snapshot`` parks a recovery image (and truncates the replay
+        tail), a declared ``restart`` kills and rebuilds the store."""
+        if self.faults is None:
+            return
+        for act in self.faults.on_commit(table):
+            if act == "snapshot":
+                self._take_recovery_snapshot()
+            else:
+                self._restart_and_recover()
+
     def put(self, table: str, key, value) -> None:
         spec = self._specs[table]
         value = self._staged(value, spec)
@@ -219,7 +306,10 @@ class StoreServer:
         with self._table_locks[table]:
             self._state[table] = S.put(spec, self._state[table], key, value)
             self._counts[table] += 1
+            if self.wal_enabled:
+                self._wal[table].append(("put", (key, value), 1))
         self._bump_ops()
+        self._after_commit(table)
 
     def put_many(self, table: str, keys, values) -> None:
         spec = self._specs[table]
@@ -229,7 +319,11 @@ class StoreServer:
             self._state[table] = S.put_many(spec, self._state[table], keys,
                                             values)
             self._counts[table] += int(keys.shape[0])
+            if self.wal_enabled:
+                self._wal[table].append(("put_many", (keys, values),
+                                         int(keys.shape[0])))
         self._bump_ops()
+        self._after_commit(table)
 
     def put_stream(self, table: str, keys, values) -> None:
         """One dispatch for a whole trajectory of sends (fused pipeline)."""
@@ -241,7 +335,10 @@ class StoreServer:
             self._state[table] = S.put_stream(spec, self._state[table], keys,
                                               values)
             self._counts[table] += n
+            if self.wal_enabled:
+                self._wal[table].append(("put_stream", (keys, values), n))
         self._bump_ops()
+        self._after_commit(table)
 
     def get(self, table: str, key):
         spec = self._specs[table]
@@ -339,6 +436,10 @@ class StoreServer:
             marks = dict(self._counts)
         return {"op_count": self.op_count,
                 "staged_transfers": self.staged_transfers,
+                "faults_injected": self.faults.faults_injected
+                if self.faults is not None else 0,
+                "retries": self.retries,
+                "recoveries": self.recoveries,
                 "watermarks": marks}
 
     def watermark(self, table: str) -> int:
@@ -366,11 +467,14 @@ class StoreServer:
 
     def wait_watermark(self, table: str, minimum: int, timeout: float = 60.0,
                        interval: float = 0.001,
-                       max_interval: float = 0.05) -> bool:
+                       max_interval: float = 0.05,
+                       strict: bool = True) -> bool:
         """Block until ``watermark >= minimum`` (paper: ML ranks poll the DB
-        while waiting for the first snapshot).  Returns False on timeout —
-        the caller decides whether to proceed with stale data (straggler
-        mitigation) or abort.
+        while waiting for the first snapshot).  On timeout raises
+        :class:`~repro.core.faults.WatermarkTimeout` carrying the table,
+        the wanted/actual watermarks and the deadline — or, with
+        ``strict=False`` (straggler mitigation: proceed on stale data),
+        returns False instead.
 
         Polls the lock-free cached watermark with deadline-clamped
         exponential backoff (``telemetry.poll_backoff``) — zero device
@@ -380,7 +484,12 @@ class StoreServer:
         for _ in poll_backoff(timeout, interval, max_interval):
             if self._counts[table] >= minimum:
                 return True
-        return self._counts[table] >= minimum
+        if self._counts[table] >= minimum:
+            return True
+        if strict:
+            raise WatermarkTimeout(table, minimum, self._counts[table],
+                                   timeout)
+        return False
 
     # -- metadata (host KV, paper's "useful metadata") ------------------------
 
@@ -393,11 +502,19 @@ class StoreServer:
         with self._lock:
             return self._meta.get(name, default)
 
-    def wait_meta(self, name: str, timeout: float = 60.0):
+    def wait_meta(self, name: str, timeout: float = 60.0,
+                  strict: bool = True):
+        """Block until metadata ``name`` exists.  On timeout raises
+        :class:`~repro.core.faults.StoreTimeout` (``strict=False``: returns
+        None — the polling form inference consumers loop on)."""
         with self._meta_event:
             ok = self._meta_event.wait_for(lambda: name in self._meta,
                                            timeout=timeout)
-            return self._meta.get(name) if ok else None
+            if ok:
+                return self._meta.get(name)
+        if strict:
+            raise StoreTimeout("metadata", name, timeout)
+        return None
 
     # -- model registry (RedisAI analogue) ------------------------------------
 
@@ -447,3 +564,56 @@ class StoreServer:
                     self._state[name] = st
                     # Re-derive the cached watermark from device truth.
                     self._counts[name] = int(jax.numpy.asarray(st.count))
+
+    # -- injected store restart + recovery -------------------------------------
+
+    def _take_recovery_snapshot(self) -> None:
+        """Park a recovery image (a declared ``snapshot`` fault event):
+        deep-copies every table and marks the current WAL length as the
+        replay floor — commits before this point never replay again (the
+        snapshot truncates the log, which is also what keeps the WAL from
+        growing without bound in a long-running session)."""
+        self._recovery = self.snapshot()
+        for t in self._wal:
+            self._wal_base[t] = len(self._wal[t])
+
+    def _replay_entry(self, spec: S.TableSpec, state: S.TableState,
+                      kind: str, payload) -> S.TableState:
+        if kind == "put":
+            return S.put(spec, state, *payload)
+        if kind == "put_many":
+            return S.put_many(spec, state, *payload)
+        if kind == "put_stream":
+            return S.put_stream(spec, state, *payload)
+        return S.put_masked(spec, state, *payload)       # "chunk"
+
+    def _restart_and_recover(self) -> None:
+        """A declared ``restart`` fault: the store process dies and comes
+        back.  The device slab is lost; each table is rebuilt from the
+        last recovery snapshot (or re-initialised empty if none was taken)
+        and the WAL tail since that snapshot is replayed — the same puts,
+        in the same commit order, against the same base state, so the
+        recovered table is byte-identical to the pre-crash one (the store
+        ops are pure functions of (state, chunk): determinism carries the
+        exactly-once argument through a restart).  The snapshot is
+        restored as a *copy* — later puts donate the live state, and the
+        parked image must survive a second restart.  Each replayed entry
+        is one real dispatch, counted in ``op_count`` (and predicted by
+        ``faults.simulate_overhead``)."""
+        with self._lock:
+            names = list(self._specs)
+        for name in names:
+            spec = self._specs[name]
+            with self._table_locks[name]:
+                if self._recovery is not None and name in self._recovery:
+                    st = jax.tree.map(jax.numpy.copy, self._recovery[name])
+                else:
+                    st = S.init_table(spec, self._placements[name])
+                for kind, payload, _puts in \
+                        self._wal[name][self._wal_base[name]:]:
+                    st = self._replay_entry(spec, st, kind, payload)
+                    self._bump_ops()
+                self._state[name] = st
+                self._counts[name] = int(jax.numpy.asarray(st.count))
+        with self._ops_lock:
+            self.recoveries += 1

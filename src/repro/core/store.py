@@ -325,6 +325,16 @@ def put_masked_impl(spec: TableSpec, state: TableState, keys, values,
     :func:`capture_scan_collect` chunk — whose emit mask may be traced
     (bucketed tails, ``emit_every`` gating against a traced ``t0``) — is
     staged across the interconnect once and inserted in ONE dispatch.
+
+    Replay safety (``core.faults``): last-writer-wins does NOT make this
+    op idempotent — ``ptr``/``count`` advance on every apply, so applying
+    the same chunk twice corrupts the ring bookkeeping.  Exactly-once
+    delivery therefore lives a level up: the server deduplicates repeated
+    chunk ids (``StoreServer.apply_chunk``) and its restart recovery
+    *replays* the write-ahead log — the same chunks, in the same order,
+    against the same snapshot base.  Because this op is a pure function of
+    ``(state, chunk)``, that replay reproduces the pre-crash table
+    byte-identically: determinism, not idempotence, carries the proof.
     """
     keys = jnp.asarray(keys, KEY_DTYPE)
     values = jnp.asarray(values, dtype=spec.dtype)

@@ -225,6 +225,18 @@ class ComponentPlan:
     #: e.g. clustered staging.)  ``plan(hlo=True)``'s ``collectives`` is
     #: the measured truth these predictions are tested against.
     predicted_collectives: tuple[tuple[str, bool], ...] | None = None
+    #: predicted transient-fault verb retries this component absorbs under
+    #: the session's declared ``FaultPlan`` (``core.faults
+    #: .simulate_overhead``; 0 on fault-free plans) — verified exactly
+    #: against ``ComponentResult.retries``.  Replay ops / re-staged hops
+    #: the faults cost land in ``dispatches`` ("replay") and ``staged``
+    #: ("restage") so the exactness totals carry them automatically.
+    retries: int = 0
+    #: predicted crash-recovery restarts this component survives
+    #: (producer: resume from the table watermark; trainer: from
+    #: ``MemoryCheckpoint``) — verified against ``ComponentResult
+    #: .restarts``.
+    restarts: int = 0
 
     @property
     def store_dispatches(self) -> int:
@@ -275,6 +287,9 @@ class ComponentPlan:
             out["dispatches_per_epoch"] = \
                 d.get("epoch", 0) / max(1, self.steps)
             out["mesh_devices"] = self.mesh_devices
+        if self.retries or self.restarts:
+            out["fault_overhead"] = {"retries": self.retries,
+                                     "restarts": self.restarts}
         if self.predicted_collectives is not None:
             out["predicted_collectives"] = {
                 op: ("nonzero" if nz else "zero")
@@ -301,6 +316,11 @@ class Plan:
     #: the paper's Fig.-5 contention knob, carried so ``explain()`` can
     #: relate predicted staged traffic to the shard ratio that carries it.
     fan_in: int = 1
+    #: declared-fault totals — ``core.faults.simulate_overhead``'s
+    #: prediction of ``stats()``'s fault counters, as sorted
+    #: ``(("faults_injected", n), ("recoveries", n), ("retries", n))``
+    #: pairs; ``()`` when no ``FaultPlan`` is armed.
+    faults: tuple[tuple[str, int], ...] = ()
 
     def __post_init__(self):
         names = [c.name for c in self.components]
@@ -339,6 +359,8 @@ class Plan:
         if self.fan_in != 1 or self.staged_transfers:
             out["fan_in"] = self.fan_in
             out["staged_transfers"] = self.staged_transfers
+        if self.faults:
+            out["faults"] = dict(self.faults)
         return out
 
     def describe(self) -> str:
@@ -353,7 +375,14 @@ class Plan:
                                 + ("+bucketed" if c.bucketed else ""))
             if c.kind == "trainer" and c.mesh_devices > 1:
                 bits.append(f"mesh={c.mesh_devices}dev")
+            if c.retries or c.restarts:
+                bits.append(f"retries={c.retries} restarts={c.restarts}")
             lines.append(f"  {c.name} [{c.kind}]: " + " ".join(bits))
+        if self.faults:
+            f = dict(self.faults)
+            lines.append(f"  faults: injected={f.get('faults_injected', 0)}"
+                         f" retries={f.get('retries', 0)}"
+                         f" recoveries={f.get('recoveries', 0)}")
         return "\n".join(lines)
 
 

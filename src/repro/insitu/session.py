@@ -45,11 +45,13 @@ import jax.numpy as jnp
 from ..core import store as S
 from ..core.client import Client
 from ..core.deployment import Clustered, Deployment
+from ..core.faults import FaultPlan, InjectedCrash, simulate_overhead
 from ..core.orchestrator import InSituDriver, RunResult, StragglerPolicy
 from ..core.server import StoreServer
 from ..ml import autoencoder as ae
 from ..ml import trainer as tr
 from ..parallel.sharding import disjoint_data_meshes, slab_sharding
+from ..train.checkpoint import MemoryCheckpoint
 from . import plan as P
 from .components import (InferenceConsumer, InferenceOutput, Producer,
                          ProducerOutput, TrainerConsumer, TrainerOutput)
@@ -94,6 +96,23 @@ class SessionResult:
         (sequential runs; 0 off a clustered deployment)."""
         return self.run.components[name].staged_delta
 
+    @property
+    def straggler_events(self) -> int:
+        """Total straggler events (component iterations exceeding the
+        ``StragglerPolicy.max_step_s`` deadline) across all components."""
+        return sum(c.straggler_events
+                   for c in self.run.components.values())
+
+    @property
+    def retries(self) -> int:
+        """Total transient-fault verb retries absorbed across components."""
+        return sum(c.retries for c in self.run.components.values())
+
+    @property
+    def restarts(self) -> int:
+        """Total crash-recovery restarts survived across components."""
+        return sum(c.restarts for c in self.run.components.values())
+
     def client(self, rank: int = 99) -> Client:
         return self.driver.client(rank=rank)
 
@@ -104,12 +123,14 @@ class InSituSession:
     def __init__(self, components: Sequence[Any],
                  tables: Sequence[S.TableSpec] = (),
                  deployment: Deployment | None = None,
-                 straggler: StragglerPolicy | None = None):
+                 straggler: StragglerPolicy | None = None,
+                 faults: FaultPlan | None = None):
         if not components:
             raise ValueError("a session needs at least one component")
         self.tables = tuple(tables)
         self.deployment = deployment
         self.straggler = straggler
+        self.faults = faults
         self.components = self._normalize(components)
         table_names = {t.name for t in self.tables}
         for comp in self.components:
@@ -149,6 +170,10 @@ class InSituSession:
         run-only path (the executables warm at run time anyway).
         """
         entries: list[P.ComponentPlan] = []
+        #: static component walk for the fault-cost simulator — one dict
+        #: per plan entry, in the sequential execution order the exactness
+        #: claim covers (see ``core.faults.simulate_overhead``).
+        schedule: list[dict] = []
         first_trainer = True
         crosses = self.deployment is not None \
             and self.deployment.crosses_mesh
@@ -161,6 +186,16 @@ class InSituSession:
             if isinstance(comp, Producer):
                 tier = P.producer_tier(comp)
                 chunk = comp.chunk or P.default_chunk(comp.emit_every)
+                if tier == "per_verb":
+                    schedule.append({
+                        "kind": "producer", "name": comp.name, "tier": tier,
+                        "table": comp.table, "steps": comp.steps,
+                        "emit_every": comp.emit_every, "ranks": comp.ranks})
+                else:
+                    schedule.append({
+                        "kind": "producer", "name": comp.name, "tier": tier,
+                        "table": comp.table,
+                        "n_chunks": -(-comp.steps // chunk)})
                 entries.append(P.ComponentPlan(
                     name=comp.name, kind="producer", tier=tier,
                     table=comp.table, ranks=comp.ranks, steps=comp.steps,
@@ -184,6 +219,10 @@ class InSituSession:
                         if mesh is not None else 1
                     name = comp.name if comp.count == 1 \
                         else f"{comp.name}{i}"
+                    schedule.append({
+                        "kind": "trainer", "name": name, "tier": tier,
+                        "table": cfg.table, "epochs": cfg.epochs,
+                        "bootstrap": first_trainer})
                     entries.append(P.ComponentPlan(
                         name=name, kind="trainer", tier=tier,
                         table=cfg.table, steps=cfg.epochs,
@@ -200,6 +239,9 @@ class InSituSession:
                     first_trainer = False
             elif isinstance(comp, InferenceConsumer):
                 tier = P.inference_tier(comp)
+                schedule.append({
+                    "kind": "inference", "name": comp.name, "tier": tier,
+                    "steps": comp.steps})
                 entries.append(P.ComponentPlan(
                     name=comp.name, kind="inference", tier=tier,
                     steps=comp.steps,
@@ -209,9 +251,40 @@ class InSituSession:
                 raise TypeError(f"unknown component type {type(comp)!r}")
         dep = self.deployment.describe() if self.deployment is not None \
             else "local"
+        fault_totals: tuple[tuple[str, int], ...] = ()
+        fplan = self._fault_plan()
+        if fplan is not None:
+            # Simulate the declared faults against the static schedule: the
+            # walk drives a FRESH injector through the exact call sequence
+            # the runtime makes, so the predicted retry dispatches, replay
+            # ops and re-staged hops equal the measured counters exactly.
+            per, totals = simulate_overhead(fplan, schedule, crosses)
+            merged = []
+            for e in entries:
+                o = per.get(e.name)
+                if o is None or o.empty:
+                    merged.append(e)
+                    continue
+                dispatches = e.dispatches + (
+                    (("replay", o.extra_ops),) if o.extra_ops else ())
+                staged = e.staged + (
+                    (("restage", o.extra_staged),) if o.extra_staged else ())
+                merged.append(_dc_replace(
+                    e, dispatches=dispatches, staged=staged,
+                    retries=o.retries, restarts=o.restarts))
+            entries = merged
+            fault_totals = tuple(sorted(totals.items()))
         return P.Plan(deployment=dep, components=tuple(entries),
                       fan_in=self.deployment.fan_in
-                      if self.deployment is not None else 1)
+                      if self.deployment is not None else 1,
+                      faults=fault_totals)
+
+    def _fault_plan(self) -> FaultPlan | None:
+        """The armed fault plan: the session's own, else the deployment's
+        (``Deployment.faults``); ``None`` disarms the whole machinery."""
+        if self.faults is not None:
+            return self.faults
+        return getattr(self.deployment, "faults", None)
 
     def _consumer_meshes(self, comp: TrainerConsumer):
         if comp.count == 1:
@@ -419,7 +492,8 @@ class InSituSession:
         plan = plan or self.plan()
         driver = InSituDriver(deployment=self.deployment, tables=self.tables,
                               straggler=self.straggler,
-                              table_shardings=self._table_shardings())
+                              table_shardings=self._table_shardings(),
+                              faults=self._fault_plan())
         if preload is not None:
             preload(driver.server)
         fns: dict[str, Callable] = {}
@@ -456,6 +530,7 @@ class InSituSession:
 
     def _producer_fn(self, comp: Producer, entry: P.ComponentPlan):
         spec = self._spec(comp.table)
+        pol = self.straggler or StragglerPolicy()
 
         if entry.tier == "per_verb":
             def fn(client: Client, stop):
@@ -463,6 +538,12 @@ class InSituSession:
                 for t in range(comp.steps):
                     if stop.is_set():
                         break
+                    # Declared crash point: a killed rank restarts from the
+                    # table watermark (its recovery cursor — the committed
+                    # prefix survives in the store, the t0 clock resumes
+                    # from it) and retries the same step index.
+                    _survive_crash(client, entry.name, t, comp.table)
+                    it0 = time.perf_counter()
                     emit = t % comp.emit_every == 0
                     if comp.ranks == 1:
                         # box[0] blocks on the solve INSIDE this bucket so
@@ -472,8 +553,9 @@ class InSituSession:
                             carry, key, value = comp.step_fn(carry, 0, t)
                             box[0] = value
                         if emit:
-                            with client.timers.time("send", payload=value):
-                                client.server.put(comp.table, key, value)
+                            # through the fault boundary: retried on
+                            # transient store-unavailable windows
+                            client.put_kv(comp.table, key, value)
                     else:
                         new, sends = [], []
                         with client.timers.time("equation_solution") as box:
@@ -488,10 +570,10 @@ class InSituSession:
                             box[0] = [v for _, v in sends]
                         if emit:
                             for key, value in sends:
-                                with client.timers.time("send",
-                                                        payload=value):
-                                    client.server.put(comp.table, key, value)
+                                client.put_kv(comp.table, key, value)
                     done += 1
+                    if time.perf_counter() - it0 > pol.max_step_s:
+                        client.straggler_events += 1
                 client.put_metadata("sim_done", True)
                 return ProducerOutput(steps=done)
             return fn
@@ -513,6 +595,11 @@ class InSituSession:
                 # server's staged-transfer telemetry untouched.
                 dep = client.server.deployment
                 staged = dep is not None and dep.crosses_mesh
+                # An armed FaultPlan routes EVERY deployment through the
+                # logged collect → masked-insert path (chunk ids + WAL), so
+                # warm exactly those executables; only a genuinely crossing
+                # deployment also stages the warmup chunk.
+                logged = staged or client.server.wal_enabled
                 lengths = {min(chunk, comp.steps - base)
                            for base in range(0, comp.steps, chunk)}
                 with client.timers.time("jit_compile"):
@@ -520,7 +607,7 @@ class InSituSession:
                         padded, valid = (S.bucket_length(k),
                                          jnp.asarray(k, jnp.int32)) \
                             if entry.bucketed else (k, None)
-                        if staged:
+                        if logged:
                             if single:
                                 _, keys, vals, mask = S.capture_scan_collect(
                                     spec, step_fn, carry, padded,
@@ -531,11 +618,15 @@ class InSituSession:
                                         spec, step_fn, carry, padded,
                                         comp.ranks, comp.emit_every, t0=0,
                                         valid=valid)
-                            keys, vals, mask = dep.stage_chunk(
-                                keys, vals, mask, spec)
+                            if staged:
+                                keys, vals, mask = dep.stage_chunk(
+                                    keys, vals, mask, spec)
+                                placement = dep.slab_sharding(spec)
+                            else:
+                                placement = client.server.placement(
+                                    comp.table)
                             wst = S.put_masked(
-                                spec,
-                                S.init_table(spec, dep.slab_sharding(spec)),
+                                spec, S.init_table(spec, placement),
                                 keys, vals, mask)
                         elif single:
                             wst, _ = S.capture_scan(
@@ -550,6 +641,13 @@ class InSituSession:
             for base in range(0, comp.steps, chunk):
                 if stop.is_set():
                     break
+                # Declared crash point, indexed by chunk: the restarted
+                # producer resumes the t0 clock at the same chunk base and
+                # re-dispatches it (the carry is re-derivable from the
+                # committed watermark prefix).
+                _survive_crash(client, entry.name, base // chunk,
+                               comp.table)
+                it0 = time.perf_counter()
                 k = min(chunk, comp.steps - base)
                 # The ring puts ride the solver dispatch (the point of the
                 # fused tier): the chunk is charged to equation_solution,
@@ -561,22 +659,51 @@ class InSituSession:
                         bucket=entry.bucketed)
                     box[0] = client.server.checkout(comp.table).count
                 done += k
+                if time.perf_counter() - it0 > pol.max_step_s:
+                    client.straggler_events += 1
             client.put_metadata("sim_done", True)
             return ProducerOutput(steps=done)
         return fn
 
     def _trainer_fn(self, comp: TrainerConsumer, cfg, entry: P.ComponentPlan,
                     verbose: bool):
+        pol = self.straggler or StragglerPolicy()
+
         def fn(client: Client, stop):
-            on_epoch = comp.on_epoch
-            if on_epoch is None and verbose:
-                on_epoch = lambda r: print(         # noqa: E731
+            user_cb = comp.on_epoch
+            if user_cb is None and verbose:
+                user_cb = lambda r: print(          # noqa: E731
                     f"  [{entry.name}] epoch {r.epoch:3d} "
                     f"train {r.train_loss:.4f} val {r.val_loss:.4f} "
                     f"relF {r.val_rel_error:.3f}")
-            state, history, levels, stats = tr.insitu_train(
-                client, comp.coords, cfg, stop_event=stop,
-                on_epoch=on_epoch, tier=entry.tier)
+            last = [time.perf_counter()]
+
+            def on_epoch(r):
+                # epoch-deadline straggler telemetry (the trainer's
+                # max_step_s unit is one epoch)
+                now = time.perf_counter()
+                if now - last[0] > pol.max_step_s:
+                    client.straggler_events += 1
+                last[0] = now
+                if user_cb is not None:
+                    user_cb(r)
+
+            # An armed FaultPlan parks (state, rng, history) in the store
+            # after every epoch; a declared trainer crash propagates out of
+            # insitu_train and the loop below re-enters it, resuming from
+            # that checkpoint with the identical rng stream.
+            memckpt = MemoryCheckpoint(client.server, key=entry.name) \
+                if client.server.wal_enabled else None
+            while True:
+                last[0] = time.perf_counter()
+                try:
+                    state, history, levels, stats = tr.insitu_train(
+                        client, comp.coords, cfg, stop_event=stop,
+                        on_epoch=on_epoch, tier=entry.tier,
+                        memckpt=memckpt, component=entry.name)
+                    break
+                except InjectedCrash:
+                    client.restarts += 1
             if comp.model_key is not None:
                 client.set_model(
                     comp.model_key,
@@ -646,6 +773,24 @@ class InSituSession:
 # ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------
+
+def _survive_crash(client: Client, name: str, idx: int, table: str) -> None:
+    """Producer-side crash/restart loop.  A declared ``FaultPlan`` crash
+    kills the step attempt before anything is dispatched; the restarted
+    rank re-reads the table watermark (its recovery cursor — the committed
+    prefix survives in the store, a host-counter read costing zero
+    dispatches) and retries the same index, which the injector now lets
+    pass (each declared crash fires exactly once).  Because the crash fires
+    before the step's store ops, the retried step emits byte-identical rows
+    and the fault-free dispatch count is preserved."""
+    while True:
+        try:
+            client.fault_point(name, idx)
+            return
+        except InjectedCrash:
+            client.restarts += 1
+            client.watermark(table)
+
 
 def _single_rank(step_fn: Callable) -> Callable:
     """Adapt the declarative (carry, rank, t) step to capture_scan's

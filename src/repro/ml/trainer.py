@@ -588,7 +588,8 @@ def _standardize_stats(batch: jax.Array):
 def insitu_train(client: Client, coords: jax.Array, cfg: TrainerConfig,
                  stop_event=None,
                  on_epoch: Callable[[EpochResult], None] | None = None,
-                 state: TrainState | None = None, tier: str | None = None):
+                 state: TrainState | None = None, tier: str | None = None,
+                 memckpt=None, component: str | None = None):
     """The consumer loop.  Returns (state, [EpochResult...], levels, stats).
 
     This is the runtime behind ``repro.insitu.InSituSession``'s
@@ -602,6 +603,17 @@ def insitu_train(client: Client, coords: jax.Array, cfg: TrainerConfig,
 
     The loop never blocks on the producer beyond ``wait_timeout_s``
     (straggler mitigation): it trains on whatever the store already holds.
+
+    Fault tolerance: ``memckpt`` (a ``train.checkpoint.MemoryCheckpoint``)
+    parks ``(state, rng, history)`` in store metadata after every epoch —
+    and once before epoch 0, right after the norm-stats bootstrap — so a
+    crashed trainer re-entering this function resumes at the first
+    unfinished epoch with the identical rng stream (bit-identical final
+    state vs an uncrashed run).  ``component`` names this consumer to the
+    deployment's ``FaultPlan``: each epoch opens with a crash point the
+    injector may fire exactly once.  Checkpoint traffic is host-side
+    metadata — zero store dispatches, so crash/recovery never perturbs the
+    plan's op-count predictions.
     """
     if tier is None:
         from ..insitu.plan import trainer_tier
@@ -611,7 +623,8 @@ def insitu_train(client: Client, coords: jax.Array, cfg: TrainerConfig,
                          f"(have {sorted(EPOCH_BUILDERS)})")
     levels = ae.coords_pyramid(cfg.ae, coords)
     tx = opt.adam(cfg.scaled_lr)
-    if state is None:
+    resumed = memckpt.restore() if memckpt is not None else None
+    if state is None and resumed is None:
         state = init_state(cfg, jax.random.key(cfg.seed), tx)
     epoch_fn = EPOCH_BUILDERS[tier](cfg, levels, tx,
                                     client.server.spec(cfg.table))
@@ -620,67 +633,101 @@ def insitu_train(client: Client, coords: jax.Array, cfg: TrainerConfig,
     # gather) run their epoch through live store verbs instead.
     fused = tier not in CLIENT_DRIVEN_TIERS
     rng = jax.random.key(cfg.seed + 1)
-
-    # Paper: "the ML workload must query the database multiple times while
-    # waiting for the first training snapshot".
-    client.wait_for_data(cfg.table, minimum=cfg.min_snapshots,
-                         timeout=cfg.wait_timeout_s)
-
-    # Standardization stats from the first gather, published as metadata.
-    mu_sd = client.get_metadata("norm_stats")
-    if mu_sd is None:
-        rng, k = jax.random.split(rng)
-        first, _, ok = client.sample_batch(cfg.table, cfg.gather, k)
-        batch = first.transpose(0, 2, 1)            # [G, N, C]
-        mu, sd = _standardize_stats(batch)
-        client.put_metadata("norm_stats", (mu, sd))
-        mu_sd = (mu, sd)
-    mu, sd = mu_sd
-    if tier == "slab_sharded_clustered":
-        # The bootstrap stats were computed from a sample living on the
-        # store's db mesh; pin them onto the trainer's client mesh so the
-        # staged epoch stays a pure client-mesh program (one jitted
-        # computation cannot span both device sets).
-        sh = NamedSharding(cfg.mesh, P())
-        mu, sd = jax.device_put(mu, sh), jax.device_put(sd, sh)
-
-    if fused:
-        # Warm the fused-epoch executable on a throwaway empty table so the
-        # timed loop measures dispatch, not compilation (charged to its own
-        # component bucket, like the paper's one-off model-load cost).  The
-        # slab-sharded tier places the dummy like the live table — jit
-        # caches on input shardings, so a replicated dummy would compile a
-        # second executable the timed loop never uses.  (Every other tier
-        # keeps the dummy uncommitted: jit re-places it freely, which is
-        # what the epoch does to the live single-device state too.)
-        with client.timers.time("jit_compile"):
-            dummy_sharding = None
-            if tier == "slab_sharded":
-                from ..parallel.sharding import slab_sharding
-                dummy_sharding = slab_sharding(
-                    client.server.spec(cfg.table), cfg.mesh, cfg.mesh_axis)
-            dummy = S.init_table(client.server.spec(cfg.table),
-                                 dummy_sharding)
-            jax.block_until_ready(
-                epoch_fn(dummy, state, jax.random.key(0), mu, sd)[1])
-    else:
-        # The per-verb tier gets the same off-clock compile treatment.
-        with client.timers.time("jit_compile"):
-            epoch_fn.warmup(state, mu, sd)
-
     history: list[EpochResult] = []
+    start_epoch = 0
+
+    if resumed is not None:
+        # --- crash recovery: pick up at the first unfinished epoch -------
+        # The checkpoint was written after the bootstrap published the
+        # norm stats, so the metadata read below always hits; no store
+        # verbs are issued on this path (warmup reuses the in-process jit
+        # cache, the wait/bootstrap already happened before the crash).
+        saved_epoch, payload = resumed
+        state = payload["state"]
+        rng = payload["rng"]
+        history = list(payload["history"])
+        start_epoch = saved_epoch + 1
+        mu, sd = client.get_metadata("norm_stats")
+        if tier == "slab_sharded_clustered":
+            sh = NamedSharding(cfg.mesh, P())
+            mu, sd = jax.device_put(mu, sh), jax.device_put(sd, sh)
+    else:
+        # Paper: "the ML workload must query the database multiple times
+        # while waiting for the first training snapshot".
+        client.wait_for_data(cfg.table, minimum=cfg.min_snapshots,
+                             timeout=cfg.wait_timeout_s)
+
+        # Standardization stats from the first gather, published as
+        # metadata.
+        mu_sd = client.get_metadata("norm_stats")
+        if mu_sd is None:
+            rng, k = jax.random.split(rng)
+            first, _, ok = client.sample_batch(cfg.table, cfg.gather, k)
+            batch = first.transpose(0, 2, 1)        # [G, N, C]
+            mu, sd = _standardize_stats(batch)
+            client.put_metadata("norm_stats", (mu, sd))
+            mu_sd = (mu, sd)
+        mu, sd = mu_sd
+        if tier == "slab_sharded_clustered":
+            # The bootstrap stats were computed from a sample living on the
+            # store's db mesh; pin them onto the trainer's client mesh so
+            # the staged epoch stays a pure client-mesh program (one jitted
+            # computation cannot span both device sets).
+            sh = NamedSharding(cfg.mesh, P())
+            mu, sd = jax.device_put(mu, sh), jax.device_put(sd, sh)
+
+        if fused:
+            # Warm the fused-epoch executable on a throwaway empty table so
+            # the timed loop measures dispatch, not compilation (charged to
+            # its own component bucket, like the paper's one-off model-load
+            # cost).  The slab-sharded tier places the dummy like the live
+            # table — jit caches on input shardings, so a replicated dummy
+            # would compile a second executable the timed loop never uses.
+            # (Every other tier keeps the dummy uncommitted: jit re-places
+            # it freely, which is what the epoch does to the live
+            # single-device state too.)
+            with client.timers.time("jit_compile"):
+                dummy_sharding = None
+                if tier == "slab_sharded":
+                    from ..parallel.sharding import slab_sharding
+                    dummy_sharding = slab_sharding(
+                        client.server.spec(cfg.table), cfg.mesh,
+                        cfg.mesh_axis)
+                dummy = S.init_table(client.server.spec(cfg.table),
+                                     dummy_sharding)
+                jax.block_until_ready(
+                    epoch_fn(dummy, state, jax.random.key(0), mu, sd)[1])
+        else:
+            # The per-verb tier gets the same off-clock compile treatment.
+            with client.timers.time("jit_compile"):
+                epoch_fn.warmup(state, mu, sd)
+
+        if memckpt is not None:
+            # Anchor checkpoint: a crash at epoch 0 resumes here instead of
+            # re-running the bootstrap (which would burn an extra sample
+            # verb and fork the rng stream).
+            memckpt.save(-1, {"state": state, "rng": rng, "history": []})
+
     epoch_timer_start = time.perf_counter()
-    for epoch in range(cfg.epochs):
+    for epoch in range(start_epoch, cfg.epochs):
         if stop_event is not None and stop_event.is_set():
             break
+        if component is not None:
+            # Crash point: before the rng split, so a restarted epoch
+            # re-derives the identical per-epoch key from the checkpoint.
+            client.fault_point(component, epoch)
         rng, k_ep = jax.random.split(rng)
         if fused:
             # --- fused: ONE dispatch for gather + SGD + validation --------
             with client.timers.time("retrieve"):
                 # Enqueue-only under the table lock (orders the read against
-                # donating producer puts); blocking happens below.
-                with client.capture(cfg.table) as txn:
-                    state, metrics = epoch_fn(txn.state, state, k_ep, mu, sd)
+                # donating producer puts); blocking happens below.  Routed
+                # through ``capture_epoch`` so a transient store-unavailable
+                # window retries the read-only capture.
+                prev = state
+                state, metrics = client.capture_epoch(
+                    cfg.table,
+                    lambda txn: epoch_fn(txn.state, prev, k_ep, mu, sd))
             with client.timers.time("train"):
                 jax.block_until_ready(state.params)
         else:
@@ -694,6 +741,9 @@ def insitu_train(client: Client, coords: jax.Array, cfg: TrainerConfig,
         history.append(res)
         if on_epoch is not None:
             on_epoch(res)
+        if memckpt is not None:
+            memckpt.save(epoch, {"state": state, "rng": rng,
+                                 "history": list(history)})
     client.timers.record("total_training",
                          time.perf_counter() - epoch_timer_start)
     return state, history, levels, (mu, sd)

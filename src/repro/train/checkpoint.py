@@ -154,23 +154,44 @@ class Checkpointer:
             self._thread = None
 
 
+def _copy_array_leaves(tree: Any) -> Any:
+    """Deep-copy the device arrays of a pytree; pass other leaves through.
+
+    Checkpointed train states can be *donated* to the next epoch's jitted
+    dispatch — a parked reference to the same buffers would dangle.  Copying
+    at save time makes the parked image immune to donation.
+    """
+    def _copy(x):
+        return jnp.copy(x) if isinstance(x, jax.Array) else x
+    return jax.tree.map(_copy, tree)
+
+
 class MemoryCheckpoint:
     """Train-state checkpoints parked in the in-memory TensorStore.
 
     The paper's database stores "data and ML models in memory for the
     duration of the run"; parking the optimizer state there gives
-    MegaScale-style in-RAM restart for transient worker failures."""
+    MegaScale-style in-RAM restart for transient worker failures.
 
-    def __init__(self, server):
+    ``key`` namespaces the checkpoint so several components can park state
+    in one store (``None`` keeps the legacy unnamespaced metadata names).
+    Saves go through :func:`_copy_array_leaves` so a state the train loop
+    later donates stays restorable.  Metadata puts/gets are host-side KV
+    traffic — checkpointing never perturbs the store's op counters.
+    """
+
+    def __init__(self, server, key: str | None = None):
         self.server = server
+        self._prefix = "__memckpt" if key is None else f"__memckpt_{key}"
         self._slot = None
 
     def save(self, step: int, state: Any) -> None:
-        self.server.put_meta("__memckpt_state", jax.tree.map(lambda x: x, state))
-        self.server.put_meta("__memckpt_step", int(step))
+        self.server.put_meta(f"{self._prefix}_state",
+                             _copy_array_leaves(state))
+        self.server.put_meta(f"{self._prefix}_step", int(step))
 
     def restore(self) -> tuple[int, Any] | None:
-        step = self.server.get_meta("__memckpt_step")
+        step = self.server.get_meta(f"{self._prefix}_step")
         if step is None:
             return None
-        return int(step), self.server.get_meta("__memckpt_state")
+        return int(step), self.server.get_meta(f"{self._prefix}_state")

@@ -1,0 +1,469 @@
+"""The fault/recovery epoch: typed taxonomy, retry policy, exactly-once
+chunk delivery, WAL replay after store restarts, snapshot/restore round
+trips, straggler telemetry, and the orchestrator's prompt shutdown.
+
+The chaos *grid* (random FaultPlans over the whole deployment grid with
+bit-identical-to-baseline assertions) lives in ``test_plan_properties``;
+this module pins each mechanism down in isolation first.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Client, InSituDriver, StoreServer, StragglerPolicy,
+                        TableSpec)
+from repro.core import store as S
+from repro.core.deployment import make_clustered_1d
+from repro.core.faults import (FaultEvent, FaultPlan, InjectedCrash,
+                               RetryPolicy, StoreError, StoreTimeout,
+                               StoreUnavailable, TransferDropped,
+                               WatermarkTimeout, call_with_retry)
+from repro.insitu import InSituSession, Producer
+from repro.parallel.sharding import data_mesh, slab_sharding
+
+SPEC = TableSpec("t", shape=(3,), capacity=8, engine="ring")
+
+
+def _server(*events, deployment=None, retry=None, table=True):
+    plan = FaultPlan(events=tuple(events),
+                     retry=retry or RetryPolicy(interval=1e-4,
+                                                max_interval=1e-3))
+    srv = StoreServer(deployment, faults=plan)
+    if table:
+        srv.create_table(SPEC)
+    return srv
+
+
+def _fill(client, n, start=0):
+    for i in range(start, start + n):
+        client.put_tensor(f"x{i}", jnp.full((3,), float(i)), table="t")
+    return client
+
+
+def _table_leaves(srv, table="t"):
+    return [np.asarray(x) for x in jax.tree.leaves(srv.checkout(table))]
+
+
+# ---------------------------------------------------------------------------
+# Retry policy
+# ---------------------------------------------------------------------------
+
+class TestRetryPolicy:
+    def test_sleeps_seeded_and_bounded(self):
+        pol = RetryPolicy(max_attempts=6, interval=0.01, max_interval=0.04,
+                          timeout=60.0, jitter=0.25, seed=3)
+        a, b = list(pol.sleeps()), list(pol.sleeps())
+        assert a == b                      # seeded jitter: deterministic
+        assert len(a) == pol.max_attempts - 1
+        expect = [0.01, 0.02, 0.04, 0.04, 0.04]   # doubling, capped
+        for s, base in zip(a, expect):
+            assert base <= s <= base * (1 + pol.jitter)
+
+    def test_deadline_clamp(self):
+        # an expired deadline yields no sleeps at all...
+        assert list(RetryPolicy(timeout=0.0).sleeps()) == []
+        # ...and a tiny budget clamps each sleep to the time remaining
+        pol = RetryPolicy(max_attempts=10, interval=1.0, timeout=0.01,
+                          jitter=0.0)
+        for s in pol.sleeps():
+            assert s <= 0.01
+
+    def test_call_with_retry_counts_and_succeeds(self):
+        calls, retries = [0], [0]
+
+        def flaky():
+            calls[0] += 1
+            if calls[0] < 3:
+                raise StoreUnavailable("transient")
+            return "ok"
+
+        pol = RetryPolicy(interval=1e-5, max_interval=1e-4)
+        out = call_with_retry(flaky, pol, lambda: retries.__setitem__(
+            0, retries[0] + 1))
+        assert out == "ok" and calls[0] == 3 and retries[0] == 2
+
+    def test_call_with_retry_exhausts_and_reraises(self):
+        pol = RetryPolicy(max_attempts=3, interval=1e-5, max_interval=1e-4)
+        calls = [0]
+
+        def always():
+            calls[0] += 1
+            raise StoreUnavailable("down")
+
+        with pytest.raises(StoreUnavailable):
+            call_with_retry(always, pol)
+        assert calls[0] == pol.max_attempts
+
+    def test_non_transient_propagates_immediately(self):
+        calls = [0]
+
+        def boom():
+            calls[0] += 1
+            raise ValueError("not retryable")
+
+        with pytest.raises(ValueError):
+            call_with_retry(boom, RetryPolicy())
+        assert calls[0] == 1
+
+
+# ---------------------------------------------------------------------------
+# Typed failure taxonomy
+# ---------------------------------------------------------------------------
+
+class TestTaxonomy:
+    def test_hierarchy(self):
+        assert issubclass(WatermarkTimeout, StoreTimeout)
+        assert issubclass(StoreTimeout, StoreError)
+        assert issubclass(TransferDropped, StoreUnavailable)
+        assert issubclass(StoreError, RuntimeError)
+
+    def test_wait_watermark_raises_typed(self):
+        srv = StoreServer()
+        srv.create_table(SPEC)
+        with pytest.raises(WatermarkTimeout) as ei:
+            srv.wait_watermark("t", 5, timeout=0.02)
+        e = ei.value
+        assert (e.table, e.minimum, e.watermark) == ("t", 5, 0)
+        assert "wanted >= 5" in str(e)
+        # the straggler-mitigation contract survives as strict=False
+        assert srv.wait_watermark("t", 5, timeout=0.02,
+                                  strict=False) is False
+
+    def test_wait_meta_raises_typed(self):
+        srv = StoreServer()
+        with pytest.raises(StoreTimeout) as ei:
+            srv.wait_meta("never", timeout=0.02)
+        assert ei.value.name == "never"
+        assert srv.wait_meta("never", timeout=0.02, strict=False) is None
+
+    def test_poll_tensor_raises_typed(self):
+        srv = StoreServer()
+        srv.create_table(SPEC)
+        client = Client(srv)
+        with pytest.raises(StoreTimeout):
+            client.poll_tensor("ghost", table="t", timeout=0.02)
+        assert client.poll_tensor("ghost", table="t", timeout=0.02,
+                                  strict=False) is False
+
+    def test_error_type_reaches_component_result(self):
+        driver = InSituDriver(tables=[SPEC])
+
+        def consumer(client, stop):
+            client.server.wait_watermark("t", 99, timeout=0.02)
+
+        res = driver.run({"ml": consumer}, max_wall_s=30)
+        assert res.components["ml"].error_type == "WatermarkTimeout"
+        assert res.failed == "ml"
+
+    def test_fault_event_validation(self):
+        with pytest.raises(ValueError):
+            FaultEvent("meteor")
+        with pytest.raises(ValueError):
+            FaultEvent("unavailable")              # needs a verb
+        with pytest.raises(ValueError):
+            FaultEvent("crash")                    # needs a component
+        with pytest.raises(ValueError):
+            FaultEvent("drop_chunk")               # needs a table
+
+    def test_random_plan_deterministic(self):
+        a = FaultPlan.random(7, n_events=4)
+        b = FaultPlan.random(7, n_events=4)
+        assert a == b and len(a.events) == 4
+        assert FaultPlan.random(8, n_events=4) != a
+
+
+# ---------------------------------------------------------------------------
+# Transient unavailability absorbed by the client fault boundary
+# ---------------------------------------------------------------------------
+
+class TestUnavailableRetry:
+    def test_put_retried_and_counted(self):
+        srv = _server(FaultEvent("unavailable", verb="put", at=0, count=2))
+        client = Client(srv)
+        client.put_tensor("x", jnp.ones((3,)), table="t")
+        v, found = client.get_tensor("x", table="t")
+        assert bool(found)
+        assert client.retries == 2
+        st = srv.stats()
+        assert st["retries"] == 2 and st["faults_injected"] == 2
+        assert srv.watermark("t") == 1     # failed attempts dispatch nothing
+
+    def test_retry_exhaustion_raises(self):
+        srv = _server(
+            FaultEvent("unavailable", verb="put", at=0, count=99),
+            retry=RetryPolicy(max_attempts=3, interval=1e-5,
+                              max_interval=1e-4))
+        client = Client(srv)
+        with pytest.raises(StoreUnavailable):
+            client.put_tensor("x", jnp.ones((3,)), table="t")
+        assert client.retries == 2
+        assert srv.watermark("t") == 0
+
+    def test_sample_window_absorbed(self):
+        srv = _server(FaultEvent("unavailable", verb="sample", at=1))
+        client = _fill(Client(srv), 4)
+        k = jax.random.key(0)
+        client.sample_batch("t", 2, k)              # attempt 0: clean
+        vals, _, ok = client.sample_batch("t", 2, k)  # 1 fails, retried
+        assert vals.shape == (2, 3) and client.retries == 1
+
+
+# ---------------------------------------------------------------------------
+# Exactly-once chunk delivery (ack set over a non-idempotent put)
+# ---------------------------------------------------------------------------
+
+class TestExactlyOnce:
+    def _chunk(self, n=3, start=0):
+        keys = jnp.arange(start, start + n).astype(S.KEY_DTYPE)
+        vals = jnp.stack([jnp.full((3,), float(start + i))
+                          for i in range(n)])
+        return keys, vals, jnp.ones((n,), bool)
+
+    def test_duplicate_chunk_id_is_deduplicated(self):
+        srv = _server()
+        keys, vals, mask = self._chunk()
+        with srv.capture("t") as txn:
+            srv.apply_chunk("t", (0, 0), txn, keys, vals, mask, puts=3)
+        before = _table_leaves(srv)
+        # the duplicate delivery: same chunk id — must be a no-op
+        with srv.capture("t") as txn:
+            srv.apply_chunk("t", (0, 0), txn, keys, vals, mask, puts=3)
+        assert srv.watermark("t") == 3 == srv.watermark_device("t")
+        for a, b in zip(before, _table_leaves(srv)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_same_payload_new_id_applies(self):
+        # put_masked is NOT idempotent: the same payload under a NEW chunk
+        # id advances ptr/count again — which is why dedup must key on the
+        # id, not the bytes.
+        srv = _server()
+        keys, vals, mask = self._chunk()
+        for seq in range(2):
+            with srv.capture("t") as txn:
+                srv.apply_chunk("t", (0, seq), txn, keys, vals, mask,
+                                puts=3)
+        assert srv.watermark("t") == 6 == srv.watermark_device("t")
+
+    def test_drop_and_dup_converge_to_baseline(self):
+        """A dropped first transfer (client retries under the same id) and
+        a duplicated later one leave the table byte-identical to the
+        fault-free run."""
+        def run(events):
+            srv = _server(*events)
+            client = Client(srv)
+            carry = jnp.zeros(())
+
+            def step(c, t):
+                return c, S.make_key(0, t), jnp.full((3,), 1.0) * t
+
+            for base in range(0, 6, 3):
+                client.capture_scan("t", step, carry, 3, t0=base)
+            return srv, client
+
+        base_srv, _ = run(())
+        srv, client = run((
+            FaultEvent("drop_chunk", table="t", at=0),
+            FaultEvent("dup_chunk", table="t", at=2),
+        ))
+        assert client.retries == 1
+        assert srv.stats()["faults_injected"] == 2
+        assert srv.watermark("t") == base_srv.watermark("t") == 6
+        for a, b in zip(_table_leaves(base_srv), _table_leaves(srv)):
+            np.testing.assert_array_equal(a, b)
+        # local deployment: faults never fabricate cross-mesh traffic
+        assert srv.stats()["staged_transfers"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Store restart + WAL replay
+# ---------------------------------------------------------------------------
+
+class TestRestartRecovery:
+    def test_restart_replays_wal_to_identical_state(self):
+        base = _server()
+        _fill(Client(base), 5)
+        srv = _server(FaultEvent("restart", table="t", at=3))
+        client = _fill(Client(srv), 5)
+        assert srv.stats()["recoveries"] == 1
+        assert srv.watermark("t") == 5 == srv.watermark_device("t")
+        # replaying 3 WAL entries costs 3 extra real dispatches
+        assert srv.op_count == base.op_count + 3
+        for a, b in zip(_table_leaves(base), _table_leaves(srv)):
+            np.testing.assert_array_equal(a, b)
+        v, found = client.get_tensor("x0", table="t")
+        assert bool(found)
+        np.testing.assert_array_equal(np.asarray(v), np.zeros(3))
+
+    def test_snapshot_truncates_replay_tail(self):
+        base = _server()
+        _fill(Client(base), 6)
+        srv = _server(FaultEvent("snapshot", table="t", at=2),
+                      FaultEvent("restart", table="t", at=5))
+        _fill(Client(srv), 6)
+        # only the 3 commits after the snapshot replay
+        assert srv.op_count == base.op_count + 3
+        assert srv.stats()["recoveries"] == 1
+        for a, b in zip(_table_leaves(base), _table_leaves(srv)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_snapshot_image_survives_two_restarts(self):
+        base = _server()
+        _fill(Client(base), 6)
+        srv = _server(FaultEvent("snapshot", table="t", at=2),
+                      FaultEvent("restart", table="t", at=4),
+                      FaultEvent("restart", table="t", at=6))
+        _fill(Client(srv), 6)
+        assert srv.stats()["recoveries"] == 2
+        for a, b in zip(_table_leaves(base), _table_leaves(srv)):
+            np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# snapshot() / restore() round trips (the in-RAM checkpoint surface)
+# ---------------------------------------------------------------------------
+
+class TestSnapshotRestore:
+    def _roundtrip(self, srv):
+        client = _fill(Client(srv), 3)
+        snap = srv.snapshot()
+        _fill(client, 3, start=3)
+        assert srv.watermark("t") == 6
+        srv.restore(snap)
+        assert srv.watermark("t") == 3 == srv.watermark_device("t")
+        v, found = client.get_tensor("x1", table="t")
+        assert bool(found)
+        np.testing.assert_array_equal(np.asarray(v), np.ones(3))
+        _, found = client.get_tensor("x4", table="t")
+        assert not bool(found)
+
+    def test_default_placement(self):
+        srv = StoreServer()
+        srv.create_table(SPEC)
+        self._roundtrip(srv)
+
+    def test_slab_sharded_table(self):
+        srv = StoreServer()
+        sh = slab_sharding(SPEC, data_mesh(1))
+        srv.create_table(SPEC, slab_sharding=sh)
+        self._roundtrip(srv)
+        # the restored slab still lives on the explicit placement
+        assert srv.checkout("t").slab.sharding.spec == sh.spec
+
+    def test_clustered_placed_table(self):
+        srv = StoreServer(make_clustered_1d())
+        srv.create_table(SPEC)
+        self._roundtrip(srv)
+
+    def test_model_registry_survives_restore(self):
+        srv = StoreServer()
+        srv.create_table(SPEC)
+        srv.set_model("head", lambda p, x: x @ p["w"],
+                      {"w": jnp.ones((3, 2))})
+        snap = srv.snapshot()
+        srv.restore(snap)
+        assert srv.has_model("head")
+        out = srv.run_model("head", jnp.arange(3.0))
+        np.testing.assert_allclose(np.asarray(out), [3.0, 3.0])
+
+
+# ---------------------------------------------------------------------------
+# Injected component crashes + recovery loops
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+class TestCrashRecovery:
+    def test_crash_fires_exactly_once(self):
+        srv = _server(FaultEvent("crash", component="sim", at=2))
+        client = Client(srv)
+        client.fault_point("sim", 0)
+        client.fault_point("sim", 1)
+        with pytest.raises(InjectedCrash) as ei:
+            client.fault_point("sim", 2)
+        assert (ei.value.component, ei.value.at) == ("sim", 2)
+        client.fault_point("sim", 2)       # the restarted rank passes
+
+    def test_producer_crash_preserves_stream(self):
+        def run(events):
+            sess = InSituSession(
+                tables=[SPEC],
+                components=[Producer(
+                    lambda c, r, t: (c, S.make_key(r, t),
+                                     jnp.full((3,), 1.0) * t),
+                    table="t", steps=6, carry=jnp.zeros(()), chunk=3)],
+                faults=FaultPlan(events=tuple(events)))
+            res = sess.run(sequential=True)
+            assert res.ok, {k: v.error
+                            for k, v in res.run.components.items()}
+            return res
+
+        base = run(())
+        res = run((FaultEvent("crash", component="producer", at=1),))
+        assert res.restarts == 1
+        assert res.run.components["producer"].restarts == 1
+        assert res.plan.components[0].restarts == 1
+        assert res.server.watermark("t") == base.server.watermark("t") == 6
+        assert res.op_delta("producer") == base.op_delta("producer")
+        for a, b in zip(_table_leaves(base.server),
+                        _table_leaves(res.server)):
+            np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Straggler policy surface
+# ---------------------------------------------------------------------------
+
+class TestStragglerPolicy:
+    def _session(self, policy):
+        return InSituSession(
+            tables=[SPEC],
+            components=[Producer(
+                lambda c, r, t: (c, S.make_key(r, t), jnp.ones((3,))),
+                table="t", steps=3, carry=jnp.zeros(()), tier="per_verb",
+                warmup=False)],
+            straggler=policy)
+
+    def test_zero_deadline_flags_every_step(self):
+        res = self._session(StragglerPolicy(max_step_s=0.0)).run(
+            sequential=True)
+        assert res.ok
+        assert res.run.components["producer"].straggler_events == 3
+        assert res.straggler_events == 3
+
+    def test_default_deadline_flags_nothing(self):
+        res = self._session(None).run(sequential=True)
+        assert res.ok and res.straggler_events == 0
+
+
+# ---------------------------------------------------------------------------
+# Orchestrator prompt shutdown
+# ---------------------------------------------------------------------------
+
+class TestPromptShutdown:
+    def test_sibling_drains_immediately(self):
+        driver = InSituDriver(tables=[SPEC])
+
+        def slow_producer(client, stop):
+            done = 0
+            for _ in range(1000):
+                if stop.is_set():
+                    break
+                time.sleep(0.01)
+                done += 1
+            return done
+
+        def failing_consumer(client, stop):
+            raise ValueError("dead on arrival")
+
+        t0 = time.perf_counter()
+        res = driver.run({"sim": slow_producer, "ml": failing_consumer},
+                         max_wall_s=120)
+        wall = time.perf_counter() - t0
+        assert res.failed == "ml"
+        assert res.components["ml"].error_type == "ValueError"
+        assert res.components["sim"].ok
+        assert res.components["sim"].steps < 1000   # drained early
+        assert wall < 60.0

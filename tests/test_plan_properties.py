@@ -24,6 +24,7 @@ import random
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from _hyp import HAVE_HYPOTHESIS, HealthCheck, given, settings, st
@@ -31,6 +32,7 @@ from _hyp import HAVE_HYPOTHESIS, HealthCheck, given, settings, st
 from repro.core import TableSpec
 from repro.core import store as S
 from repro.core.deployment import make_clustered_1d, make_colocated_1d
+from repro.core.faults import FaultEvent, FaultPlan, RetryPolicy
 from repro.insitu import InSituSession, Producer, TrainerConsumer
 from repro.ml import autoencoder as ae
 from repro.ml import trainer as tr
@@ -170,6 +172,155 @@ def test_hypothesis_scenario_grid(ranks, steps, emit_every, chunk, bucket,
                   producer_per_verb=producer_per_verb,
                   trainer_tier=trainer_tier, epochs=epochs,
                   deployment=deployment)
+
+
+# ---------------------------------------------------------------------------
+# Chaos grid: the same exactness property under seeded fault injection
+# ---------------------------------------------------------------------------
+#
+# Three claims per (seed, deployment) cell, against a FaultPlan.random
+# drawing dropped/duplicated chunk transfers, transient unavailability
+# windows, producer/trainer crashes, and store snapshots/restarts:
+#
+#   (a) the run COMPLETES (every fault is absorbed or recovered from);
+#   (b) the final table contents and TrainState are BIT-IDENTICAL to the
+#       fault-free baseline (exactly-once delivery + checkpoint-resumed
+#       rng streams + deterministic WAL replay);
+#   (c) the plan's predicted dispatches and staged transfers — retries,
+#       replay ops and re-staged hops included — equal the measured
+#       ``stats()`` counters EXACTLY, as do the predicted fault totals.
+#
+# The fault-free baseline runs with an *empty armed* FaultPlan so both
+# runs take the identical logged (chunk-id + WAL) code path.
+
+_FAST_RETRY = dict(interval=1e-4, max_interval=1e-3)
+
+
+def _chaos_session(deployment: str, faults: FaultPlan, *,
+                   producer_per_verb: bool, steps: int, emit_every: int,
+                   chunk: int, epochs: int, capacity: int = 16):
+    cfg = tr.TrainerConfig(ae=_TINY_AE, epochs=epochs, gather=4,
+                           batch_size=2, lr=1e-3, fused=True)
+    return InSituSession(
+        tables=[TableSpec("field", shape=(4, N), capacity=capacity,
+                          engine="ring")],
+        components=[
+            Producer(_step, table="field", steps=steps, ranks=1,
+                     carry=jnp.zeros(()), emit_every=emit_every,
+                     chunk=chunk,
+                     tier="per_verb" if producer_per_verb else None),
+            TrainerConsumer(cfg, COORDS)],
+        deployment=_make_deployment(deployment),
+        faults=faults)
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree.leaves(tree)]
+
+
+def _run_chaos_scenario(seed: int, deployment: str):
+    rng = random.Random(seed)
+    shape = dict(
+        producer_per_verb=rng.random() < 0.3,
+        steps=rng.randint(6, 12),
+        emit_every=rng.randint(1, 2),
+        chunk=rng.randint(2, 5),
+        epochs=rng.randint(1, 2),
+    )
+    retry = RetryPolicy(seed=seed, **_FAST_RETRY)
+    baseline = _chaos_session(
+        deployment, FaultPlan(events=(), retry=retry), **shape).run(
+        sequential=True, max_wall_s=240)
+    assert baseline.ok, {k: v.error
+                         for k, v in baseline.run.components.items()}
+    faults = FaultPlan.random(
+        seed, tables=("field",), verbs=("put", "capture", "sample"),
+        components=("producer", "trainer"), n_events=3,
+        max_index=shape["steps"], retry=retry)
+    sess = _chaos_session(deployment, faults, **shape)
+    plan = sess.plan()
+    res = sess.run(plan=plan, sequential=True, max_wall_s=240)
+    # (a) the chaos run completes
+    assert res.ok, {k: v.error for k, v in res.run.components.items()}
+    # (c) exact predictions, retries/replays/restages included
+    for entry in plan.components:
+        assert res.op_delta(entry.name) == entry.store_dispatches, \
+            (entry.name, entry.tier, res.op_delta(entry.name),
+             entry.store_dispatches)
+        assert res.staged_delta(entry.name) == entry.staged_transfers, \
+            (entry.name, entry.tier, res.staged_delta(entry.name),
+             entry.staged_transfers)
+        centry = res.run.components[entry.name]
+        assert centry.retries == entry.retries, entry.name
+        assert centry.restarts == entry.restarts, entry.name
+    stats = res.server.stats()
+    assert stats["op_count"] == plan.store_dispatches
+    assert stats["staged_transfers"] == plan.staged_transfers
+    for key, predicted in plan.faults:
+        assert stats[key] == predicted, (key, predicted, stats[key])
+    # (b) the data plane converged to the fault-free run, bit for bit
+    assert res.server.watermark("field") \
+        == baseline.server.watermark("field") \
+        == res.server.watermark_device("field")
+    assert res.server.valid_count("field") \
+        == baseline.server.valid_count("field")
+    for a, b in zip(_leaves(baseline.server.checkout("field")),
+                    _leaves(res.server.checkout("field"))):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(_leaves(baseline.output("trainer").state),
+                    _leaves(res.output("trainer").state)):
+        np.testing.assert_array_equal(a, b)
+
+
+_CHAOS_SEEDS = tuple(range(9))
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("deployment", _DEPLOYMENTS)
+def test_chaos_smoke(deployment):
+    """One seeded fault scenario per deployment (the fast CI gate)."""
+    _run_chaos_scenario(0, deployment)
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+@pytest.mark.parametrize("deployment", _DEPLOYMENTS)
+def test_chaos_grid(deployment):
+    """The full grid: 9 seeds x 3 deployments = 27 seeded fault combos."""
+    for seed in _CHAOS_SEEDS:
+        try:
+            _run_chaos_scenario(seed, deployment)
+        except AssertionError as e:
+            raise AssertionError(
+                f"chaos seed {seed} ({deployment}): {e}") from e
+
+
+@pytest.mark.chaos
+def test_concurrent_store_restart_recovers():
+    """Acceptance: a mid-run store restart with a LIVE producer and
+    trainer (concurrent threads, not sequential) recovers via snapshot +
+    WAL replay and finishes with the fault-free watermark/valid_count."""
+    shape = dict(producer_per_verb=False, steps=12, emit_every=1, chunk=2,
+                 epochs=3)
+    retry = RetryPolicy(**_FAST_RETRY)
+    baseline = _chaos_session(
+        "none", FaultPlan(events=(), retry=retry), **shape).run(
+        max_wall_s=240)
+    assert baseline.ok, {k: v.error
+                         for k, v in baseline.run.components.items()}
+    faults = FaultPlan(events=(
+        FaultEvent("snapshot", table="field", at=2),
+        FaultEvent("restart", table="field", at=5)), retry=retry)
+    res = _chaos_session("none", faults, **shape).run(max_wall_s=240)
+    assert res.ok, {k: v.error for k, v in res.run.components.items()}
+    assert res.server.stats()["recoveries"] == 1
+    assert res.server.watermark("field") \
+        == baseline.server.watermark("field") == 12
+    assert res.server.watermark("field") \
+        == res.server.watermark_device("field")
+    assert res.server.valid_count("field") \
+        == baseline.server.valid_count("field")
+    assert len(res.output("trainer").history) == shape["epochs"]
 
 
 class TestSlabShardedResolution:

@@ -98,9 +98,14 @@ def test_consumer_never_blocks_on_dead_producer():
                                                         step))
         raise RuntimeError("simulated node failure")
 
+    # stop_on_error=False keeps the fully-loose coupling under test here:
+    # the consumer deliberately finishes on stale data after the producer
+    # died (the default now fires a prompt shutdown instead).
     res = driver.run({"sim": dying_producer, "ml": _consumer(epochs=3)},
-                     max_wall_s=240)
+                     max_wall_s=240, stop_on_error=False)
     assert not res.components["sim"].ok
+    assert res.components["sim"].error_type == "RuntimeError"
+    assert res.failed is None
     assert res.components["ml"].ok, res.components["ml"].error
     assert res.components["ml"].steps == 3
 
@@ -116,6 +121,9 @@ def test_failure_isolation_consumer_crash():
     assert res.components["sim"].ok
     assert not res.components["ml"].ok
     assert "simulated OOM" in res.components["ml"].error
+    # the typed taxonomy + prompt-shutdown attribution survive the format
+    assert res.components["ml"].error_type == "ValueError"
+    assert res.failed == "ml"
 
 
 def test_three_step_inference_protocol():
