@@ -1,0 +1,192 @@
+"""Serving bench: store-backed continuous batching vs the three-step
+protocol, plus model hot-swap latency.
+
+The serving plane's analogue of fig9's pipeline bench, run through the
+same ~10-line ``InSituSession`` declaration: ``clients`` concurrent
+inference clients submit requests into a ring request table, one
+``ServingConsumer`` drains them with continuous batching (each drained
+batch = ONE fused gather → model → scatter dispatch), responses land in
+a results table the clients poll.
+
+Cells (written to ``BENCH_serving.json``; ``tools/check_bench.py``
+gates them):
+
+* **requests/s vs concurrent clients** — end-to-end wall clock of the
+  full submit → drain → collect session per client count, with the
+  structural counters alongside: fused serve dispatches per drained
+  batch (must be exactly 1.0), measured vs plan-predicted op counts and
+  model swaps (must be equal — the serving form of the exactness
+  contract).
+* **tier comparison** (same run, same hardware): continuous batching vs
+  the paper's one-at-a-time ``get → run_model → put`` three-step
+  baseline at the widest client count.  The band gate holds the
+  throughput ratio up: batching must not degrade to per-request costs.
+* **swap latency** — publish-to-adoption time of a model hot-swap
+  (``set_model`` + the loop's atomic ``bind_model``), host-side
+  microbenchmark on a standing server.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from .common import Row, timeit
+
+
+def _session(tier: str, clients: int, requests: int, max_batch: int):
+    import jax.numpy as jnp
+    from repro.core import TableSpec
+    from repro.insitu import InSituSession, ServingClients, ServingConsumer
+
+    shape = (64, 64)
+
+    def feed(c, s):
+        return jnp.full(shape, float(100 * c + s))
+
+    capacity = max(32, 1 << (clients * requests - 1).bit_length())
+    tables = [TableSpec("sreq", shape=shape, capacity=capacity,
+                        engine="ring"),
+              TableSpec("sres", shape=shape, capacity=capacity,
+                        engine="ring")]
+    comps = [
+        ServingClients(feed, table="sreq", clients=clients,
+                       requests=requests, submit=True, collect=False,
+                       name="writers"),
+        ServingConsumer("m", table="sreq", results="sres",
+                        clients=clients, requests=requests,
+                        max_batch=max_batch, tier=tier),
+        ServingClients(feed, table="sreq", clients=clients,
+                       requests=requests, submit=False, collect=True,
+                       name="readers")]
+    return InSituSession(components=comps, tables=tables)
+
+
+def _model_fn(p, x):
+    return p * x + 1.0
+
+
+def _preload(server):
+    # module-level fn: its identity is the fused dispatch's static jit
+    # arg, so warmup compiles carry over to the timed session
+    import jax.numpy as jnp
+    server.set_model("m", _model_fn, jnp.asarray(2.0))
+
+
+def _cell(tier: str, clients: int, requests: int, max_batch: int) -> dict:
+    """One measured serving cell: an untimed warmup run primes the jit
+    caches (shapes are shared across cells), then a fresh session is
+    timed end to end."""
+    total = clients * requests
+    _session(tier, clients, requests, max_batch).run(
+        sequential=True, preload=_preload, max_wall_s=600)
+    sess = _session(tier, clients, requests, max_batch)
+    plan = sess.plan()
+    t0 = time.perf_counter()
+    res = sess.run(plan=plan, sequential=True, preload=_preload,
+                   max_wall_s=600)
+    wall = time.perf_counter() - t0
+    assert res.ok, {k: v.error for k, v in res.run.components.items()}
+    stats = res.server.stats()
+    serving = res.output("serving")
+    serves = dict(next(e for e in plan.components
+                       if e.name == "serving").dispatches).get("serve", 0)
+    return {
+        "tier": tier,
+        "clients": clients,
+        "requests": total,
+        "max_batch": max_batch,
+        "batches": serving.batches,
+        "serve_dispatches": serves,
+        "dispatches_per_batch": serves / max(1, serving.batches),
+        "op_count": stats["op_count"],
+        "predicted_ops": plan.store_dispatches,
+        "model_swaps": stats["model_swaps"],
+        "predicted_swaps": plan.model_swaps,
+        "requests_per_s": total / max(wall, 1e-9),
+    }
+
+
+def _swap_cell() -> dict:
+    """Publish-to-adoption latency of one hot-swap, on a standing
+    server + loop (no requests in flight — the registry protocol cost)."""
+    import jax.numpy as jnp
+    from repro.core import Client, StoreServer, TableSpec
+    from repro.serve.engine import ServeLoop
+
+    server = StoreServer()
+    for name in ("sreq", "sres"):
+        server.create_table(TableSpec(name, shape=(64, 64), capacity=32,
+                                      engine="ring"))
+    loop = ServeLoop(Client(server), model_key="m", request_table="sreq",
+                     response_table="sres", clients=1, requests=1,
+                     max_batch=1)
+    params = jnp.asarray(2.0)
+
+    def publish_and_adopt():
+        server.set_model("m", _model_fn, params)
+        assert loop.maybe_swap()
+        return params
+
+    t = timeit(publish_and_adopt, iters=50)
+    return {"swap_latency_us": t * 1e6, "adoptions": loop.swaps}
+
+
+def run_cells(quick: bool = True, smoke: bool = False) -> dict:
+    if smoke or quick:
+        client_counts, requests, max_batch = (1, 4), 8, 4
+    else:
+        client_counts, requests, max_batch = (1, 2, 4, 8), 16, 8
+    cells = [_cell("continuous_batch", k, requests, max_batch)
+             for k in client_counts]
+    widest = max(client_counts)
+    three = _cell("three_step", widest, requests, max_batch)
+    cont = next(c for c in cells if c["clients"] == widest)
+    return {
+        "bench": "serving",
+        "api": "insitu_session",
+        "requests_per_client": requests,
+        "max_batch": max_batch,
+        "cells": cells,
+        "tier_comparison": {
+            "clients": widest,
+            "continuous_requests_per_s": cont["requests_per_s"],
+            "three_step_requests_per_s": three["requests_per_s"],
+            "throughput_ratio": (cont["requests_per_s"]
+                                 / three["requests_per_s"]),
+        },
+        "swap": _swap_cell(),
+    }
+
+
+def run(quick: bool = True, json_path: str | None = None,
+        write_json: bool = True, smoke: bool = False):
+    data = run_cells(quick=quick, smoke=smoke)
+    if write_json:
+        path = Path(json_path) if json_path else Path("BENCH_serving.json")
+        path.write_text(json.dumps(data, indent=2) + "\n")
+    rows = []
+    for c in data["cells"]:
+        rows.append(Row(
+            f"serving/continuous/clients{c['clients']}",
+            1e6 / c["requests_per_s"],
+            f"requests={c['requests']};max_batch={c['max_batch']};"
+            f"requests_per_s={c['requests_per_s']:.1f};"
+            f"batches={c['batches']};"
+            f"dispatches_per_batch={c['dispatches_per_batch']:.2f};"
+            f"swaps={c['model_swaps']}"))
+    cmp = data["tier_comparison"]
+    rows.append(Row(
+        f"serving/three_step/clients{cmp['clients']}",
+        1e6 / cmp["three_step_requests_per_s"],
+        f"requests_per_s={cmp['three_step_requests_per_s']:.1f};"
+        f"continuous_ratio={cmp['throughput_ratio']:.2f}"))
+    rows.append(Row("serving/hot_swap", data["swap"]["swap_latency_us"],
+                    f"adoptions={data['swap']['adoptions']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=False))

@@ -23,8 +23,9 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="minimal session-API run (fig9, the fig10 "
-                         "replicated-vs-slab-sharded entry cells, and the "
-                         "fig5 clustered fan-in cells) for the CI bench "
+                         "replicated-vs-slab-sharded entry cells, the "
+                         "fig5 clustered fan-in cells, and the serving "
+                         "continuous-batching cells) for the CI bench "
                          "gate")
     ap.add_argument("--json", action="store_true",
                     help="also write BENCH_<name>.json per bench")
@@ -40,8 +41,8 @@ def main() -> None:
     from . import (chaos_overhead, fig3_store_budget, fig4_size_sweep,
                    fig5_weak_scaling, fig6_strong_scaling,
                    fig7_inference_components, fig8_inference_scaling,
-                   fig9_fused_pipeline, fig10_sharded_epoch, roofline_table,
-                   table12_insitu_overhead)
+                   fig9_fused_pipeline, fig10_sharded_epoch, fig_serving,
+                   roofline_table, table12_insitu_overhead)
     benches = {
         "fig3": fig3_store_budget.run,
         "fig4": fig4_size_sweep.run,
@@ -54,10 +55,11 @@ def main() -> None:
         "table12": table12_insitu_overhead.run,
         "roofline": roofline_table.run,
         "chaos": chaos_overhead.run,
+        "serving": fig_serving.run,
     }
     if args.smoke:
         benches = {k: v for k, v in benches.items()
-                   if k in ("fig5", "fig9", "fig10")}
+                   if k in ("fig5", "fig9", "fig10", "serving")}
     if args.only:
         names = args.only.split(",")
         unknown = [n for n in names if n not in benches]
@@ -86,6 +88,10 @@ def main() -> None:
             quick=quick, smoke=args.smoke, write_json=args.json,
             json_path=str(Path(args.json_dir)
                           / "BENCH_weak_scaling.json")))
+    if "serving" in benches:
+        benches["serving"] = (lambda quick: fig_serving.run(
+            quick=quick, smoke=args.smoke, write_json=args.json,
+            json_path=str(Path(args.json_dir) / "BENCH_serving.json")))
 
     print("name,us_per_call,derived")
     failures = 0
@@ -99,7 +105,11 @@ def main() -> None:
             wall_s = time.perf_counter() - t0
             print(f"_meta/{name}/wall_s,{wall_s*1e6:.0f},", flush=True)
             if args.json:
-                out = Path(args.json_dir) / f"BENCH_{name}.json"
+                # "serving" writes its structured gate file under
+                # BENCH_serving.json itself; keep the generic rows dump
+                # from clobbering it.
+                stem = "serving_rows" if name == "serving" else name
+                out = Path(args.json_dir) / f"BENCH_{stem}.json"
                 out.write_text(json.dumps(
                     {"bench": name, "quick": quick, "wall_s": wall_s,
                      "rows": [asdict(r) for r in rows]}, indent=2) + "\n")

@@ -143,6 +143,44 @@ class Client:
             self._call_verb("put", table,
                             lambda: self.server.put(table, key, value))
 
+    def get_kv(self, table: str, key):
+        """Pre-made-key get through the fault boundary (the serving
+        clients' response poll — retried on transient unavailability).
+        Returns ``(value, found)``."""
+        with self.timers.time("retrieve") as box:
+            value, found = self._call_verb(
+                "get", table, lambda: self.server.get(table, key))
+            box[0] = value
+        return value, found
+
+    def serve_batch(self, req_table: str, res_table: str, keys, mask,
+                    apply_fn, params):
+        """One continuous-batching drain through the fault boundary: the
+        fused gather → model → scatter dispatch
+        (``StoreServer.serve_batch``) under a stable chunk id, so a
+        dropped response transfer is retried under the SAME id and the
+        server's ack set keeps the insert exactly-once.  Returns the
+        per-slot served flags."""
+        inj = self.server.faults
+        chunk_id = None
+        if self.server.wal_enabled:
+            chunk_id = (self.rank, self._seq)
+            self._seq += 1
+        with self.timers.time("model_eval") as box:
+            def attempt():
+                if inj is not None:
+                    inj.on_verb("serve", res_table)
+                return self.server.serve_batch(req_table, res_table, keys,
+                                               mask, apply_fn, params,
+                                               chunk_id=chunk_id)
+
+            if inj is None:
+                ok = attempt()
+            else:
+                ok = call_with_retry(attempt, inj.retry, self._count_retry)
+            box[0] = ok
+        return ok
+
     def retrieve_step(self, table: str, rank: int, step: int):
         with self.timers.time("retrieve") as box:
             value, found = self.server.get(table, S.make_key(rank, step))

@@ -364,6 +364,10 @@ def simulate_overhead(plan: FaultPlan, schedule, crosses_mesh: bool
     * producer fused: ``{kind, name, tier, table, n_chunks}``
     * trainer: ``{kind, name, tier, table, epochs, bootstrap}``
     * inference: ``{kind, name, tier, steps}``
+    * serving clients: ``{kind, name, tier, table, results, requests,
+      submit, collect}``
+    * serving consumer: ``{kind, name, tier, table, results, requests,
+      n_batches}``
 
     The walk mirrors the runtime control flow *exactly* — every
     ``on_verb`` / ``on_stage`` / ``on_commit`` / ``maybe_crash`` call the
@@ -419,6 +423,26 @@ def simulate_overhead(plan: FaultPlan, schedule, crosses_mesh: bool
             break
         _commit(o, table)
 
+    def _serve_chunk(o: Overhead, table: str) -> None:
+        # mirrors Client.serve_batch: verb attempt, then the injector's
+        # stage hook on the results table (a drop retries the whole fused
+        # dispatch under the same chunk id; the serve dispatch never
+        # crosses the interconnect, so no hops are counted either way),
+        # then the commit boundary
+        while True:
+            try:
+                inj.on_verb("serve", table)
+            except StoreUnavailable:
+                o.retries += 1
+                continue
+            try:
+                inj.on_stage(table)
+            except TransferDropped:
+                o.retries += 1
+                continue
+            break
+        _commit(o, table)
+
     def _crash_point(o: Overhead, name: str, at: int) -> None:
         while True:
             try:
@@ -458,6 +482,29 @@ def simulate_overhead(plan: FaultPlan, schedule, crosses_mesh: bool
                 _verb(o, "put", tin)
                 _commit(o, tin)       # put_tensor of the input
                 _commit(o, tout)      # run_model's prediction put
+        elif kind == "clients":
+            if comp["submit"]:
+                for r in range(comp["requests"]):
+                    _crash_point(o, comp["name"], r)
+                    _verb(o, "put", comp["table"])
+                    _commit(o, comp["table"])
+            if comp["collect"]:
+                # response gets ride the fault boundary but never commit
+                for _ in range(comp["requests"]):
+                    _verb(o, "get", comp["results"])
+        elif kind == "serving" and tier == "three_step":
+            for r in range(comp["requests"]):
+                _crash_point(o, comp["name"], r)
+                _verb(o, "get", comp["table"])
+                _verb(o, "put", comp["results"])
+                _commit(o, comp["results"])
+        elif kind == "serving":
+            # continuous batching: crash index = batch index (recovery
+            # re-cursors from the results watermark and retries the SAME
+            # batch, so the drained-batch count is crash-invariant)
+            for i in range(comp["n_batches"]):
+                _crash_point(o, comp["name"], i)
+                _serve_chunk(o, comp["results"])
         # fused_registry inference never touches the store: nothing to walk
 
     totals = {

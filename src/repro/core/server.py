@@ -88,6 +88,9 @@ class StoreServer:
         self._counts: dict[str, int] = {}        # cached watermarks
         self._placements: dict[str, Any] = {}    # slab shardings (recovery)
         self._models: dict[str, tuple[Callable, Any]] = {}
+        self._model_raw: dict[str, Callable] = {}  # unjitted apply fns
+        self._model_versions: dict[str, int] = {}  # hot-swap generations
+        self.model_swaps = 0                     # serving weight adoptions
         self._meta: dict[str, Any] = {}          # tiny host-side metadata KV
         self._meta_event = threading.Condition(self._lock)
         self._ops_lock = threading.Lock()
@@ -355,6 +358,50 @@ class StoreServer:
         self._bump_ops()
         return out
 
+    def serve_batch(self, req_table: str, res_table: str, keys, mask,
+                    apply_fn, params, chunk_id: tuple | None = None):
+        """Drain one continuous-batching batch in ONE fused dispatch:
+        gather the active requests from ``req_table``, apply the bound
+        model, scatter the responses into ``res_table``
+        (``store.serve_batch``).
+
+        Requests, model params and responses all live on the store
+        placement, so the dispatch never crosses the interconnect — no
+        staged transfers are counted — but the injector's stage hook on
+        ``res_table`` is still consulted so drop/dup chaos events exercise
+        the serving path.  Under an armed ``FaultPlan`` the batch is
+        WAL-logged as a ``put_masked`` chunk (host-known ``mask``, so a
+        restart replays the insert byte-identically) and deduplicated by
+        ``chunk_id`` exactly like :meth:`apply_chunk`.  Returns the
+        per-slot found-and-served flags.
+        """
+        req_spec = self._specs[req_table]
+        res_spec = self._specs[res_table]
+        keys = jnp.asarray(keys, S.KEY_DTYPE)
+        mask_dev = jnp.asarray(mask, bool)
+        puts = int(mask_dev.sum())
+        first, second = sorted((req_table, res_table))
+        with self._table_locks[first], self._table_locks[second]:
+            dup = self.faults.on_stage(res_table) \
+                if self.faults is not None else False
+            if chunk_id is None or chunk_id not in self._acked:
+                new_res, ok, ys = S.serve_batch(
+                    req_spec, res_spec, apply_fn,
+                    self._state[req_table], self._state[res_table],
+                    params, keys, mask_dev)
+                self._state[res_table] = new_res
+                self._counts[res_table] += puts
+                if chunk_id is not None:
+                    self._acked.add(chunk_id)
+                if self.wal_enabled:
+                    self._wal[res_table].append(
+                        ("chunk", (keys, ys, mask_dev), puts))
+            else:
+                ok = mask_dev
+        self._bump_ops()
+        self._after_commit(res_table)
+        return ok
+
     def sample(self, table: str, rng, n: int):
         spec = self._specs[table]
         with self._table_locks[table]:
@@ -440,6 +487,7 @@ class StoreServer:
                 if self.faults is not None else 0,
                 "retries": self.retries,
                 "recoveries": self.recoveries,
+                "model_swaps": self.model_swaps,
                 "watermarks": marks}
 
     def watermark(self, table: str) -> int:
@@ -528,6 +576,12 @@ class StoreServer:
         fn = jax.jit(apply_fn) if jit_compile else apply_fn
         with self._lock:
             self._models[key] = (fn, params)
+            # keep the UNJITTED fn too: the fused serving dispatch takes
+            # it as a static jit arg, and a fresh jax.jit wrapper per
+            # publish would miss its compile cache on every hot-swap
+            self._model_raw[key] = apply_fn
+            self._model_versions[key] = \
+                self._model_versions.get(key, 0) + 1
 
     def has_model(self, key: str) -> bool:
         with self._lock:
@@ -541,6 +595,37 @@ class StoreServer:
     def model_keys(self) -> list[str]:
         with self._lock:
             return list(self._models)
+
+    def model_version(self, key: str) -> int:
+        """Monotonic publication counter for ``key`` (0 = never published).
+        Each ``set_model`` bumps it — the serving consumer's hot-swap
+        watermark, polled for free like the table watermarks."""
+        with self._lock:
+            return self._model_versions.get(key, 0)
+
+    def bind_model(self, key: str, have: int | None = None):
+        """Atomically adopt the current weights for ``key`` if they are
+        newer than generation ``have``.
+
+        Returns ``(apply_fn, params, version)`` on adoption — including the
+        very first bind (``have=None``) — or ``None`` when nothing newer is
+        published.  ``apply_fn`` is the publisher's raw (unjitted)
+        function, identity-stable across re-publishes of the same
+        callable, so the fused serving dispatch's compile cache survives
+        hot-swaps.  Version read and registry read happen under one lock,
+        so a concurrent ``set_model`` can never hand out torn
+        (old-params, new-version) pairs; every adoption bumps
+        ``model_swaps`` in :meth:`stats`.
+        """
+        with self._lock:
+            version = self._model_versions.get(key, 0)
+            if version == 0 or version == have:
+                return None
+            fn = self._model_raw[key]
+            params = self._models[key][1]
+        with self._ops_lock:
+            self.model_swaps += 1
+        return fn, params, version
 
     # -- in-memory checkpointing hook -----------------------------------------
 

@@ -88,6 +88,7 @@ __all__ = [
     "put_stream",
     "get",
     "get_many",
+    "serve_batch",
     "sample",
     "sample_sharded_impl",
     "latest",
@@ -439,6 +440,36 @@ def get_many_impl(spec: TableSpec, state: TableState, keys,
 
 
 get_many = partial(jax.jit, static_argnums=(0, 3))(get_many_impl)
+
+
+def serve_batch_impl(req_spec: TableSpec, res_spec: TableSpec, apply_fn,
+                     req_state: TableState, res_state: TableState,
+                     params, keys, mask):
+    """Fused serving dispatch: gather requests → model → scatter results.
+
+    One traced program covers a whole drained serving batch — the batched
+    probe+gather over the request table, a ``vmap`` of the single-element
+    ``apply_fn(params, x)`` registry function, and the masked insert into
+    the results table — so each batch costs O(1) host dispatches regardless
+    of how many ring slots are active.
+
+    ``mask`` is the host-known active-slot mask; insertion uses it directly
+    (not ``found & mask``) so a WAL replay of ``(keys, ys, mask)`` via the
+    ``put_masked`` path reproduces the insert byte-identically.  Returns
+    ``(new_res_state, found & mask, ys)`` — the second element flags slots
+    whose request key was actually present.
+    """
+    keys = jnp.asarray(keys, KEY_DTYPE)
+    mask = jnp.asarray(mask, bool)
+    xs, found = get_many_impl(req_spec, req_state, keys)
+    ys = jnp.asarray(
+        jax.vmap(lambda x: apply_fn(params, x))(xs), res_spec.dtype)
+    new_res = put_masked_impl(res_spec, res_state, keys, ys, mask)
+    return new_res, found & mask, ys
+
+
+serve_batch = partial(jax.jit, static_argnums=(0, 1, 2),
+                      donate_argnums=4)(serve_batch_impl)
 
 
 def sample_impl(spec: TableSpec, state: TableState, rng, n: int,

@@ -12,9 +12,11 @@ are thin shims over this path.
 """
 
 from .components import (InferenceConsumer, InferenceOutput, Producer,
-                         ProducerOutput, TrainerConsumer, TrainerOutput)
+                         ProducerOutput, ServingClients,
+                         ServingClientsOutput, ServingConsumer,
+                         ServingOutput, TrainerConsumer, TrainerOutput)
 from .plan import (ComponentPlan, Plan, inference_tier, producer_tier,
-                   trainer_tier)
+                   serving_tier, trainer_tier)
 from .session import InSituSession, SessionResult
 
 __all__ = [
@@ -23,12 +25,17 @@ __all__ = [
     "Producer",
     "TrainerConsumer",
     "InferenceConsumer",
+    "ServingClients",
+    "ServingConsumer",
     "ProducerOutput",
     "TrainerOutput",
     "InferenceOutput",
+    "ServingClientsOutput",
+    "ServingOutput",
     "Plan",
     "ComponentPlan",
     "producer_tier",
     "trainer_tier",
     "inference_tier",
+    "serving_tier",
 ]

@@ -24,7 +24,9 @@ from ..ml.trainer import EpochResult, TrainerConfig, TrainState
 
 __all__ = [
     "Producer", "TrainerConsumer", "InferenceConsumer",
+    "ServingClients", "ServingConsumer",
     "ProducerOutput", "TrainerOutput", "InferenceOutput",
+    "ServingClientsOutput", "ServingOutput",
 ]
 
 
@@ -89,11 +91,20 @@ class TrainerConsumer:
     tier: str | None = None
     model_key: str | None = None
     on_epoch: Callable[[EpochResult], None] | None = None
+    #: publish a versioned checkpoint into the model registry every this
+    #: many epochs (requires ``model_key``) — the hot-swap producer side.
+    #: ``None``: publish only the final model, the historical behavior.
+    publish_every: int | None = None
     name: str = "trainer"
 
     def __post_init__(self):
         if self.count < 1:
             raise ValueError("count must be >= 1")
+        if self.publish_every is not None:
+            if self.publish_every < 1:
+                raise ValueError("publish_every must be >= 1")
+            if self.model_key is None:
+                raise ValueError("publish_every requires model_key")
         if self.count > 1 and self.cfg.mesh is not None:
             raise ValueError(
                 "multi-consumer sessions own the device slicing: leave "
@@ -144,3 +155,92 @@ class InferenceConsumer:
 class InferenceOutput:
     steps: int
     last: Any
+
+
+@dataclass
+class ServingClients:
+    """The request-submitting side of the serving plane: ``clients``
+    concurrent inference clients, each submitting ``requests`` requests
+    (``feed(client, seq) -> value``) into the store-backed request
+    ``table`` under packed (client, seq) keys, then polling the paired
+    results table for their answers.
+
+    ``submit`` / ``collect`` split the two halves for sequential
+    scheduling: a sequential exactness grid declares one submit-only
+    writer component before the :class:`ServingConsumer` and one
+    collect-only reader after it, while a concurrent session uses a
+    single submit+collect component.  ``order_seed`` shuffles the
+    arrival interleave across clients (per-client sequence ids stay
+    monotone) — admission-order canonicalization in the serving loop
+    makes the batch count invariant to it.
+    """
+
+    feed: Callable
+    table: str
+    clients: int = 2
+    requests: int = 4
+    submit: bool = True
+    collect: bool = True
+    order_seed: int | None = None
+    name: str = "clients"
+
+    def __post_init__(self):
+        if self.clients < 1:
+            raise ValueError("clients must be >= 1")
+        if self.requests < 1:
+            raise ValueError("requests must be >= 1")
+        if not (self.submit or self.collect):
+            raise ValueError("at least one of submit/collect is required")
+
+
+@dataclass
+class ServingClientsOutput:
+    requests: int
+    #: collected responses keyed ``(client, seq)`` (empty when
+    #: ``collect=False``)
+    responses: dict
+
+
+@dataclass
+class ServingConsumer:
+    """The serving plane's drain side: continuous batching over the
+    request ``table``, responses into ``results``, model ``model_key``
+    hot-swapped from the registry between batches.
+
+    The default tier (``continuous_batch``) drains up to ``max_batch``
+    requests per fused dispatch and re-checks the model version every
+    ``reload_every`` batches; ``tier="three_step"`` forces the paper's
+    one-at-a-time get → run_model → put baseline the parity tests
+    compare against.  ``wait_timeout_s`` bounds the wait for the first
+    published model and for request arrival.
+    """
+
+    model_key: str
+    table: str
+    results: str
+    clients: int = 2
+    requests: int = 4
+    max_batch: int = 4
+    reload_every: int = 1
+    wait_timeout_s: float | None = None
+    tier: str | None = None
+    name: str = "serving"
+
+    def __post_init__(self):
+        if self.clients < 1:
+            raise ValueError("clients must be >= 1")
+        if self.requests < 1:
+            raise ValueError("requests must be >= 1")
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.reload_every < 1:
+            raise ValueError("reload_every must be >= 1")
+        if self.table == self.results:
+            raise ValueError("request and results tables must differ")
+
+
+@dataclass
+class ServingOutput:
+    steps: int      # requests served
+    batches: int    # fused serve dispatches (0 for three_step)
+    swaps: int      # model generations adopted

@@ -49,11 +49,13 @@ from ..analysis.hlo import COLLECTIVE_OPS
 from ..core import store as S
 
 __all__ = [
-    "PRODUCER_TIERS", "TRAINER_TIERS", "INFERENCE_TIERS",
-    "producer_tier", "trainer_tier", "inference_tier",
+    "PRODUCER_TIERS", "TRAINER_TIERS", "INFERENCE_TIERS", "SERVING_TIERS",
+    "producer_tier", "trainer_tier", "inference_tier", "serving_tier",
     "default_chunk", "ComponentPlan", "Plan",
     "producer_dispatches", "trainer_dispatches", "inference_dispatches",
     "producer_staged", "trainer_staged", "inference_staged",
+    "clients_dispatches", "clients_staged",
+    "serving_dispatches", "serving_staged", "serving_swaps",
     "TRAINER_COLLECTIVE_PREDICTIONS", "COLLECTIVE_FREE",
     "trainer_collective_prediction",
 ]
@@ -62,6 +64,7 @@ PRODUCER_TIERS = ("per_verb", "capture_scan", "capture_scan_multi")
 TRAINER_TIERS = ("per_verb", "fused", "sharded_fused", "slab_sharded",
                  "slab_sharded_clustered")
 INFERENCE_TIERS = ("fused_registry", "three_step")
+SERVING_TIERS = ("continuous_batch", "three_step")
 
 
 def producer_tier(comp) -> str:
@@ -136,6 +139,18 @@ def inference_tier(comp) -> str:
                              f"(have {INFERENCE_TIERS})")
         return comp.tier
     return "fused_registry"
+
+
+def serving_tier(comp) -> str:
+    """Resolve a :class:`~.components.ServingConsumer`'s tier: the fused
+    continuous-batching drain by default; ``three_step`` forces the
+    paper's one-request-at-a-time get → run_model → put baseline."""
+    if comp.tier is not None:
+        if comp.tier not in SERVING_TIERS:
+            raise ValueError(f"unknown serving tier {comp.tier!r} "
+                             f"(have {SERVING_TIERS})")
+        return comp.tier
+    return "continuous_batch"
 
 
 def default_chunk(emit_every: int) -> int:
@@ -237,6 +252,10 @@ class ComponentPlan:
     #: ``MemoryCheckpoint``) — verified against ``ComponentResult
     #: .restarts``.
     restarts: int = 0
+    #: predicted model-generation adoptions (serving hot-swap) — verified
+    #: exactly against ``stats()["model_swaps"]``.  0 everywhere but the
+    #: continuous-batching serving tier.
+    swaps: int = 0
 
     @property
     def store_dispatches(self) -> int:
@@ -287,6 +306,17 @@ class ComponentPlan:
             out["dispatches_per_epoch"] = \
                 d.get("epoch", 0) / max(1, self.steps)
             out["mesh_devices"] = self.mesh_devices
+        if self.kind == "clients":
+            out["requests"] = self.steps
+        if self.kind == "serving":
+            d = dict(self.dispatches)
+            out["requests"] = self.steps
+            out["drained_batches"] = d.get("serve", 0)
+            out["model_swaps"] = self.swaps
+            if self.tier == "continuous_batch":
+                # THE serving claim: one fused dispatch per drained batch
+                out["dispatches_per_batch"] = \
+                    self.store_dispatches / max(1, d.get("serve", 0))
         if self.retries or self.restarts:
             out["fault_overhead"] = {"retries": self.retries,
                                      "restarts": self.restarts}
@@ -347,6 +377,12 @@ class Plan:
         """Predicted total cross-mesh staged transfers (0 off clustered)."""
         return sum(c.staged_transfers for c in self.components)
 
+    @property
+    def model_swaps(self) -> int:
+        """Predicted total model-generation adoptions (serving hot-swap;
+        verified exactly against ``stats()["model_swaps"]``)."""
+        return sum(c.swaps for c in self.components)
+
     def explain(self) -> dict:
         """Chosen tiers, expected dispatch counts, clustered staging
         traffic + fan-in, and (when resolved) compiled-HLO collective
@@ -359,6 +395,8 @@ class Plan:
         if self.fan_in != 1 or self.staged_transfers:
             out["fan_in"] = self.fan_in
             out["staged_transfers"] = self.staged_transfers
+        if self.model_swaps:
+            out["model_swaps"] = self.model_swaps
         if self.faults:
             out["faults"] = dict(self.faults)
         return out
@@ -375,6 +413,8 @@ class Plan:
                                 + ("+bucketed" if c.bucketed else ""))
             if c.kind == "trainer" and c.mesh_devices > 1:
                 bits.append(f"mesh={c.mesh_devices}dev")
+            if c.kind == "serving":
+                bits.append(f"requests={c.steps} swaps={c.swaps}")
             if c.retries or c.restarts:
                 bits.append(f"retries={c.retries} restarts={c.restarts}")
             lines.append(f"  {c.name} [{c.kind}]: " + " ".join(bits))
@@ -467,3 +507,67 @@ def inference_staged(tier: str, steps: int, crosses_mesh: bool
     if crosses_mesh and tier == "three_step":
         return (("put_stage", 2 * steps),)
     return ()
+
+
+# ---------------------------------------------------------------------------
+# Serving-plane predictions (the request/response queue + the drain)
+# ---------------------------------------------------------------------------
+
+def clients_dispatches(requests: int, submit: bool, collect: bool
+                       ) -> tuple[tuple[str, int], ...]:
+    """Predicted store dispatches of one :class:`~.components
+    .ServingClients` component over all its clients: one ``put`` per
+    submitted request (the submission-watermark metadata bump is a host
+    write — zero dispatches), one ``get`` per collected response (the
+    results-watermark wait is the free cached poll)."""
+    out = []
+    if submit:
+        out.append(("request", requests))
+    if collect:
+        out.append(("response", requests))
+    return tuple(out)
+
+
+def clients_staged(requests: int, submit: bool, crosses_mesh: bool
+                   ) -> tuple[tuple[str, int], ...]:
+    """Predicted cross-mesh hops of the serving clients: each submitted
+    request's put stages its payload onto the store placement; response
+    gets read in place and never stage."""
+    if crosses_mesh and submit:
+        return (("request_stage", requests),)
+    return ()
+
+
+def serving_dispatches(tier: str, requests: int, max_batch: int
+                       ) -> tuple[tuple[str, int], ...]:
+    """Predicted store dispatches of the serving drain.
+
+    Continuous batching: ONE fused serve dispatch per drained batch —
+    ``ceil(requests / max_batch)`` under canonical admission order (the
+    round-robin discovery sweep makes the batch count invariant to
+    arrival interleaving).  Three-step: one ``get`` plus one ``put`` per
+    request (``run_model`` is registry compute, not a store op).
+    """
+    if tier == "three_step":
+        return (("get", requests), ("put", requests))
+    return (("serve", -(-requests // max_batch)),)
+
+
+def serving_staged(tier: str, requests: int, crosses_mesh: bool
+                   ) -> tuple[tuple[str, int], ...]:
+    """Predicted cross-mesh hops of the serving drain: the fused serve
+    dispatch runs entirely on the store placement (requests, model and
+    responses colocated — zero hops); the three-step baseline stages each
+    response put."""
+    if crosses_mesh and tier == "three_step":
+        return (("response_stage", requests),)
+    return ()
+
+
+def serving_swaps(tier: str) -> int:
+    """Predicted model-generation adoptions for a sequential run: the
+    continuous-batching loop binds exactly the one generation published
+    before it drains (re-checks find nothing newer); the three-step
+    baseline's ``run_model`` reads the registry directly and never
+    binds."""
+    return 1 if tier == "continuous_batch" else 0

@@ -35,6 +35,7 @@ the plan-verification tests.
 
 from __future__ import annotations
 
+import random
 import time
 from dataclasses import dataclass, replace as _dc_replace
 from typing import Any, Callable, Sequence
@@ -51,10 +52,13 @@ from ..core.server import StoreServer
 from ..ml import autoencoder as ae
 from ..ml import trainer as tr
 from ..parallel.sharding import disjoint_data_meshes, slab_sharding
+from ..serve.engine import ServeLoop, request_key, submitted_meta
 from ..train.checkpoint import MemoryCheckpoint
 from . import plan as P
 from .components import (InferenceConsumer, InferenceOutput, Producer,
-                         ProducerOutput, TrainerConsumer, TrainerOutput)
+                         ProducerOutput, ServingClients,
+                         ServingClientsOutput, ServingConsumer,
+                         ServingOutput, TrainerConsumer, TrainerOutput)
 
 __all__ = ["InSituSession", "SessionResult"]
 
@@ -141,6 +145,51 @@ class InSituSession:
                     and comp.cfg.table not in table_names:
                 raise ValueError(f"trainer {comp.name!r} reads unknown "
                                  f"table {comp.cfg.table!r}")
+            if isinstance(comp, ServingClients):
+                if comp.table not in table_names:
+                    raise ValueError(f"serving clients {comp.name!r} target "
+                                     f"unknown table {comp.table!r}")
+                if comp.collect \
+                        and self._serving_consumer_for(comp.table) is None:
+                    raise ValueError(
+                        f"serving clients {comp.name!r} collect from table "
+                        f"{comp.table!r} but no ServingConsumer drains it")
+            if isinstance(comp, ServingConsumer):
+                for tname in (comp.table, comp.results):
+                    if tname not in table_names:
+                        raise ValueError(f"serving {comp.name!r} uses "
+                                         f"unknown table {tname!r}")
+                    spec = self._spec(tname)
+                    total = comp.clients * comp.requests
+                    # packed (client, seq) keys are unique but not dense:
+                    # the hash engine would collide them mod capacity, and
+                    # a ring smaller than the request volume would evict
+                    # unanswered requests — both break exactly-once.
+                    if spec.engine != "ring":
+                        raise ValueError(
+                            f"serving table {tname!r} must use the ring "
+                            f"engine (hash collides packed request keys)")
+                    if spec.capacity < total:
+                        raise ValueError(
+                            f"serving table {tname!r} capacity "
+                            f"{spec.capacity} < {total} total requests")
+        for comp in self.components:
+            if isinstance(comp, ServingConsumer):
+                subs = [c for c in self.components
+                        if isinstance(c, ServingClients) and c.submit
+                        and c.table == comp.table]
+                if len(subs) != 1:
+                    raise ValueError(
+                        f"serving {comp.name!r} needs exactly one "
+                        f"submitting ServingClients on table "
+                        f"{comp.table!r}, found {len(subs)}")
+                if (subs[0].clients, subs[0].requests) != \
+                        (comp.clients, comp.requests):
+                    raise ValueError(
+                        f"serving {comp.name!r} drains "
+                        f"{comp.clients}x{comp.requests} requests but "
+                        f"{subs[0].name!r} submits "
+                        f"{subs[0].clients}x{subs[0].requests}")
 
     @staticmethod
     def _normalize(components) -> tuple[Any, ...]:
@@ -247,6 +296,38 @@ class InSituSession:
                     steps=comp.steps,
                     dispatches=P.inference_dispatches(tier, comp.steps),
                     staged=P.inference_staged(tier, comp.steps, crosses)))
+            elif isinstance(comp, ServingClients):
+                total = comp.clients * comp.requests
+                schedule.append({
+                    "kind": "clients", "name": comp.name,
+                    "tier": "per_verb", "table": comp.table,
+                    "results": self._serving_results(comp.table)
+                    if comp.collect else None,
+                    "requests": total, "submit": comp.submit,
+                    "collect": comp.collect})
+                entries.append(P.ComponentPlan(
+                    name=comp.name, kind="clients", tier="per_verb",
+                    table=comp.table, steps=total,
+                    dispatches=P.clients_dispatches(total, comp.submit,
+                                                    comp.collect),
+                    staged=P.clients_staged(total, comp.submit, crosses),
+                    predicted_collectives=put_pred if comp.submit
+                    else None))
+            elif isinstance(comp, ServingConsumer):
+                tier = P.serving_tier(comp)
+                total = comp.clients * comp.requests
+                schedule.append({
+                    "kind": "serving", "name": comp.name, "tier": tier,
+                    "table": comp.table, "results": comp.results,
+                    "requests": total,
+                    "n_batches": -(-total // comp.max_batch)})
+                entries.append(P.ComponentPlan(
+                    name=comp.name, kind="serving", tier=tier,
+                    table=comp.table, steps=total,
+                    dispatches=P.serving_dispatches(tier, total,
+                                                    comp.max_batch),
+                    staged=P.serving_staged(tier, total, crosses),
+                    swaps=P.serving_swaps(tier)))
             else:
                 raise TypeError(f"unknown component type {type(comp)!r}")
         dep = self.deployment.describe() if self.deployment is not None \
@@ -315,6 +396,21 @@ class InSituSession:
             if t.name == table:
                 return t
         raise KeyError(table)
+
+    def _serving_consumer_for(self, table: str) -> ServingConsumer | None:
+        """The ServingConsumer draining request ``table``, if declared."""
+        for c in self.components:
+            if isinstance(c, ServingConsumer) and c.table == table:
+                return c
+        return None
+
+    def _serving_results(self, table: str) -> str:
+        """The results table paired with request ``table`` (the draining
+        consumer declares it; collectors resolve it from here)."""
+        c = self._serving_consumer_for(table)
+        if c is None:
+            raise ValueError(f"no ServingConsumer drains table {table!r}")
+        return c.results
 
     # -- HLO collective accounting (plan(hlo=True)) -------------------------
 
@@ -518,6 +614,12 @@ class InSituSession:
                     cfg = self._replica_cfg(comp, i, mesh)
                     fns[entry.name] = self._trainer_fn(comp, cfg, entry,
                                                        verbose)
+            elif isinstance(comp, ServingClients):
+                entry = take("clients")
+                fns[entry.name] = self._clients_fn(comp, entry, max_wall_s)
+            elif isinstance(comp, ServingConsumer):
+                entry = take("serving")
+                fns[entry.name] = self._serving_fn(comp, entry, max_wall_s)
             else:
                 entry = take("inference")
                 fns[entry.name] = self._inference_fn(comp, entry,
@@ -694,13 +796,30 @@ class InSituSession:
             # that checkpoint with the identical rng stream.
             memckpt = MemoryCheckpoint(client.server, key=entry.name) \
                 if client.server.wal_enabled else None
+            # Hot-swap producer side: publish a versioned checkpoint into
+            # the model registry every ``publish_every`` epochs.  The hook
+            # fires at the END of an epoch (after its checkpoint save), and
+            # a declared trainer crash fires at the TOP of one — so a
+            # resumed run never re-publishes a completed epoch's generation
+            # and the publish count stays deterministic under chaos.
+            on_ckpt = None
+            if comp.publish_every is not None:
+                pub_levels = ae.coords_pyramid(cfg.ae, comp.coords)
+
+                def _enc(p, f):
+                    return ae.encode(p, cfg.ae, pub_levels, f)
+
+                def on_ckpt(epoch, st):
+                    if (epoch + 1) % comp.publish_every == 0:
+                        client.set_model(comp.model_key, _enc, st.params)
             while True:
                 last[0] = time.perf_counter()
                 try:
                     state, history, levels, stats = tr.insitu_train(
                         client, comp.coords, cfg, stop_event=stop,
                         on_epoch=on_epoch, tier=entry.tier,
-                        memckpt=memckpt, component=entry.name)
+                        memckpt=memckpt, component=entry.name,
+                        on_checkpoint=on_ckpt)
                     break
                 except InjectedCrash:
                     client.restarts += 1
@@ -767,6 +886,89 @@ class InSituSession:
             if last is not None:
                 jax.block_until_ready(last)
             return InferenceOutput(steps=done, last=last)
+        return fn
+
+    def _clients_fn(self, comp: ServingClients, entry: P.ComponentPlan,
+                    max_wall_s: float):
+        results = self._serving_results(comp.table) if comp.collect \
+            else None
+        total = comp.clients * comp.requests
+
+        def fn(client: Client, stop):
+            server = client.server
+            responses: dict = {}
+            submitted = 0
+            if comp.submit:
+                # Arrival interleave: client-major by default; order_seed
+                # shuffles WHICH client submits next while each client's
+                # sequence ids stay monotone — the serving loop's
+                # round-robin discovery canonicalizes admission order, so
+                # the drained batch count is invariant to this shuffle.
+                order = [c for _ in range(comp.requests)
+                         for c in range(comp.clients)]
+                if comp.order_seed is not None:
+                    random.Random(comp.order_seed).shuffle(order)
+                next_seq = [0] * comp.clients
+                for i, c in enumerate(order):
+                    if stop.is_set():
+                        break
+                    s = next_seq[c]
+                    # Declared crash point: the committed request prefix
+                    # and the submission counters survive in the store;
+                    # host submission state survives in this loop — the
+                    # retried index re-puts the same request exactly once.
+                    _survive_crash(client, entry.name, i, comp.table)
+                    value = comp.feed(c, s)
+                    client.put_kv(comp.table, request_key(c, s), value)
+                    # make the request visible: a host metadata write —
+                    # the submission watermark costs zero store dispatches
+                    server.put_meta(submitted_meta(comp.table, c), s + 1)
+                    next_seq[c] = s + 1
+                    submitted += 1
+            if comp.collect:
+                # The results watermark is the free completion signal;
+                # each owned key is then fetched once, in client-major
+                # order (one counted get per response).
+                server.wait_watermark(results, total, timeout=max_wall_s)
+                for c in range(comp.clients):
+                    for s in range(comp.requests):
+                        if stop.is_set():
+                            break
+                        v, _found = client.get_kv(results,
+                                                  request_key(c, s))
+                        responses[(c, s)] = v
+            return ServingClientsOutput(requests=submitted,
+                                        responses=responses)
+        return fn
+
+    def _serving_fn(self, comp: ServingConsumer, entry: P.ComponentPlan,
+                    max_wall_s: float):
+        def fn(client: Client, stop):
+            timeout = comp.wait_timeout_s if comp.wait_timeout_s \
+                is not None else max_wall_s
+            loop = ServeLoop(
+                client, model_key=comp.model_key,
+                request_table=comp.table, response_table=comp.results,
+                clients=comp.clients, requests=comp.requests,
+                max_batch=comp.max_batch, reload_every=comp.reload_every,
+                component=entry.name)
+            # The loop object is the recovery unit: a declared serving
+            # crash propagates out, recover() re-cursors from the results
+            # watermark and re-admits the in-flight tail — the adopted
+            # model generation survives (no re-bind, no extra swap).
+            while True:
+                try:
+                    if entry.tier == "three_step":
+                        loop.run_three_step(stop_event=stop,
+                                            timeout=timeout)
+                    else:
+                        loop.run(stop_event=stop, timeout=timeout)
+                    break
+                except InjectedCrash:
+                    client.restarts += 1
+                    loop.recover()
+            return ServingOutput(steps=loop.served, batches=loop.batches,
+                                 swaps=loop.swaps)
         return fn
 
 

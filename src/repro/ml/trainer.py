@@ -589,7 +589,9 @@ def insitu_train(client: Client, coords: jax.Array, cfg: TrainerConfig,
                  stop_event=None,
                  on_epoch: Callable[[EpochResult], None] | None = None,
                  state: TrainState | None = None, tier: str | None = None,
-                 memckpt=None, component: str | None = None):
+                 memckpt=None, component: str | None = None,
+                 on_checkpoint: Callable[[int, TrainState], None]
+                 | None = None):
     """The consumer loop.  Returns (state, [EpochResult...], levels, stats).
 
     This is the runtime behind ``repro.insitu.InSituSession``'s
@@ -614,6 +616,12 @@ def insitu_train(client: Client, coords: jax.Array, cfg: TrainerConfig,
     injector may fire exactly once.  Checkpoint traffic is host-side
     metadata — zero store dispatches, so crash/recovery never perturbs the
     plan's op-count predictions.
+
+    ``on_checkpoint(epoch, state)`` fires at the end of every completed
+    epoch, after its checkpoint save — the hot-swap publication hook (the
+    session publishes versioned model generations from it).  Because the
+    crash point opens an epoch and this hook closes one, a resumed run
+    skips completed epochs and never re-fires their publications.
     """
     if tier is None:
         from ..insitu.plan import trainer_tier
@@ -744,6 +752,8 @@ def insitu_train(client: Client, coords: jax.Array, cfg: TrainerConfig,
         if memckpt is not None:
             memckpt.save(epoch, {"state": state, "rng": rng,
                                  "history": list(history)})
+        if on_checkpoint is not None:
+            on_checkpoint(epoch, state)
     client.timers.record("total_training",
                          time.perf_counter() - epoch_timer_start)
     return state, history, levels, (mu, sd)

@@ -1,6 +1,9 @@
-"""Serving substrate: continuous batching + greedy decode loops."""
+"""Serving substrate: continuous batching + greedy decode loops + the
+store-backed serving plane (``ServeLoop``)."""
 
-from . import batching, decode
+from . import batching, decode, engine
 from .batching import Batcher, Request
+from .engine import ServeLoop, request_key, submitted_meta
 
-__all__ = ["batching", "decode", "Batcher", "Request"]
+__all__ = ["batching", "decode", "engine", "Batcher", "Request",
+           "ServeLoop", "request_key", "submitted_meta"]

@@ -33,7 +33,8 @@ from repro.core import TableSpec
 from repro.core import store as S
 from repro.core.deployment import make_clustered_1d, make_colocated_1d
 from repro.core.faults import FaultEvent, FaultPlan, RetryPolicy
-from repro.insitu import InSituSession, Producer, TrainerConsumer
+from repro.insitu import (InSituSession, Producer, ServingClients,
+                          ServingConsumer, TrainerConsumer)
 from repro.ml import autoencoder as ae
 from repro.ml import trainer as tr
 from repro.sim import flatplate as fp
@@ -321,6 +322,235 @@ def test_concurrent_store_restart_recovers():
     assert res.server.valid_count("field") \
         == baseline.server.valid_count("field")
     assert len(res.output("trainer").history) == shape["epochs"]
+
+
+# ---------------------------------------------------------------------------
+# Serving grid: exactly-once answers + exact dispatch/batch/swap predictions
+# ---------------------------------------------------------------------------
+#
+# The serving plane's form of THE invariant, quantified over random
+# (client count x arrival order x batch size x tier x deployment) points:
+#
+#   (a) every request is answered EXACTLY ONCE (the responses dict holds
+#       precisely the submitted (client, seq) keys, each with the model's
+#       output for that request, and the results watermark equals the
+#       request total);
+#   (b) the plan's predicted store dispatches, drained batches, staged
+#       transfers and model swaps equal the measured ``stats()`` deltas —
+#       per component and in total — for ANY arrival interleave
+#       (``order_seed`` shuffles the submission order; round-robin
+#       discovery canonicalises admission, so the batch count stays
+#       ``ceil(total / max_batch)``).
+
+_SERVE_SHAPE = (2, 4)
+
+
+def _serve_feed(c, s):
+    # Payload encodes (client, seq) so responses are per-request unique.
+    return jnp.full(_SERVE_SHAPE, float(100 * c + s))
+
+
+def _serve_model(p, x):
+    return p * x + 1.0
+
+
+def _serve_preload(server):
+    server.set_model("m", _serve_model, jnp.asarray(2.0))
+
+
+def _serving_session(*, clients: int, requests: int, max_batch: int,
+                     tier: str | None, order_seed: int | None,
+                     deployment: str, faults: FaultPlan | None = None):
+    return InSituSession(
+        tables=[TableSpec("sreq", shape=_SERVE_SHAPE, capacity=32,
+                          engine="ring"),
+                TableSpec("sres", shape=_SERVE_SHAPE, capacity=32,
+                          engine="ring")],
+        components=[
+            ServingClients(_serve_feed, table="sreq", clients=clients,
+                           requests=requests, submit=True, collect=False,
+                           order_seed=order_seed, name="writers"),
+            ServingConsumer("m", table="sreq", results="sres",
+                            clients=clients, requests=requests,
+                            max_batch=max_batch, tier=tier, name="serving"),
+            ServingClients(_serve_feed, table="sreq", clients=clients,
+                           requests=requests, submit=False, collect=True,
+                           name="readers")],
+        deployment=_make_deployment(deployment),
+        faults=faults)
+
+
+def _run_serving_scenario(*, clients: int, requests: int, max_batch: int,
+                          tier: str, order_seed: int | None,
+                          deployment: str):
+    total = clients * requests
+    sess = _serving_session(clients=clients, requests=requests,
+                            max_batch=max_batch, tier=tier,
+                            order_seed=order_seed, deployment=deployment)
+    plan = sess.plan()
+    res = sess.run(plan=plan, sequential=True, preload=_serve_preload,
+                   max_wall_s=240)
+    assert res.ok, {k: v.error for k, v in res.run.components.items()}
+    # (b) exact per-component and total predictions
+    for entry in plan.components:
+        assert res.op_delta(entry.name) == entry.store_dispatches, \
+            (entry.name, entry.tier, res.op_delta(entry.name),
+             entry.store_dispatches)
+        assert res.staged_delta(entry.name) == entry.staged_transfers, \
+            (entry.name, entry.tier, res.staged_delta(entry.name),
+             entry.staged_transfers)
+    stats = res.server.stats()
+    assert stats["op_count"] == plan.store_dispatches
+    assert stats["staged_transfers"] == plan.staged_transfers
+    if deployment != "clustered":
+        assert plan.staged_transfers == 0
+    assert stats["model_swaps"] == plan.model_swaps \
+        == (1 if tier == "continuous_batch" else 0)
+    serving = res.output("serving")
+    assert serving.steps == total
+    if tier == "continuous_batch":
+        assert serving.batches == -(-total // max_batch)
+        assert serving.swaps == 1
+    # (a) exactly-once: precisely the submitted keys, each answered once
+    out = res.output("readers")
+    assert sorted(out.responses) == [(c, s) for c in range(clients)
+                                     for s in range(requests)]
+    for (c, s), v in out.responses.items():
+        np.testing.assert_array_equal(
+            np.asarray(v), np.asarray(_serve_model(2.0, _serve_feed(c, s))))
+    assert res.server.watermark("sres") == total \
+        == res.server.watermark_device("sres")
+
+
+def _draw_serving_scenario(rng: random.Random) -> dict:
+    return dict(
+        clients=rng.randint(1, 4),
+        requests=rng.randint(1, 5),
+        max_batch=rng.randint(1, 6),
+        tier=rng.choice(["continuous_batch", "continuous_batch",
+                         "three_step"]),
+        order_seed=rng.choice([None, rng.randint(0, 10**6)]),
+        deployment=rng.choice(_DEPLOYMENTS),
+    )
+
+
+def test_serving_grid_seeded():
+    """Deterministic 24-scenario sweep of the serving grid (runs in
+    tier-1 everywhere; the hypothesis twin below shrinks on failure)."""
+    rng = random.Random(7)
+    for i in range(24):
+        sc = _draw_serving_scenario(rng)
+        try:
+            _run_serving_scenario(**sc)
+        except AssertionError as e:  # name the failing scenario
+            raise AssertionError(f"serving scenario #{i} {sc}: {e}") from e
+
+
+@pytest.mark.slow
+@settings(max_examples=50, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large,
+                                 HealthCheck.large_base_example])
+@given(clients=st.integers(1, 4),
+       requests=st.integers(1, 5),
+       max_batch=st.integers(1, 6),
+       tier=st.sampled_from(["continuous_batch", "three_step"]),
+       order_seed=st.one_of(st.none(), st.integers(0, 10**6)),
+       deployment=st.sampled_from(_DEPLOYMENTS))
+def test_hypothesis_serving_grid(clients, requests, max_batch, tier,
+                                 order_seed, deployment):
+    """The serving property, hypothesis-quantified."""
+    _run_serving_scenario(clients=clients, requests=requests,
+                          max_batch=max_batch, tier=tier,
+                          order_seed=order_seed, deployment=deployment)
+
+
+# -- serving chaos cells -----------------------------------------------------
+#
+# The PR 6 claims, re-quantified over the serving plane: dropped
+# request/response transfers, transient-unavailable windows on
+# put/get/serve, client and consumer crashes, and store
+# snapshots/restarts — the run completes, every response is bit-identical
+# to the fault-free baseline, and the predicted dispatch/retry/swap
+# counters stay exact (no torn model version: ``model_swaps`` is still
+# exactly the plan's prediction).
+
+
+def _run_serving_chaos(seed: int, deployment: str):
+    rng = random.Random(seed)
+    shape = dict(
+        clients=rng.randint(2, 3),
+        requests=rng.randint(2, 4),
+        max_batch=rng.randint(1, 4),
+        tier=rng.choice(["continuous_batch", "three_step"]),
+        order_seed=rng.choice([None, rng.randint(0, 10**6)]),
+    )
+    total = shape["clients"] * shape["requests"]
+    retry = RetryPolicy(seed=seed, **_FAST_RETRY)
+    baseline = _serving_session(
+        deployment=deployment, faults=FaultPlan(events=(), retry=retry),
+        **shape).run(sequential=True, preload=_serve_preload, max_wall_s=240)
+    assert baseline.ok, {k: v.error
+                         for k, v in baseline.run.components.items()}
+    faults = FaultPlan.random(
+        seed, tables=("sreq", "sres"), verbs=("put", "get", "serve"),
+        components=("writers", "serving"), n_events=3, max_index=total,
+        retry=retry)
+    sess = _serving_session(deployment=deployment, faults=faults, **shape)
+    plan = sess.plan()
+    res = sess.run(plan=plan, sequential=True, preload=_serve_preload,
+                   max_wall_s=240)
+    # (a) the chaos run completes
+    assert res.ok, {k: v.error for k, v in res.run.components.items()}
+    # (c) exact predictions, retries/replays/swaps included
+    for entry in plan.components:
+        assert res.op_delta(entry.name) == entry.store_dispatches, \
+            (entry.name, entry.tier, res.op_delta(entry.name),
+             entry.store_dispatches)
+        assert res.staged_delta(entry.name) == entry.staged_transfers, \
+            (entry.name, entry.tier, res.staged_delta(entry.name),
+             entry.staged_transfers)
+        centry = res.run.components[entry.name]
+        assert centry.retries == entry.retries, entry.name
+        assert centry.restarts == entry.restarts, entry.name
+    stats = res.server.stats()
+    assert stats["op_count"] == plan.store_dispatches
+    assert stats["staged_transfers"] == plan.staged_transfers
+    assert stats["model_swaps"] == plan.model_swaps
+    for key, predicted in plan.faults:
+        assert stats[key] == predicted, (key, predicted, stats[key])
+    # (b) every response bit-identical to the fault-free run
+    bout = baseline.output("readers").responses
+    out = res.output("readers").responses
+    assert sorted(out) == sorted(bout)
+    for k in bout:
+        np.testing.assert_array_equal(np.asarray(bout[k]),
+                                      np.asarray(out[k]))
+    assert res.server.watermark("sres") == total \
+        == res.server.watermark_device("sres")
+
+
+_SERVING_CHAOS_SEEDS = tuple(range(9))
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("deployment", _DEPLOYMENTS)
+def test_serving_chaos_smoke(deployment):
+    """One seeded serving fault scenario per deployment (fast CI gate)."""
+    _run_serving_chaos(0, deployment)
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+@pytest.mark.parametrize("deployment", _DEPLOYMENTS)
+def test_serving_chaos_grid(deployment):
+    """The full serving chaos grid: 9 seeds x 3 deployments."""
+    for seed in _SERVING_CHAOS_SEEDS:
+        try:
+            _run_serving_chaos(seed, deployment)
+        except AssertionError as e:
+            raise AssertionError(
+                f"serving chaos seed {seed} ({deployment}): {e}") from e
 
 
 class TestSlabShardedResolution:

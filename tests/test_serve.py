@@ -41,6 +41,65 @@ class TestBatcher:
         b.submit([1], max_new_tokens=1)
         assert not b.idle
 
+    def test_admit_empty_queue_is_noop(self):
+        b = Batcher(max_batch=2)
+        assert b.admit() == []
+        assert all(slot is None for slot in b.slots)
+        r = b.submit([1], max_new_tokens=1)
+        b.admit()
+        # queue drained: a second admit places nothing and moves nothing
+        before = list(b.slots)
+        assert b.admit() == []
+        assert b.slots == before and not r.done
+
+    def test_slot_churn_at_max_batch(self):
+        """2*max_batch+1 requests through max_batch slots: admission
+        never exceeds max_batch live slots and every request retires."""
+        b = Batcher(max_batch=3)
+        reqs = [b.submit([i], max_new_tokens=1) for i in range(7)]
+        rounds = 0
+        while not (b.idle and all(r.done for r in reqs)):
+            placed = b.admit()
+            assert len(placed) <= 3
+            live = [s for s in b.slots if s is not None and not s.done]
+            assert 0 < len(live) <= 3
+            b.record_tokens(np.zeros(3, np.int64))
+            rounds += 1
+            assert rounds <= 7, "batcher failed to drain"
+        assert rounds == 3          # ceil(7 / 3) drains
+        assert all(r.done and len(r.tokens) == 1 for r in reqs)
+
+    def test_eos_retirement_frees_slot_for_queued(self):
+        """An eos mid-stream retires ONLY that slot; the freed slot goes
+        to the queued request while the other slot keeps decoding."""
+        b = Batcher(max_batch=2, eos_id=0)
+        r1 = b.submit([1], max_new_tokens=4)
+        r2 = b.submit([2], max_new_tokens=4)
+        r3 = b.submit([3], max_new_tokens=4)
+        b.admit()
+        b.record_tokens(np.array([5, 0]))       # r2 hits eos
+        assert r2.done and r2.tokens == [0]
+        assert not r1.done and r1.tokens == [5]
+        placed = b.admit()
+        assert len(placed) == 1 and placed[0][1] is r3
+        assert placed[0][0] == b.slots.index(r3)
+        # r1 continues decoding in its original slot
+        b.record_tokens(np.array([7, 9]) if b.slots[0] is r1
+                        else np.array([9, 7]))
+        assert r1.tokens == [5, 7]
+
+    def test_idle_transitions_through_drain(self):
+        b = Batcher(max_batch=2)
+        assert b.idle
+        r = b.submit([1], max_new_tokens=2)
+        assert not b.idle           # queued
+        b.admit()
+        assert not b.idle           # active in a slot
+        b.record_tokens(np.array([4, 0]))
+        assert not b.idle
+        b.record_tokens(np.array([5, 0]))
+        assert r.done and b.idle    # retired: queue and slots empty
+
 
 @pytest.mark.slow
 class TestGenerate:

@@ -1,0 +1,511 @@
+"""Serving plane: store-backed continuous batching with model hot-swap.
+
+Four claim families over the serving tier (PR 7's tentpole):
+
+* **Parity** — continuous batching is bit-identical to the paper's
+  one-at-a-time ``put → run_model → get`` three-step baseline, on every
+  deployment in {local, colocated, clustered}.
+* **Hot-swap** — the trainer publishes versioned checkpoints into the
+  model registry; the serving loop adopts a new generation ATOMICALLY
+  between batches (never a torn (fn, params) pair), and mid-stream swaps
+  yield responses bit-identical to the pre-/post-swap single-model
+  baselines.
+* **Recovery** — a crashed serving consumer re-cursors from the results
+  watermark and answers every request exactly once, without re-binding
+  the model (the swap count stays exactly what the plan predicted); a
+  store restart mid-hot-swap replays the WAL and the registry (host
+  memory) survives.
+* **Plan exactness** — ``plan.explain()`` names request dispatches,
+  drained batches and swaps, and each ``== StoreServer.stats()``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Client, StoreServer, TableSpec
+from repro.core.faults import (FaultEvent, FaultPlan, InjectedCrash,
+                               RetryPolicy)
+from repro.insitu import (InSituSession, Producer, ServingClients,
+                          ServingConsumer, TrainerConsumer)
+from repro.insitu import plan as P
+from repro.ml import autoencoder as ae
+from repro.ml import trainer as tr
+from repro.serve.engine import ServeLoop, request_key, submitted_meta
+from repro.sim import flatplate as fp
+
+SHAPE = (2, 4)
+_DEPLOYMENTS = ("none", "colocated", "clustered")
+_FAST_RETRY = RetryPolicy(interval=1e-4, max_interval=1e-3)
+
+
+def _feed(c, s):
+    return jnp.full(SHAPE, float(100 * c + s))
+
+
+def _model(p, x):
+    return p * x + 1.0
+
+
+def _preload(server):
+    server.set_model("m", _model, jnp.asarray(2.0))
+
+
+def _make_deployment(kind):
+    from repro.core.deployment import make_clustered_1d, make_colocated_1d
+    if kind == "colocated":
+        return make_colocated_1d(ndim=2)
+    if kind == "clustered":
+        return make_clustered_1d()
+    return None
+
+
+def _session(tier, deployment="none", *, clients=3, requests=4, max_batch=4,
+             order_seed=None, faults=None, capacity=32):
+    return InSituSession(
+        tables=[TableSpec("req", shape=SHAPE, capacity=capacity,
+                          engine="ring"),
+                TableSpec("res", shape=SHAPE, capacity=capacity,
+                          engine="ring")],
+        components=[
+            ServingClients(_feed, table="req", clients=clients,
+                           requests=requests, submit=True, collect=False,
+                           order_seed=order_seed, name="writers"),
+            ServingConsumer("m", table="req", results="res",
+                            clients=clients, requests=requests,
+                            max_batch=max_batch, tier=tier),
+            ServingClients(_feed, table="req", clients=clients,
+                           requests=requests, submit=False, collect=True,
+                           name="readers")],
+        deployment=_make_deployment(deployment),
+        faults=faults)
+
+
+def _responses(res):
+    return res.output("readers").responses
+
+
+# ---------------------------------------------------------------------------
+# parity: continuous batching == three-step baseline, bit for bit
+# ---------------------------------------------------------------------------
+
+
+class TestParity:
+    @pytest.mark.parametrize("deployment", _DEPLOYMENTS)
+    def test_bit_identical_across_tiers(self, deployment):
+        """The fused gather → model → scatter drain returns byte-identical
+        responses to the paper's three-step protocol, per deployment."""
+        runs = {}
+        for tier in ("continuous_batch", "three_step"):
+            res = _session(tier, deployment).run(
+                sequential=True, preload=_preload, max_wall_s=240)
+            assert res.ok, {k: v.error
+                            for k, v in res.run.components.items()}
+            runs[tier] = _responses(res)
+        a, b = runs["continuous_batch"], runs["three_step"]
+        assert sorted(a) == sorted(b)
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]))
+            np.testing.assert_array_equal(
+                np.asarray(a[k]), np.asarray(_model(2.0, _feed(*k))))
+
+    def test_arrival_order_invariance(self):
+        """Any submission interleave yields the same responses AND the
+        same drained-batch count (round-robin discovery canonicalizes
+        admission order)."""
+        base = None
+        for seed in (None, 3, 99):
+            res = _session("continuous_batch", order_seed=seed).run(
+                sequential=True, preload=_preload, max_wall_s=240)
+            assert res.ok
+            assert res.output("serving").batches == 3  # ceil(12 / 4)
+            out = _responses(res)
+            if base is None:
+                base = out
+                continue
+            assert sorted(out) == sorted(base)
+            for k in base:
+                np.testing.assert_array_equal(np.asarray(out[k]),
+                                              np.asarray(base[k]))
+
+
+# ---------------------------------------------------------------------------
+# plan exactness and explain() fields
+# ---------------------------------------------------------------------------
+
+
+class TestPlanPrediction:
+    def test_explain_names_serving_structure(self):
+        sess = _session("continuous_batch", clients=3, requests=4,
+                        max_batch=4)
+        plan = sess.plan()
+        ex = plan.explain()
+        serving = ex["components"]["serving"]
+        assert serving["requests"] == 12
+        assert serving["drained_batches"] == 3
+        assert serving["model_swaps"] == 1
+        assert serving["dispatches_per_batch"] == 1.0
+        assert ex["components"]["writers"]["requests"] == 12
+        assert ex["model_swaps"] == 1
+        assert "swaps=1" in plan.describe()
+
+    def test_three_step_prediction(self):
+        plan = _session("three_step", clients=2, requests=3).plan()
+        serving = next(e for e in plan.components if e.name == "serving")
+        # one get + one put per request, no fused dispatches, no swap
+        assert serving.store_dispatches == 12
+        assert serving.swaps == 0
+        assert dict(serving.dispatches) == {"get": 6, "put": 6}
+
+    def test_prediction_matches_measured(self):
+        sess = _session("continuous_batch", clients=2, requests=5,
+                        max_batch=3)
+        plan = sess.plan()
+        res = sess.run(plan=plan, sequential=True, preload=_preload,
+                       max_wall_s=240)
+        assert res.ok
+        stats = res.server.stats()
+        assert stats["op_count"] == plan.store_dispatches
+        assert stats["model_swaps"] == plan.model_swaps == 1
+        # 10 request puts + ceil(10/3)=4 fused serves + 10 response gets
+        assert plan.store_dispatches == 24
+        assert res.output("serving").batches == 4
+
+
+# ---------------------------------------------------------------------------
+# hot-swap: versioned checkpoints, atomic adoption, mid-stream parity
+# ---------------------------------------------------------------------------
+
+
+def _serve_pair(faults=None):
+    server = StoreServer(faults=faults)
+    server.create_table(TableSpec("req", shape=SHAPE, capacity=32,
+                                  engine="ring"))
+    server.create_table(TableSpec("res", shape=SHAPE, capacity=32,
+                                  engine="ring"))
+    return server, Client(server)
+
+
+def _submit(server, client, c, s):
+    client.put_kv("req", request_key(c, s), _feed(c, s))
+    server.put_meta(submitted_meta("req", c), s + 1)
+
+
+def _loop(client, **kw):
+    args = dict(model_key="m", request_table="req", response_table="res",
+                clients=2, requests=4, max_batch=2)
+    args.update(kw)
+    return ServeLoop(client, **args)
+
+
+def _collect(client, clients, requests):
+    return {(c, s): np.asarray(client.get_kv("res", request_key(c, s))[0])
+            for c in range(clients) for s in range(requests)}
+
+
+class TestHotSwap:
+    def test_mid_stream_swap_matches_single_model_baselines(self):
+        """Swap generations halfway: the first half of the responses is
+        bit-identical to an all-v1 run, the second half to an all-v2 run
+        — and the loop counts exactly two adoptions."""
+        def run_single(param):
+            server, client = _serve_pair()
+            server.set_model("m", _model, jnp.asarray(param))
+            for c in range(2):
+                for s in range(4):
+                    _submit(server, client, c, s)
+            loop = _loop(client)
+            loop.run(timeout=30.0)
+            return _collect(client, 2, 4)
+
+        v1, v2 = run_single(2.0), run_single(-3.0)
+
+        server, client = _serve_pair()
+        server.set_model("m", _model, jnp.asarray(2.0))
+        for c in range(2):
+            for s in range(2):
+                _submit(server, client, c, s)
+        loop = _loop(client)
+        loop.wait_model(timeout=30.0)
+        while loop.served < 4:
+            loop.step()
+        server.set_model("m", _model, jnp.asarray(-3.0))   # v2 published
+        for c in range(2):
+            for s in range(2, 4):
+                _submit(server, client, c, s)
+        while loop.served < 8:
+            loop.step()
+        assert loop.swaps == 2
+        assert server.stats()["model_swaps"] == 2
+        assert server.model_version("m") == 2
+        got = _collect(client, 2, 4)
+        for (c, s), v in got.items():
+            ref = v1 if s < 2 else v2
+            np.testing.assert_array_equal(v, ref[(c, s)])
+
+    def test_adoption_is_atomic_never_torn(self):
+        """Publish a fn+params pair per generation; every response must
+        come from ONE generation (a torn pair would mix a stale fn with
+        fresh params and match no generation's output)."""
+        def gen_fn(k):
+            return lambda p, x: float(k) * x + p
+
+        server, client = _serve_pair()
+        loop = _loop(client, clients=1, requests=6, max_batch=1,
+                     reload_every=1)
+        outputs = {}
+        for k in range(1, 7):
+            server.set_model("m", gen_fn(k), jnp.asarray(100.0 * k))
+            outputs[k] = {
+                s: np.asarray(gen_fn(k)(100.0 * k, _feed(0, s)))
+                for s in range(6)}
+        for s in range(6):
+            _submit(server, client, 0, s)
+            if s < 5:   # publish another generation between batches
+                server.set_model("m", gen_fn(s + 7),
+                                 jnp.asarray(100.0 * (s + 7)))
+                outputs[s + 7] = {
+                    t: np.asarray(gen_fn(s + 7)(100.0 * (s + 7),
+                                                _feed(0, t)))
+                    for t in range(6)}
+        loop.wait_model(timeout=30.0)
+        while loop.served < 6:
+            loop.step()
+        got = _collect(client, 1, 6)
+        for (c, s), v in got.items():
+            assert any(np.array_equal(v, gen[s])
+                       for gen in outputs.values()), (c, s)
+
+    def test_reload_every_batches(self):
+        """``reload_every=N`` checks the registry every N batches (plus
+        always before the first) — published generations between checks
+        coalesce into one adoption."""
+        server, client = _serve_pair()
+        server.set_model("m", _model, jnp.asarray(2.0))
+        loop = _loop(client, clients=1, requests=4, max_batch=1,
+                     reload_every=4)
+        loop.wait_model(timeout=30.0)
+        for s in range(4):
+            _submit(server, client, 0, s)
+            loop.step()
+            server.set_model("m", _model, jnp.asarray(float(s)))
+        # one initial bind; batches 1..3 skip the version check
+        assert loop.swaps == 1
+        assert server.model_version("m") == 5
+
+    def test_trainer_publishes_serving_adopts(self):
+        """End-to-end hot-swap producer side: the trainer publishes a
+        versioned checkpoint per epoch (``publish_every=1``); the serving
+        consumer adopts the freshest generation exactly once in a
+        sequential run, with the dispatch plan exact."""
+        fcfg = fp.FlatPlateConfig(nx=4, ny=4, nz=2)
+        n = fcfg.n_points
+        coords = fp.grid_coords(fcfg)
+        cfg = tr.TrainerConfig(
+            ae=ae.AEConfig(n_points=n, mode="ref", latent=4, internal=4,
+                           blocks=1, mlp_width=8, mlp_depth=2),
+            epochs=2, gather=4, batch_size=2, lr=1e-3, fused=True)
+        snaps = [fp.snapshot(fcfg, jax.random.key(0), t) for t in range(8)]
+
+        def sim_step(carry, rank, t):
+            return carry, 0, jnp.stack(snaps)[t % 8]
+
+        def serve_feed(c, s):
+            return snaps[(3 * c + s) % 8].T[None]
+
+        def make(tier):
+            return InSituSession(
+                tables=[
+                    TableSpec("field", shape=(4, n), capacity=16,
+                              engine="ring"),
+                    TableSpec("sreq", shape=(1, n, 4), capacity=16,
+                              engine="ring"),
+                    TableSpec("sres", shape=(1, 4), capacity=16,
+                              engine="ring")],
+                components=[
+                    Producer(sim_step, table="field", steps=8,
+                             carry=jnp.zeros(())),
+                    TrainerConsumer(cfg, coords, model_key="enc",
+                                    publish_every=1),
+                    ServingClients(serve_feed, table="sreq", clients=2,
+                                   requests=3, submit=True, collect=False,
+                                   name="writers"),
+                    ServingConsumer("enc", table="sreq", results="sres",
+                                    clients=2, requests=3, max_batch=4,
+                                    tier=tier),
+                    ServingClients(serve_feed, table="sreq", clients=2,
+                                   requests=3, submit=False, collect=True,
+                                   name="readers")])
+
+        sess = make("continuous_batch")
+        plan = sess.plan()
+        res = sess.run(plan=plan, sequential=True, max_wall_s=420)
+        assert res.ok, {k: v.error for k, v in res.run.components.items()}
+        stats = res.server.stats()
+        assert stats["op_count"] == plan.store_dispatches
+        # 2 per-epoch publishes + the final publish = 3 generations; the
+        # sequential drain adopts only the freshest — exactly one swap.
+        assert res.server.model_version("enc") == 3
+        assert res.output("serving").swaps == 1
+        assert stats["model_swaps"] == plan.model_swaps == 1
+        # the adopted generation IS the final one: responses match the
+        # trained encoder applied to each request
+        out = _responses(res)
+        state = res.output("trainer").state
+        levels = ae.coords_pyramid(cfg.ae, coords)
+        for (c, s), v in out.items():
+            ref = ae.encode(state.params, cfg.ae, levels, serve_feed(c, s))
+            np.testing.assert_allclose(np.asarray(v), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# recovery: crashes and restarts answer exactly once, no torn version
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+class TestServingRecovery:
+    def test_crash_recovers_exactly_once(self):
+        """A serving crash mid-drain re-cursors from the results
+        watermark: every request answered once, no extra dispatches, no
+        extra swap."""
+        faults = FaultPlan(events=(
+            FaultEvent("crash", component="serving", at=1),),
+            retry=_FAST_RETRY)
+        sess = _session("continuous_batch", faults=faults)
+        plan = sess.plan()
+        res = sess.run(plan=plan, sequential=True, preload=_preload,
+                       max_wall_s=240)
+        assert res.ok, {k: v.error for k, v in res.run.components.items()}
+        assert res.run.components["serving"].restarts == 1
+        stats = res.server.stats()
+        assert stats["op_count"] == plan.store_dispatches
+        assert stats["model_swaps"] == 1        # recovery never re-binds
+        assert res.server.watermark("res") == 12
+        out = _responses(res)
+        assert len(out) == 12
+        for k, v in out.items():
+            np.testing.assert_array_equal(np.asarray(v),
+                                          np.asarray(_model(2.0, _feed(*k))))
+
+    def test_store_restart_mid_hot_swap(self):
+        """A store restart BETWEEN publishing v2 and its adoption: the
+        registry (host memory) and the WAL-replayed tables survive; the
+        loop adopts v2 exactly once and no response mixes generations."""
+        faults = FaultPlan(events=(
+            FaultEvent("snapshot", table="res", at=1),
+            FaultEvent("restart", table="res", at=2)), retry=_FAST_RETRY)
+        server, client = _serve_pair(faults=faults)
+        server.set_model("m", _model, jnp.asarray(2.0))
+        for c in range(2):
+            for s in range(4):
+                _submit(server, client, c, s)
+        loop = _loop(client, max_batch=2)
+        loop.wait_model(timeout=30.0)
+        loop.step()                                   # commit 1: snapshot
+        server.set_model("m", _model, jnp.asarray(-3.0))   # v2 published
+        loop.step()                       # commit 2: restart + WAL replay
+        assert server.stats()["recoveries"] == 1
+        while loop.served < 8:
+            loop.step()
+        assert loop.swaps == 2
+        assert loop._version == server.model_version("m") == 2
+        got = _collect(client, 2, 4)
+        # first drained batch (admission order (0,0),(1,0)) answered by
+        # v1; everything after the publish by v2 — nothing torn
+        for (c, s), v in got.items():
+            ref = _model(2.0 if s == 0 else -3.0, _feed(c, s))
+            np.testing.assert_array_equal(v, np.asarray(ref))
+        assert server.watermark("res") == 8
+
+    def test_dropped_response_transfer_retries(self):
+        """A dropped serve-commit transfer is retried with the same chunk
+        id (exactly-once): responses complete and match the fault-free
+        values."""
+        faults = FaultPlan(events=(
+            FaultEvent("drop_chunk", table="res", at=1),
+            FaultEvent("unavailable", verb="serve", at=2, count=1)),
+            retry=_FAST_RETRY)
+        sess = _session("continuous_batch", faults=faults)
+        plan = sess.plan()
+        res = sess.run(plan=plan, sequential=True, preload=_preload,
+                       max_wall_s=240)
+        assert res.ok, {k: v.error for k, v in res.run.components.items()}
+        assert res.run.components["serving"].retries == \
+            next(e for e in plan.components if e.name == "serving").retries
+        assert res.server.stats()["op_count"] == plan.store_dispatches
+        for k, v in _responses(res).items():
+            np.testing.assert_array_equal(np.asarray(v),
+                                          np.asarray(_model(2.0, _feed(*k))))
+
+
+# ---------------------------------------------------------------------------
+# session validation
+# ---------------------------------------------------------------------------
+
+
+class TestValidation:
+    def _tables(self, engine="ring", capacity=32):
+        return [TableSpec("req", shape=SHAPE, capacity=capacity,
+                          engine=engine),
+                TableSpec("res", shape=SHAPE, capacity=capacity,
+                          engine="ring")]
+
+    def test_component_field_validation(self):
+        with pytest.raises(ValueError):
+            ServingConsumer("m", table="t", results="t")
+        with pytest.raises(ValueError):
+            ServingClients(_feed, table="t", submit=False, collect=False)
+        with pytest.raises(ValueError):
+            ServingConsumer("m", table="a", results="b", max_batch=0)
+        with pytest.raises(ValueError):
+            TrainerConsumer(tr.TrainerConfig(
+                ae=ae.AEConfig(n_points=8)), None, publish_every=1)
+
+    def test_requires_ring_engine(self):
+        with pytest.raises(ValueError, match="ring"):
+            InSituSession(
+                tables=self._tables(engine="hash"),
+                components=[ServingConsumer("m", table="req",
+                                            results="res")])
+
+    def test_requires_capacity(self):
+        with pytest.raises(ValueError, match="capacity"):
+            InSituSession(
+                tables=self._tables(capacity=4),
+                components=[ServingConsumer("m", table="req",
+                                            results="res", clients=3,
+                                            requests=4)])
+
+    def test_requires_matching_submitter(self):
+        with pytest.raises(ValueError, match="submit"):
+            InSituSession(
+                tables=self._tables(),
+                components=[ServingConsumer("m", table="req",
+                                            results="res")])
+        with pytest.raises(ValueError, match="clients"):
+            InSituSession(
+                tables=self._tables(),
+                components=[
+                    ServingClients(_feed, table="req", clients=2,
+                                   requests=4),
+                    ServingConsumer("m", table="req", results="res",
+                                    clients=3, requests=4)])
+
+    def test_collect_requires_consumer(self):
+        with pytest.raises(ValueError, match="drains"):
+            InSituSession(
+                tables=[TableSpec("req", shape=SHAPE, capacity=32,
+                                  engine="ring")],
+                components=[ServingClients(_feed, table="req")])
+
+    def test_forced_tier_validated(self):
+        with pytest.raises(ValueError):
+            P.serving_tier(ServingConsumer("m", table="a", results="b",
+                                           tier="nope"))
+        assert P.serving_tier(
+            ServingConsumer("m", table="a", results="b")) \
+            == "continuous_batch"

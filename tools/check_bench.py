@@ -6,8 +6,9 @@ Run from the repo root (CI bench-smoke job):
     python tools/check_bench.py --fresh-dir out
 
 Checks ``BENCH_fused_pipeline.json`` (the session-API pipeline bench),
-``BENCH_sharded_epoch.json`` (the sharded-epoch / data-plane-entry bench)
-and ``BENCH_weak_scaling.json`` (the fig5 clustered fan-in sweep):
+``BENCH_sharded_epoch.json`` (the sharded-epoch / data-plane-entry bench),
+``BENCH_weak_scaling.json`` (the fig5 clustered fan-in sweep) and
+``BENCH_serving.json`` (the continuous-batching serving cells):
 
 1. **Structural** (hardware-independent, hard):
    * fused consumer ``store_dispatches_per_epoch`` must stay <= 1.0 — the
@@ -17,9 +18,13 @@ and ``BENCH_weak_scaling.json`` (the fig5 clustered fan-in sweep):
 2. **Performance** (vs the committed numbers, tolerance ``--tol``,
    default 0.2 = fail on >20% regression): fused producer steps/s.
    Raw throughput is hardware-dependent; on machines unlike the one that
-   committed the baseline, gate on the producer fused/per-verb *speedup
-   ratio* instead with ``--ratios-only`` (still catches the fused tier
-   losing its edge).  The consumer side is gated structurally only —
+   committed the baseline, gate with ``--ratios-only`` instead: the
+   producer fused/per-verb speedup must stay an order of magnitude
+   (>= 10x).  An absolute floor, not a trajectory delta, because the
+   per-verb denominator is host-dispatch-bound and swings severalfold
+   with machine load (90-270x observed on one box), while the claim
+   worth defending — fused capture amortizes dispatch — lives at the
+   10x+ scale.  The consumer side is gated structurally only —
    its epoch is dominated by real SGD compute, so its wall-clock is not
    a dispatch-overhead signal.
 
@@ -49,6 +54,18 @@ For the weak-scaling bench the gates are the clustered data-plane claims:
   fan-in ``throughput_ratio`` must stay above ``1 - 2*tol`` — producer
   work is identical across cells, so a collapsing ratio means the
   fan-in path started paying per-element costs.
+
+For the serving bench the gates are the serving-plane claims:
+
+* **Structural** (hard): every continuous-batching cell costs exactly
+  ONE store dispatch per drained batch (``dispatches_per_batch ==
+  1.0``), its measured ``op_count`` and ``model_swaps`` equal the
+  plan's predictions, and the hot-swap microbenchmark adopted every
+  published generation.
+* **Performance** (same-run band): the continuous-vs-three-step
+  ``throughput_ratio`` at the widest client count must stay above
+  ``1 - 2*tol`` — batched serving must not degrade back to
+  per-request dispatch costs.
 """
 
 from __future__ import annotations
@@ -94,8 +111,15 @@ def check_fused_pipeline(base: dict, fresh: dict, tol: float,
                 f"{b:.2f}")
 
     if ratios_only:
-        perf("producer fused/per-verb speedup",
-             base["producer"]["speedup"], fresh["producer"]["speedup"])
+        # the per-verb denominator is host-dispatch-bound and swings
+        # severalfold with machine load (90-270x observed on one box),
+        # so a vs-committed tolerance flakes; the claim worth gating is
+        # order-of-magnitude: fused capture must keep amortizing dispatch
+        s = fresh["producer"]["speedup"]
+        if s < 10.0:
+            errors.append(
+                f"producer fused/per-verb speedup collapsed to {s:.2f}x "
+                "(< 10x): fused capture no longer amortizes dispatch")
     else:
         perf("producer fused steps/s",
              base["producer"]["fused"]["steps_per_s"],
@@ -183,6 +207,50 @@ def check_weak_scaling(fresh: dict, tol: float) -> list[str]:
     return errors
 
 
+def check_serving(fresh: dict, tol: float) -> list[str]:
+    """Every serving gate is same-run (structural counters + the
+    tier-comparison band measured inside one sweep), so no committed
+    baseline is read — ``BENCH_serving.json`` at the repo root is the
+    perf trajectory record, not a gate input."""
+    errors: list[str] = []
+
+    # -- structural invariants (hard) -------------------------------------
+    for cell in fresh["cells"]:
+        where = f"serving clients={cell['clients']}"
+        if abs(cell["dispatches_per_batch"] - 1.0) > EPS:
+            errors.append(
+                f"{where}: store dispatches per drained batch = "
+                f"{cell['dispatches_per_batch']} (!= 1.0): the fused "
+                f"gather → model → scatter drain degraded")
+        if cell["op_count"] != cell["predicted_ops"]:
+            errors.append(
+                f"{where}: measured op_count {cell['op_count']} != plan "
+                f"prediction {cell['predicted_ops']}")
+        if cell["model_swaps"] != cell["predicted_swaps"]:
+            errors.append(
+                f"{where}: measured model_swaps {cell['model_swaps']} != "
+                f"plan prediction {cell['predicted_swaps']}")
+    swap = fresh.get("swap")
+    if not swap or swap.get("adoptions", 0) < 1:
+        errors.append("serving: hot-swap microbenchmark adopted no "
+                      "published generation")
+
+    # -- performance (same-run, same-hardware cell pair; absolute band) ---
+    cmp = fresh.get("tier_comparison")
+    if cmp is None:
+        errors.append("serving: no continuous-vs-three-step pair "
+                      "(tier_comparison missing)")
+        return errors
+    floor = 1.0 - 2.0 * tol
+    if cmp["throughput_ratio"] < floor:
+        errors.append(
+            f"serving clients={cmp['clients']} continuous/three-step "
+            f"throughput ratio {cmp['throughput_ratio']:.3f} below floor "
+            f"{floor:.2f}: continuous batching is paying per-request "
+            f"costs")
+    return errors
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh-dir", default="out",
@@ -207,14 +275,16 @@ def main() -> int:
     errors += check_weak_scaling(
         _load(Path(args.fresh_dir) / "BENCH_weak_scaling.json"),
         args.tol)
+    errors += check_serving(
+        _load(Path(args.fresh_dir) / "BENCH_serving.json"), args.tol)
     if errors:
         print("bench check FAILED:")
         for e in errors:
             print(" -", e)
         return 1
     print("bench check OK (BENCH_fused_pipeline.json + "
-          "BENCH_sharded_epoch.json + BENCH_weak_scaling.json within "
-          "tolerance)")
+          "BENCH_sharded_epoch.json + BENCH_weak_scaling.json + "
+          "BENCH_serving.json within tolerance)")
     return 0
 
 
