@@ -1,0 +1,199 @@
+"""Distributed CFD producer: the halo-exchange sharded solver as a
+data-plane workload.
+
+The `sim.distributed` finite-difference solver is domain-decomposed over
+a ``space`` mesh axis inside one ``shard_map`` (width-w halo exchange
+via ``lax.ppermute``), and its snapshots enter the store as
+**element-sharded puts emitted directly from the shards** — the
+``capture_scan_sharded`` tier.  This bench runs the decaying-turbulence
+workload end to end on a 2-D ``(slab, space)`` db mesh
+(``make_clustered_2d``) at a sweep of ``space``-shard counts, each cell
+a fresh subprocess with forced host devices, and measures:
+
+* producer steps/s (solver + shard-local put + cross-mesh staging);
+* the structural clustered claim: exactly ONE staged transfer per
+  ``capture_scan`` chunk, matching ``plan.explain()`` exactly;
+* the physics claim: kinetic energy decays and the projected field
+  stays near-divergence-free through the store round-trip (the stored
+  snapshot itself is checked, not solver-internal state).
+
+Writes ``BENCH_turbulence.json``; ``tools/check_bench.py`` gates
+staged/chunk == 1, measured == predicted (hard), physics (hard), and
+the sharded:unsharded throughput ratio (band).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from .common import Row
+
+
+_CELL_CHILD = """
+    import json, sys
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import TableSpec, make_clustered_2d
+    from repro.core import store as S
+    from repro.insitu import InSituSession, Producer
+    from repro.sim import distributed as fd
+
+    shards, steps, chunk, n, jacobi = map(int, sys.argv[1:6])
+    cfg = fd.FDConfig(n=n, nu=2e-3, dt=1e-3, jacobi_iters=jacobi)
+
+    # the whole distributed-CFD scenario is one declaration: a sharded
+    # solver emitting element-sharded snapshots into a 2-D db mesh
+    dep = make_clustered_2d(P(None, "space", None), db_fraction=0.5,
+                            slab_shards=1)
+    step_fn, state0, elem_sharding = fd.make_producer(
+        cfg, dep.client_mesh, init="decaying_turbulence",
+        key=jax.random.key(7))
+    session = InSituSession(
+        tables=[TableSpec("field", shape=(2, n, n), capacity=16,
+                          engine="ring")],
+        components=[Producer(step_fn, table="field", steps=steps,
+                             carry=state0, emit_every=1, chunk=chunk,
+                             elem_sharding=elem_sharding)],
+        deployment=dep)
+    plan = session.plan()
+    res = session.run(plan=plan, sequential=True, max_wall_s=600)
+    assert res.ok, {k: v.error for k, v in res.run.components.items()}
+    stats = res.server.stats()
+    t = res.run.timers
+    wall = t.total("equation_solution") + t.total("send")
+    chunks = -(-steps // chunk)
+
+    e0 = float(fd.energy(state0))
+    snap, found = res.server.get("field", S.make_key(0, steps - 1))
+    assert bool(found), "final snapshot missing from the store"
+    final = fd.FDState(u=snap[0], v=snap[1],
+                       t=jnp.zeros(()), step=jnp.zeros((), jnp.int32))
+    print(json.dumps({
+        "space_shards": shards,
+        "devices": len(jax.devices()),
+        "grid": n,
+        "steps": steps,
+        "chunks": chunks,
+        "steps_per_s": steps / max(wall, 1e-9),
+        "bytes_per_chunk": chunk * 2 * n * n * 4,
+        "staged_transfers": stats["staged_transfers"],
+        "predicted_staged": plan.staged_transfers,
+        "staged_per_chunk": stats["staged_transfers"] / chunks,
+        "op_count": stats["op_count"],
+        "predicted_ops": plan.store_dispatches,
+        "energy_initial": e0,
+        "energy_final": float(fd.energy(final)),
+        "divergence_max": float(fd.max_divergence(cfg, final)),
+    }))
+"""
+
+
+def _run_py(code: str, argv: list[str] = (), env_extra: dict | None = None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    if env_extra:
+        env.update(env_extra)
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code), *argv],
+        capture_output=True, text=True, timeout=560, env=env)
+
+
+def _shard_cell(shards: int, steps: int, chunk: int, n: int,
+                jacobi: int) -> dict:
+    """One measured space-shard cell in a fresh subprocess (forcing host
+    devices must precede the first jax call; fresh processes keep the
+    cells' timings free of each other's compile caches).  Total device
+    count is 2*shards so the client mesh is always exactly ``shards``
+    wide and the db side matches it (fan-in 1 at every cell — the cost
+    under test is the halo exchange + shard-local put, not fan-in)."""
+    proc = _run_py(
+        _CELL_CHILD,
+        argv=[str(shards), str(steps), str(chunk), str(n), str(jacobi)],
+        env_extra={"XLA_FLAGS":
+                   f"--xla_force_host_platform_device_count={2 * shards}"})
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"fig_turbulence cell (shards={shards}) failed:\n"
+            f"{proc.stderr[-4000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def _shards_comparison(cells: list[dict]) -> dict | None:
+    """Unsharded vs widest cell of the sweep — the same-run band
+    ``tools/check_bench.py`` gates (the grid is fixed, so on shared
+    hardware the ratio isolates halo-exchange + sharded-put cost)."""
+    if len(cells) < 2:
+        return None
+    lo = min(cells, key=lambda c: c["space_shards"])
+    hi = max(cells, key=lambda c: c["space_shards"])
+    if lo["space_shards"] == hi["space_shards"]:
+        return None
+    ratio = hi["steps_per_s"] / lo["steps_per_s"]
+    return {
+        "shards_lo": lo["space_shards"],
+        "shards_hi": hi["space_shards"],
+        "devices_lo": lo["devices"],
+        "devices_hi": hi["devices"],
+        "throughput_ratio": ratio,
+        # one container core executes every simulated host device
+        # serially, so the widest cell pays emulation cost ~devices;
+        # normalizing by the device factor recovers the per-device claim
+        "throughput_ratio_per_device": ratio * hi["devices"]
+                                             / lo["devices"],
+        "staged_per_chunk_max": max(c["staged_per_chunk"] for c in cells),
+        "energy_final_spread": abs(hi["energy_final"]
+                                   - lo["energy_final"]),
+        "divergence_spread": abs(hi["divergence_max"]
+                                 - lo["divergence_max"]),
+    }
+
+
+def shard_sweep(quick: bool = True, smoke: bool = False) -> dict:
+    """The measured space-shard sweep (see module doc)."""
+    if smoke or quick:
+        steps, chunk, n, jacobi = 48, 16, 32, 8
+        shard_counts = (1, 2)
+    else:
+        steps, chunk, n, jacobi = 128, 16, 64, 32
+        shard_counts = (1, 2, 4)
+    cells = [_shard_cell(s, steps, chunk, n, jacobi)
+             for s in shard_counts]
+    return {
+        "bench": "turbulence",
+        "api": "insitu_session",
+        "steps": steps,
+        "chunk": chunk,
+        "grid": n,
+        "jacobi_iters": jacobi,
+        "cells": cells,
+        "shards_comparison": _shards_comparison(cells),
+    }
+
+
+def run(quick: bool = True, json_path: str | None = None,
+        write_json: bool = True, smoke: bool = False):
+    sweep = shard_sweep(quick=quick, smoke=smoke)
+    if write_json:
+        path = Path(json_path) if json_path \
+            else Path("BENCH_turbulence.json")
+        path.write_text(json.dumps(sweep, indent=2) + "\n")
+
+    rows = []
+    for c in sweep["cells"]:
+        rows.append(Row(
+            f"turbulence/shards{c['space_shards']}",
+            1e6 / c["steps_per_s"],
+            f"grid={c['grid']};steps_per_s={c['steps_per_s']:.1f};"
+            f"staged_per_chunk={c['staged_per_chunk']:.2f};"
+            f"div_max={c['divergence_max']:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run(quick=False))

@@ -24,9 +24,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="minimal session-API run (fig9, the fig10 "
                          "replicated-vs-slab-sharded entry cells, the "
-                         "fig5 clustered fan-in cells, and the serving "
-                         "continuous-batching cells) for the CI bench "
-                         "gate")
+                         "fig5 clustered fan-in cells, the serving "
+                         "continuous-batching cells, and the turbulence "
+                         "sharded-producer cells) for the CI bench gate")
     ap.add_argument("--json", action="store_true",
                     help="also write BENCH_<name>.json per bench")
     ap.add_argument("--json-dir", default=".",
@@ -42,7 +42,8 @@ def main() -> None:
                    fig5_weak_scaling, fig6_strong_scaling,
                    fig7_inference_components, fig8_inference_scaling,
                    fig9_fused_pipeline, fig10_sharded_epoch, fig_serving,
-                   roofline_table, table12_insitu_overhead)
+                   fig_turbulence, roofline_table,
+                   table12_insitu_overhead)
     benches = {
         "fig3": fig3_store_budget.run,
         "fig4": fig4_size_sweep.run,
@@ -56,10 +57,12 @@ def main() -> None:
         "roofline": roofline_table.run,
         "chaos": chaos_overhead.run,
         "serving": fig_serving.run,
+        "turbulence": fig_turbulence.run,
     }
     if args.smoke:
         benches = {k: v for k, v in benches.items()
-                   if k in ("fig5", "fig9", "fig10", "serving")}
+                   if k in ("fig5", "fig9", "fig10", "serving",
+                            "turbulence")}
     if args.only:
         names = args.only.split(",")
         unknown = [n for n in names if n not in benches]
@@ -92,6 +95,11 @@ def main() -> None:
         benches["serving"] = (lambda quick: fig_serving.run(
             quick=quick, smoke=args.smoke, write_json=args.json,
             json_path=str(Path(args.json_dir) / "BENCH_serving.json")))
+    if "turbulence" in benches:
+        benches["turbulence"] = (lambda quick: fig_turbulence.run(
+            quick=quick, smoke=args.smoke, write_json=args.json,
+            json_path=str(Path(args.json_dir)
+                          / "BENCH_turbulence.json")))
 
     print("name,us_per_call,derived")
     failures = 0
@@ -105,10 +113,11 @@ def main() -> None:
             wall_s = time.perf_counter() - t0
             print(f"_meta/{name}/wall_s,{wall_s*1e6:.0f},", flush=True)
             if args.json:
-                # "serving" writes its structured gate file under
-                # BENCH_serving.json itself; keep the generic rows dump
-                # from clobbering it.
-                stem = "serving_rows" if name == "serving" else name
+                # "serving"/"turbulence" write their structured gate
+                # files under BENCH_<name>.json themselves; keep the
+                # generic rows dump from clobbering them.
+                stem = f"{name}_rows" if name in ("serving",
+                                                  "turbulence") else name
                 out = Path(args.json_dir) / f"BENCH_{stem}.json"
                 out.write_text(json.dumps(
                     {"bench": name, "quick": quick, "wall_s": wall_s,

@@ -9,7 +9,8 @@ placement; ``orchestrator`` is the SmartSim-driver analogue.
 from . import store
 from .client import Client
 from .deployment import (Clustered, Colocated, Deployment,
-                         make_clustered_1d, make_colocated_1d, split_devices)
+                         make_clustered_1d, make_clustered_2d,
+                         make_colocated_1d, split_devices)
 from .faults import (FaultEvent, FaultPlan, InjectedCrash, RetryPolicy,
                      StoreError, StoreTimeout, StoreUnavailable,
                      TransferDropped, WatermarkTimeout)
@@ -25,6 +26,7 @@ __all__ = [
     "Colocated",
     "Deployment",
     "make_clustered_1d",
+    "make_clustered_2d",
     "make_colocated_1d",
     "split_devices",
     "FaultEvent",

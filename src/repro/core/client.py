@@ -213,7 +213,7 @@ class Client:
 
     def capture_scan(self, table: str, step_fn, carry, length: int,
                      emit_every: int = 1, t0=0, n_ranks: int | None = None,
-                     bucket: bool = False):
+                     bucket: bool = False, elem_sharding=None):
         """Fold ``length`` producer steps + their ring puts into ONE
         dispatch under one table-lock round-trip (the fused producer tier).
 
@@ -245,6 +245,11 @@ class Client:
         ``stats()["staged_transfers"]``), and one ``store.put_masked``
         dispatch inserts it — instead of the per-element ``device_put``
         the per-verb tier pays.
+
+        ``elem_sharding`` (a ``NamedSharding`` over the element dims, or
+        ``None``) pins every emitted value to the producer's own layout —
+        a domain-decomposed solver's snapshot is put **shard-local**, the
+        ``capture_scan_sharded`` tier of ``insitu.plan``.
         """
         spec = self.server.spec(table)
         t0_gate = int(jnp.reshape(jnp.asarray(t0), (-1,))[0]) \
@@ -281,12 +286,14 @@ class Client:
                             new_carry, keys, vals, mask = \
                                 S.capture_scan_collect(
                                     spec, step_fn, carry, padded,
-                                    emit_every, t0=t0, valid=valid)
+                                    emit_every, t0=t0, valid=valid,
+                                    elem_sharding=elem_sharding)
                         else:
                             new_carry, keys, vals, mask = \
                                 S.capture_scan_collect_multi(
                                     spec, step_fn, carry, padded, n_ranks,
-                                    emit_every, t0=t0, valid=valid)
+                                    emit_every, t0=t0, valid=valid,
+                                    elem_sharding=elem_sharding)
                         self.server.apply_chunk(table, chunk_id, txn, keys,
                                                 vals, mask, puts)
                     return new_carry
@@ -302,11 +309,12 @@ class Client:
                 if n_ranks is None:
                     txn.state, carry = S.capture_scan(
                         spec, txn.state, step_fn, carry, padded, emit_every,
-                        t0=t0, valid=valid)
+                        t0=t0, valid=valid, elem_sharding=elem_sharding)
                 else:
                     txn.state, carry = S.capture_scan_multi(
                         spec, txn.state, step_fn, carry, padded, n_ranks,
-                        emit_every, t0=t0, valid=valid)
+                        emit_every, t0=t0, valid=valid,
+                        elem_sharding=elem_sharding)
         return carry
 
     # -- consumer-side loaders ---------------------------------------------------

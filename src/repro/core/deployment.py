@@ -56,7 +56,7 @@ from .faults import FaultPlan
 from .store import TableSpec
 
 __all__ = ["Deployment", "Colocated", "Clustered", "split_devices",
-           "make_colocated_1d", "make_clustered_1d"]
+           "make_colocated_1d", "make_clustered_1d", "make_clustered_2d"]
 
 
 def split_devices(devices=None, db_fraction: float = 0.25):
@@ -315,4 +315,48 @@ def make_clustered_1d(db_fraction: float = 0.25, axis: str = "data",
     return Clustered(
         client_mesh=Mesh(np.asarray(client_devs), (axis,)),
         db_mesh=Mesh(np.asarray(db_devs), (axis,)),
+        elem_spec=elem_spec, slab_axis=slab_axis, faults=faults)
+
+
+def make_clustered_2d(elem_spec: P, db_fraction: float = 0.5,
+                      slab_axis: str = "slab", elem_axis: str = "space",
+                      client_axis: str = "space", devices=None,
+                      slab_shards: int | None = None,
+                      faults: FaultPlan | None = None) -> Clustered:
+    """Clustered deployment over a 2-D **(slab, element)** db mesh.
+
+    ``Clustered`` requires the slot partition and the element partition to
+    live on *disjoint mesh axes* — on a 1-D db mesh that forces a choice
+    between them.  This factory lifts that to both-at-once by reshaping
+    the db devices into a ``(slab_shards, elem_shards)`` grid: the slot
+    axis partitions over ``slab_axis`` (rows), each stored element lays
+    out over ``elem_axis`` (columns) with ``elem_spec``, so a
+    domain-decomposed producer's shard-local put stays shard-local *and*
+    the slab still scales with capacity.  The client mesh is 1-D over
+    ``client_axis`` — name it after the producer's mesh axis (default
+    ``"space"``) so one ``elem_spec`` reads the same on both sides.
+
+    ``slab_shards=None`` picks the largest split ≤ 2 that divides the db
+    device count (1 when the pool is odd or a single device).
+    """
+    used = {a for entry in elem_spec if entry is not None
+            for a in ((entry,) if isinstance(entry, str) else entry)}
+    if slab_axis in used:
+        raise ValueError(
+            f"slab_axis {slab_axis!r} also appears in elem_spec "
+            f"{elem_spec}: the 2-D db mesh gives the slot and element "
+            f"partitions their own axes — put the element layout on "
+            f"{elem_axis!r}")
+    client_devs, db_devs = split_devices(devices, db_fraction)
+    n_db = len(db_devs)
+    if slab_shards is None:
+        slab_shards = 2 if n_db % 2 == 0 and n_db >= 2 else 1
+    if slab_shards < 1 or n_db % slab_shards != 0:
+        raise ValueError(
+            f"slab_shards={slab_shards} does not divide the {n_db}-device "
+            f"db pool: the (slab, element) grid needs equal rows")
+    db_grid = np.asarray(db_devs).reshape(slab_shards, n_db // slab_shards)
+    return Clustered(
+        client_mesh=Mesh(np.asarray(client_devs), (client_axis,)),
+        db_mesh=Mesh(db_grid, (slab_axis, elem_axis)),
         elem_spec=elem_spec, slab_axis=slab_axis, faults=faults)

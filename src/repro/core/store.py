@@ -589,9 +589,24 @@ def bucket_length(length: int, min_bucket: int = 8) -> int:
     return 1 << (n - 1).bit_length()
 
 
+def _constrain_elem(value, elem_sharding, lead: int = 0):
+    """Pin an emitted element (with ``lead`` stacked leading axes) to the
+    producer's element sharding, so a sharded solver's put stays a
+    shard-local slab update instead of funneling through one device.
+    ``elem_sharding`` is a ``NamedSharding`` over the element dims only;
+    ``None`` is the un-sharded fast path (no constraint inserted)."""
+    if elem_sharding is None:
+        return value
+    from jax.sharding import NamedSharding, PartitionSpec
+    ns = NamedSharding(elem_sharding.mesh,
+                       PartitionSpec(*([None] * lead), *elem_sharding.spec))
+    return jax.lax.with_sharding_constraint(value, ns)
+
+
 def capture_scan_impl(spec: TableSpec, state: TableState,
                       step_fn: Callable, carry, length: int,
-                      emit_every: int = 1, t0=0, valid=None):
+                      emit_every: int = 1, t0=0, valid=None,
+                      elem_sharding=None):
     """Fold ``length`` producer steps and their puts into ONE dispatch.
 
     ``step_fn(carry, t) -> (carry, key, value)`` is the producer's
@@ -619,6 +634,7 @@ def capture_scan_impl(spec: TableSpec, state: TableState,
     def step(sc, t):
         st, c = sc
         c, key, value = step_fn(c, t)
+        value = _constrain_elem(value, elem_sharding)
         st = jax.lax.cond(
             t % emit_every == 0,
             lambda s: put_impl(spec, s, key, value),
@@ -645,6 +661,7 @@ def capture_scan_impl(spec: TableSpec, state: TableState,
 
 
 capture_scan = partial(jax.jit, static_argnums=(0, 2, 4, 5),
+                       static_argnames=("elem_sharding",),
                        donate_argnums=1)(capture_scan_impl)
 
 
@@ -656,7 +673,7 @@ def capture_emit_count(length: int, emit_every: int = 1, t0: int = 0) -> int:
 def capture_scan_multi_impl(spec: TableSpec, state: TableState,
                             step_fn: Callable, carry, length: int,
                             n_ranks: int, emit_every: int = 1, t0=0,
-                            valid=None):
+                            valid=None, elem_sharding=None):
     """Multi-producer :func:`capture_scan`: ``n_ranks`` producers advance in
     lockstep for ``length`` steps inside ONE dispatch.
 
@@ -691,6 +708,7 @@ def capture_scan_multi_impl(spec: TableSpec, state: TableState,
         st, c = sc
         ts = t0_arr + i
         c, keys, values = jax.vmap(step_fn, in_axes=(0, 0, 0))(c, ranks, ts)
+        values = _constrain_elem(values, elem_sharding, lead=1)
         st = jax.lax.cond(
             ts[0] % emit_every == 0,
             lambda s: put_many_impl(spec, s, keys, values),
@@ -714,6 +732,7 @@ def capture_scan_multi_impl(spec: TableSpec, state: TableState,
 
 
 capture_scan_multi = partial(jax.jit, static_argnums=(0, 2, 4, 5, 6),
+                             static_argnames=("elem_sharding",),
                              donate_argnums=1)(capture_scan_multi_impl)
 
 
@@ -734,7 +753,7 @@ def capture_rows(length: int, emit_every: int = 1) -> int:
 
 def capture_scan_collect_impl(spec: TableSpec, step_fn: Callable, carry,
                               length: int, emit_every: int = 1, t0=0,
-                              valid=None):
+                              valid=None, elem_sharding=None):
     """Producer half of the *clustered* fused put: run ``length`` steps in
     ONE dispatch and **collect** the would-be puts instead of applying
     them.
@@ -759,7 +778,8 @@ def capture_scan_collect_impl(spec: TableSpec, step_fn: Callable, carry,
     def live(st, i, t):
         c, keys_buf, vals_buf, cursor = st
         c, key, value = step_fn(c, t)
-        value = jnp.asarray(value, spec.dtype)
+        value = _constrain_elem(jnp.asarray(value, spec.dtype),
+                                elem_sharding)
         if value.shape != spec.shape:
             raise ValueError(
                 f"capture into table {spec.name!r}: value shape "
@@ -786,19 +806,22 @@ def capture_scan_collect_impl(spec: TableSpec, step_fn: Callable, carry,
             i, t = it
             return jax.lax.cond(i < valid, live, dead, st, i, t), None
     st0 = (carry, jnp.zeros((rows,), KEY_DTYPE),
-           jnp.zeros((rows, *spec.shape), spec.dtype),
+           _constrain_elem(jnp.zeros((rows, *spec.shape), spec.dtype),
+                           elem_sharding, lead=1),
            jnp.zeros((), jnp.int32))
     (carry, keys, values, cursor), _ = jax.lax.scan(body, st0, its)
     return carry, keys, values, jnp.arange(rows, dtype=jnp.int32) < cursor
 
 
-capture_scan_collect = partial(jax.jit, static_argnums=(0, 1, 3, 4))(
+capture_scan_collect = partial(jax.jit, static_argnums=(0, 1, 3, 4),
+                               static_argnames=("elem_sharding",))(
     capture_scan_collect_impl)
 
 
 def capture_scan_collect_multi_impl(spec: TableSpec, step_fn: Callable,
                                     carry, length: int, n_ranks: int,
-                                    emit_every: int = 1, t0=0, valid=None):
+                                    emit_every: int = 1, t0=0, valid=None,
+                                    elem_sharding=None):
     """Multi-producer :func:`capture_scan_collect`: ``n_ranks`` producers
     advance in lockstep, collecting instead of putting (the clustered
     form of :func:`capture_scan_multi_impl` — same vmapped step, per-rank
@@ -818,7 +841,8 @@ def capture_scan_collect_multi_impl(spec: TableSpec, step_fn: Callable,
         c, keys_buf, vals_buf, cursor = st
         ts = t0_arr + i
         c, keys, values = jax.vmap(step_fn, in_axes=(0, 0, 0))(c, ranks, ts)
-        values = jnp.asarray(values, spec.dtype)
+        values = _constrain_elem(jnp.asarray(values, spec.dtype),
+                                 elem_sharding, lead=1)
         if values.shape != (n_ranks, *spec.shape):
             raise ValueError(
                 f"capture into table {spec.name!r}: rank values "
@@ -843,7 +867,8 @@ def capture_scan_collect_multi_impl(spec: TableSpec, step_fn: Callable,
         def body(st, i):
             return jax.lax.cond(i < valid, live, dead, st, i), None
     st0 = (carry, jnp.zeros((rows, n_ranks), KEY_DTYPE),
-           jnp.zeros((rows, n_ranks, *spec.shape), spec.dtype),
+           _constrain_elem(jnp.zeros((rows, n_ranks, *spec.shape),
+                                     spec.dtype), elem_sharding, lead=2),
            jnp.zeros((), jnp.int32))
     (carry, keys, values, cursor), _ = jax.lax.scan(body, st0, steps)
     mask = jnp.arange(rows, dtype=jnp.int32) < cursor
@@ -852,7 +877,8 @@ def capture_scan_collect_multi_impl(spec: TableSpec, step_fn: Callable,
             jnp.repeat(mask, n_ranks))
 
 
-capture_scan_collect_multi = partial(jax.jit, static_argnums=(0, 1, 3, 4, 5))(
+capture_scan_collect_multi = partial(jax.jit, static_argnums=(0, 1, 3, 4, 5),
+                                     static_argnames=("elem_sharding",))(
     capture_scan_collect_multi_impl)
 
 

@@ -53,6 +53,11 @@ class Producer:
     chunk: int | None = None      # fused chunk length (None: plan default)
     bucket: bool = True           # pad tail chunks to their pow2 bucket
     tier: str | None = None       # force a producer tier (see plan module)
+    #: NamedSharding of one emitted element (a domain-decomposed solver's
+    #: own layout, e.g. ``sim.distributed.make_producer``).  Set -> the
+    #: plan resolves the ``capture_scan_sharded`` tier: every put is
+    #: pinned shard-local via ``store.capture_scan(elem_sharding=...)``.
+    elem_sharding: Any = None
     warmup: bool = True           # pre-compile fused executables off-clock
     name: str = "producer"
 

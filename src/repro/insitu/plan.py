@@ -17,10 +17,20 @@ Tier names
 
 =============  =====================================================
 producer       ``per_verb`` | ``capture_scan`` | ``capture_scan_multi``
+               | ``capture_scan_sharded``
 trainer        ``per_verb`` | ``fused`` | ``sharded_fused`` |
                ``slab_sharded`` | ``slab_sharded_clustered``
 inference      ``fused_registry`` | ``three_step``
 =============  =====================================================
+
+The ``capture_scan_sharded`` tier is ``capture_scan`` for a
+domain-decomposed producer (``Producer.elem_sharding`` set, e.g.
+``sim.distributed.make_producer``): same chunking, dispatch and staging
+economics, but every emitted element is pinned to the producer's own
+layout so the put is a shard-local slab update — and on a co-located
+multi-device mesh the plan *claims* the compiled chunk's only collective
+is the solver's own halo exchange (``collective-permute`` nonzero,
+``all-gather`` zero; :func:`sharded_producer_prediction`).
 
 Besides dispatch counts, a plan predicts each component's *collective
 structure* (``predicted_collectives``): which collective ops the compiled
@@ -57,10 +67,11 @@ __all__ = [
     "clients_dispatches", "clients_staged",
     "serving_dispatches", "serving_staged", "serving_swaps",
     "TRAINER_COLLECTIVE_PREDICTIONS", "COLLECTIVE_FREE",
-    "trainer_collective_prediction",
+    "trainer_collective_prediction", "sharded_producer_prediction",
 ]
 
-PRODUCER_TIERS = ("per_verb", "capture_scan", "capture_scan_multi")
+PRODUCER_TIERS = ("per_verb", "capture_scan", "capture_scan_multi",
+                  "capture_scan_sharded")
 TRAINER_TIERS = ("per_verb", "fused", "sharded_fused", "slab_sharded",
                  "slab_sharded_clustered")
 INFERENCE_TIERS = ("fused_registry", "three_step")
@@ -71,9 +82,20 @@ def producer_tier(comp) -> str:
     """Resolve a :class:`~.components.Producer`'s tier.
 
     Forced tiers are validated; otherwise: non-traceable steps pin the
-    per-verb tier, traceable single-rank steps take ``capture_scan``,
-    multi-rank steps take ``capture_scan_multi``.
+    per-verb tier, a set ``elem_sharding`` takes ``capture_scan_sharded``
+    (single-rank: the one rank IS the whole device mesh), traceable
+    single-rank steps take ``capture_scan``, multi-rank steps take
+    ``capture_scan_multi``.
     """
+    sharded = getattr(comp, "elem_sharding", None) is not None
+    if sharded and not comp.traceable:
+        raise ValueError("elem_sharding needs a traceable step_fn: the "
+                         "sharded put only exists inside the fused capture")
+    if sharded and comp.ranks > 1:
+        raise ValueError(
+            "elem_sharding is single-rank (ranks=1): a domain-decomposed "
+            "producer is ONE rank spread over the mesh — its parallelism "
+            "is the sharding, not a vmapped rank axis")
     if comp.tier is not None:
         if comp.tier not in PRODUCER_TIERS:
             raise ValueError(f"unknown producer tier {comp.tier!r} "
@@ -85,9 +107,19 @@ def producer_tier(comp) -> str:
                              "capture_scan_multi or ranks=1")
         if comp.tier == "capture_scan_multi" and comp.ranks == 1:
             raise ValueError("capture_scan_multi needs ranks > 1")
+        if comp.tier == "capture_scan_sharded" and not sharded:
+            raise ValueError("capture_scan_sharded needs elem_sharding "
+                             "(the producer's own element layout)")
+        if sharded and comp.tier not in ("per_verb", "capture_scan_sharded"):
+            raise ValueError(
+                f"tier {comp.tier!r} would drop the declared elem_sharding; "
+                f"use capture_scan_sharded (or per_verb to measure the "
+                f"unfused baseline)")
         return comp.tier
     if not comp.traceable:
         return "per_verb"
+    if sharded:
+        return "capture_scan_sharded"
     return "capture_scan" if comp.ranks == 1 else "capture_scan_multi"
 
 
@@ -212,6 +244,34 @@ def trainer_collective_prediction(tier: str, table_sharded: bool = False
     if table_sharded and tier == "fused":
         return None
     return TRAINER_COLLECTIVE_PREDICTIONS[tier]
+
+
+def sharded_producer_prediction(elem_sharding, colocated: bool
+                                ) -> tuple[tuple[str, bool], ...] | None:
+    """Collective-structure prediction for a ``capture_scan_sharded``
+    producer's compiled chunk.
+
+    The claim: the shard-local put adds **no cross-shard collective
+    beyond the producer's own halo exchange** — the chunk compiles with
+    ``collective-permute`` nonzero (the ``lax.ppermute`` neighbor faces)
+    and everything else, ``all-gather`` above all, zero.  The plan only
+    makes it where it is structural:
+
+    * **co-located, > 1 shard** — the table slab carries the same element
+      layout as the emission, so the put is a local dynamic-update-slice
+      and the halo ppermute is the whole collective story.
+    * elsewhere ``None`` (no claim): a *local* (placement-free)
+      deployment leaves the slab unplaced, so the compiler may legally
+      funnel the sharded emission through one device; a *clustered* chunk
+      splits into a client-side collect and a db-side insert with the hop
+      staged between them; and a 1-shard mesh's ppermute can fold away.
+    """
+    if not colocated or elem_sharding is None:
+        return None
+    if getattr(elem_sharding, "num_devices", 1) <= 1 \
+            or getattr(elem_sharding, "is_fully_replicated", False):
+        return None
+    return _pred(collective_permute=True)
 
 
 @dataclass(frozen=True)

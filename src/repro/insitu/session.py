@@ -245,6 +245,16 @@ class InSituSession:
                         "kind": "producer", "name": comp.name, "tier": tier,
                         "table": comp.table,
                         "n_chunks": -(-comp.steps // chunk)})
+                if tier == "capture_scan_sharded":
+                    # the sharded chunk legitimately contains the solver's
+                    # halo ppermute — claim exactly that (and nothing
+                    # more) where the placement makes it structural
+                    pred = P.sharded_producer_prediction(
+                        comp.elem_sharding,
+                        colocated=self.deployment is not None
+                        and not crosses)
+                else:
+                    pred = put_pred
                 entries.append(P.ComponentPlan(
                     name=comp.name, kind="producer", tier=tier,
                     table=comp.table, ranks=comp.ranks, steps=comp.steps,
@@ -256,7 +266,7 @@ class InSituSession:
                     staged=P.producer_staged(
                         tier, comp.steps, comp.emit_every, comp.ranks,
                         chunk, crosses),
-                    predicted_collectives=put_pred,
+                    predicted_collectives=pred,
                     collectives=self._producer_collectives(comp, tier, chunk)
                     if hlo else None))
             elif isinstance(comp, TrainerConsumer):
@@ -438,13 +448,15 @@ class InSituSession:
                 spec, st, jnp.uint32(1), val)).lower(state).compile()
             counts = count_ops(txt.as_text())
         elif staged:
-            single = tier == "capture_scan"
+            single = tier in ("capture_scan", "capture_scan_sharded")
+            es = comp.elem_sharding if tier == "capture_scan_sharded" \
+                else None
             sf = _single_rank(comp.step_fn) if single else comp.step_fn
             rows = S.capture_rows(n, comp.emit_every)
             if single:
                 collect = jax.jit(lambda c: S.capture_scan_collect_impl(
-                    spec, sf, c, n, comp.emit_every)).lower(
-                        comp.carry).compile()
+                    spec, sf, c, n, comp.emit_every,
+                    elem_sharding=es)).lower(comp.carry).compile()
                 chunk_n = rows
             else:
                 collect = jax.jit(
@@ -462,11 +474,13 @@ class InSituSession:
             counts = count_ops(collect.as_text())
             for op, c in count_ops(insert.as_text()).items():
                 counts[op] = counts.get(op, 0) + c
-        elif tier == "capture_scan":
+        elif tier in ("capture_scan", "capture_scan_sharded"):
             sf = _single_rank(comp.step_fn)
+            es = comp.elem_sharding if tier == "capture_scan_sharded" \
+                else None
             txt = jax.jit(lambda st, c: S.capture_scan_impl(
-                spec, st, sf, c, n,
-                comp.emit_every)).lower(state, comp.carry).compile()
+                spec, st, sf, c, n, comp.emit_every,
+                elem_sharding=es)).lower(state, comp.carry).compile()
             counts = count_ops(txt.as_text())
         else:
             txt = jax.jit(lambda st, c: S.capture_scan_multi_impl(
@@ -680,7 +694,9 @@ class InSituSession:
                 return ProducerOutput(steps=done)
             return fn
 
-        single = entry.tier == "capture_scan"
+        single = entry.tier in ("capture_scan", "capture_scan_sharded")
+        es = comp.elem_sharding if entry.tier == "capture_scan_sharded" \
+            else None
         step_fn = _single_rank(comp.step_fn) if single else comp.step_fn
 
         def fn(client: Client, stop):
@@ -713,7 +729,8 @@ class InSituSession:
                             if single:
                                 _, keys, vals, mask = S.capture_scan_collect(
                                     spec, step_fn, carry, padded,
-                                    comp.emit_every, t0=0, valid=valid)
+                                    comp.emit_every, t0=0, valid=valid,
+                                    elem_sharding=es)
                             else:
                                 _, keys, vals, mask = \
                                     S.capture_scan_collect_multi(
@@ -731,9 +748,18 @@ class InSituSession:
                                 spec, S.init_table(spec, placement),
                                 keys, vals, mask)
                         elif single:
+                            # the sharded tier's executable is placement-
+                            # sensitive (the constraint must meet the same
+                            # slab layout as the live table), so warm
+                            # against the deployment placement, not an
+                            # unplaced throwaway
                             wst, _ = S.capture_scan(
-                                spec, S.init_table(spec), step_fn, carry,
-                                padded, comp.emit_every, t0=0, valid=valid)
+                                spec,
+                                S.init_table(spec, client.server.placement(
+                                    comp.table)) if es is not None
+                                else S.init_table(spec),
+                                step_fn, carry, padded, comp.emit_every,
+                                t0=0, valid=valid, elem_sharding=es)
                         else:
                             wst, _ = S.capture_scan_multi(
                                 spec, S.init_table(spec), step_fn, carry,
@@ -758,7 +784,7 @@ class InSituSession:
                     carry = client.capture_scan(
                         comp.table, step_fn, carry, k, comp.emit_every,
                         t0=base, n_ranks=None if single else comp.ranks,
-                        bucket=entry.bucketed)
+                        bucket=entry.bucketed, elem_sharding=es)
                     box[0] = client.server.checkout(comp.table).count
                 done += k
                 if time.perf_counter() - it0 > pol.max_step_s:

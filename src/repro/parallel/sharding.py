@@ -40,7 +40,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = ["DEFAULT_RULES", "use_mesh", "current_mesh", "spec_for", "shard",
            "sharding_for", "fitted_sharding", "logical_sharding", "ParamSpec",
            "init_params", "param_specs_to_shardings", "param_axes",
-           "data_mesh", "disjoint_data_meshes", "slab_sharding"]
+           "data_mesh", "space_mesh", "disjoint_data_meshes",
+           "slab_sharding"]
 
 # logical axis -> mesh axis name(s)
 DEFAULT_RULES: dict[str, Any] = {
@@ -183,6 +184,21 @@ def data_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:
     single ``shard_map`` over; on CPU, force multiple devices with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the
     first jax call.
+    """
+    from ..launch.mesh import axis_types_kw
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    return jax.make_mesh((n,), (axis,), **axis_types_kw(1))
+
+
+def space_mesh(n_devices: int | None = None, axis: str = "space") -> Mesh:
+    """A 1-D mesh over ``axis`` for domain decomposition.
+
+    The producer-side twin of :func:`data_mesh`: the axis a
+    halo-exchanged solver (``sim.distributed``) partitions its grid rows
+    over inside one ``shard_map``, and the axis its ``elem_sharding``
+    carries into the store so puts stay shard-local.  Name it to match
+    the db mesh's element axis (``core.deployment.make_clustered_2d``)
+    when staging across meshes.
     """
     from ..launch.mesh import axis_types_kw
     n = len(jax.devices()) if n_devices is None else int(n_devices)

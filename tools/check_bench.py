@@ -7,8 +7,9 @@ Run from the repo root (CI bench-smoke job):
 
 Checks ``BENCH_fused_pipeline.json`` (the session-API pipeline bench),
 ``BENCH_sharded_epoch.json`` (the sharded-epoch / data-plane-entry bench),
-``BENCH_weak_scaling.json`` (the fig5 clustered fan-in sweep) and
-``BENCH_serving.json`` (the continuous-batching serving cells):
+``BENCH_weak_scaling.json`` (the fig5 clustered fan-in sweep),
+``BENCH_serving.json`` (the continuous-batching serving cells) and
+``BENCH_turbulence.json`` (the halo-exchange sharded-producer cells):
 
 1. **Structural** (hardware-independent, hard):
    * fused consumer ``store_dispatches_per_epoch`` must stay <= 1.0 — the
@@ -66,6 +67,20 @@ For the serving bench the gates are the serving-plane claims:
   ``throughput_ratio`` at the widest client count must stay above
   ``1 - 2*tol`` — batched serving must not degrade back to
   per-request dispatch costs.
+
+For the turbulence bench the gates are the sharded-producer claims:
+
+* **Structural** (hard): every space-shard cell performs exactly ONE
+  staged transfer per chunk with measured counters equal to the plan's
+  predictions, and the snapshot that went THROUGH the store obeys the
+  physics (energy decays, projected divergence stays small) — with the
+  final energy and divergence agreeing across shard counts, i.e. the
+  halo exchange reproduces the unsharded stencil.
+* **Performance** (same-run band): the per-device-normalized
+  sharded:unsharded ``throughput_ratio`` must stay above
+  ``0.5*(1 - 2*tol)`` — the extra 2x headroom absorbs the CPU
+  device-emulation noise of short smoke cells; the gate catches a
+  sharded put that collapses into per-step gathers, not drift.
 """
 
 from __future__ import annotations
@@ -207,6 +222,80 @@ def check_weak_scaling(fresh: dict, tol: float) -> list[str]:
     return errors
 
 
+def check_turbulence(fresh: dict, tol: float) -> list[str]:
+    """Every turbulence gate is same-run (structural counts, physics
+    invariants of the stored snapshots, and the shard-sweep band
+    measured between cells of one sweep), so no committed baseline is
+    read — ``BENCH_turbulence.json`` at the repo root is the perf
+    trajectory record, not a gate input."""
+    errors: list[str] = []
+
+    # -- structural invariants (hard) -------------------------------------
+    for cell in fresh["cells"]:
+        where = f"turbulence shards={cell['space_shards']}"
+        if abs(cell["staged_per_chunk"] - 1.0) > EPS:
+            errors.append(
+                f"{where}: staged transfers per chunk = "
+                f"{cell['staged_per_chunk']} (!= 1.0): the element-"
+                f"sharded put degraded from one reshard per chunk")
+        if cell["staged_transfers"] != cell["predicted_staged"]:
+            errors.append(
+                f"{where}: measured staged_transfers "
+                f"{cell['staged_transfers']} != plan prediction "
+                f"{cell['predicted_staged']}")
+        if cell["op_count"] != cell["predicted_ops"]:
+            errors.append(
+                f"{where}: measured op_count {cell['op_count']} != plan "
+                f"prediction {cell['predicted_ops']}")
+        # physics of the snapshot that went THROUGH the store
+        if cell["energy_final"] >= cell["energy_initial"]:
+            errors.append(
+                f"{where}: kinetic energy grew "
+                f"({cell['energy_initial']} -> {cell['energy_final']}): "
+                f"the viscous decay is wrong or the stored snapshot is "
+                f"stale")
+        if cell["divergence_max"] > 0.05:
+            errors.append(
+                f"{where}: max divergence {cell['divergence_max']} > "
+                f"0.05: the projection (or the halo feeding it) broke")
+
+    cmp = fresh.get("shards_comparison")
+    if cmp is None:
+        errors.append("turbulence: no shard sweep pair "
+                      "(shards_comparison missing)")
+        return errors
+    # sharding must not CHANGE the physics — same grid, same init, so
+    # the stored snapshots must agree across shard counts (fp32 halo
+    # vs. padded reference is exact; allow accumulation-order slack)
+    if cmp["energy_final_spread"] > 1e-4:
+        errors.append(
+            f"turbulence: final energy differs by "
+            f"{cmp['energy_final_spread']} between "
+            f"{cmp['shards_lo']}- and {cmp['shards_hi']}-shard cells: "
+            f"the halo exchange is not reproducing the reference "
+            f"stencil")
+    if cmp["divergence_spread"] > 1e-4:
+        errors.append(
+            f"turbulence: max divergence differs by "
+            f"{cmp['divergence_spread']} between shard counts")
+
+    # -- performance (same-run, same-hardware cell pair; absolute band) ---
+    # One core serializes all simulated devices, so the per-device
+    # normalized ratio is the meaningful one; even that carries the
+    # subprocess-timing noise of short smoke cells, so the floor gets an
+    # extra 2x headroom — the gate catches collapse (an accidental
+    # gather per step), not drift.
+    floor = 0.5 * (1.0 - 2.0 * tol)
+    if cmp["throughput_ratio_per_device"] < floor:
+        errors.append(
+            f"turbulence shards {cmp['shards_hi']}:{cmp['shards_lo']} "
+            f"per-device throughput ratio "
+            f"{cmp['throughput_ratio_per_device']:.3f} below floor "
+            f"{floor:.2f}: the sharded producer is paying per-step "
+            f"collective costs beyond the halo exchange")
+    return errors
+
+
 def check_serving(fresh: dict, tol: float) -> list[str]:
     """Every serving gate is same-run (structural counters + the
     tier-comparison band measured inside one sweep), so no committed
@@ -277,6 +366,8 @@ def main() -> int:
         args.tol)
     errors += check_serving(
         _load(Path(args.fresh_dir) / "BENCH_serving.json"), args.tol)
+    errors += check_turbulence(
+        _load(Path(args.fresh_dir) / "BENCH_turbulence.json"), args.tol)
     if errors:
         print("bench check FAILED:")
         for e in errors:
@@ -284,7 +375,7 @@ def main() -> int:
         return 1
     print("bench check OK (BENCH_fused_pipeline.json + "
           "BENCH_sharded_epoch.json + BENCH_weak_scaling.json + "
-          "BENCH_serving.json within tolerance)")
+          "BENCH_serving.json + BENCH_turbulence.json within tolerance)")
     return 0
 
 
