@@ -19,13 +19,20 @@ wall-clock cannot show flat scaling directly — the structure can):
 4. **measured clustered fan-in curve** (the paper's clustered line, run
    for real): the SAME ~10-line ``InSituSession`` declaration — a fused
    producer streaming 256KB snapshots into a ``Clustered`` store — at a
-   sweep of producer:db device ratios (``split_devices``), each cell in
-   a fresh subprocess with forced host devices.  Measures producer
-   steps/s AND the structural clustered claim: exactly ONE cross-mesh
-   staged transfer per ``capture_scan`` chunk
-   (``stats()["staged_transfers"]`` == ``plan.explain()`` prediction).
+   >= 3-point sweep of producer:db device ratios (``split_devices``),
+   each cell in a fresh subprocess with forced host devices.  Measures
+   producer steps/s AND the structural clustered claim: exactly ONE
+   cross-mesh staged transfer per ``capture_scan`` chunk
+   (``stats()["staged_transfers"]`` == ``plan.explain()`` prediction),
+   with the two-slot overlap staging pipeline ON.  A serial-staging
+   baseline cell (``overlap=False``) at the most contended ratio gives
+   the same-run overlap-vs-serial pair, and the sweep fits the plan's
+   ``ContentionModel`` (steps/s vs fan-in, OLS over the measured cells)
+   whose per-cell throughput predictions are folded back into the JSON.
    Writes ``BENCH_weak_scaling.json``; ``tools/check_bench.py`` gates
-   staged/chunk == 1 (hard) and the fan-in throughput ratio (band).
+   staged/chunk == 1 and exact op counts (hard), the fan-in and
+   overlap-vs-serial throughput ratios, the contention-model fit
+   residual, and each cell's predicted-vs-measured throughput (bands).
 """
 
 from __future__ import annotations
@@ -50,8 +57,9 @@ _CLUSTERED_CHILD = """
     from repro.core import store as S
     from repro.insitu import InSituSession, Producer
 
-    db_fraction, steps, chunk, msg = (float(sys.argv[1]), int(sys.argv[2]),
-                                      int(sys.argv[3]), int(sys.argv[4]))
+    db_fraction, steps, chunk, msg, overlap = (
+        float(sys.argv[1]), int(sys.argv[2]), int(sys.argv[3]),
+        int(sys.argv[4]), bool(int(sys.argv[5])))
     elems = msg // 4                         # 256KB float32 per snapshot
     snap = jax.random.normal(jax.random.key(0), (elems,))
 
@@ -59,21 +67,33 @@ _CLUSTERED_CHILD = """
         return carry + 1.0, S.make_key(rank, t), snap * carry
 
     # the whole clustered scenario is one declaration: a fused producer
-    # streaming into a store on dedicated devices
-    dep = make_clustered_1d(db_fraction=db_fraction)
-    session = InSituSession(
-        tables=[TableSpec("field", shape=(elems,), capacity=16,
-                          engine="ring")],
-        components=[Producer(step, table="field", steps=steps,
-                             carry=jnp.zeros(()), emit_every=1,
-                             chunk=chunk)],
-        deployment=dep)
-    plan = session.plan()
-    res = session.run(plan=plan, sequential=True, max_wall_s=600)
-    assert res.ok, {k: v.error for k, v in res.run.components.items()}
+    # streaming into a store on dedicated devices; ``overlap`` toggles
+    # the two-slot staging pipeline vs the serial stage-then-insert path
+    dep = make_clustered_1d(db_fraction=db_fraction, overlap=overlap)
+
+    def one_run():
+        session = InSituSession(
+            tables=[TableSpec("field", shape=(elems,), capacity=16,
+                              engine="ring")],
+            components=[Producer(step, table="field", steps=steps,
+                                 carry=jnp.zeros(()), emit_every=1,
+                                 chunk=chunk)],
+            deployment=dep)
+        plan = session.plan()
+        res = session.run(plan=plan, sequential=True, max_wall_s=600)
+        assert res.ok, {k: v.error for k, v in res.run.components.items()}
+        return plan, res
+
+    # best-of-2 in ONE process: run 1 pays residual warmup, run 2 (fresh
+    # server, warm jit cache) gives the clean timing — millisecond-scale
+    # chunk walls on a shared CPU need the repeat to gate reliably
+    walls = []
+    for _ in range(2):
+        plan, res = one_run()
+        t = res.run.timers
+        walls.append(t.total("equation_solution") + t.total("send"))
     stats = res.server.stats()
-    t = res.run.timers
-    wall = t.total("equation_solution") + t.total("send")
+    wall = min(walls)
     chunks = -(-steps // chunk)
     n_clients = len(dep.client_mesh.devices.ravel())
     n_db = len(dep.db_mesh.devices.ravel())
@@ -84,7 +104,10 @@ _CLUSTERED_CHILD = """
         "devices": len(jax.devices()),
         "steps": steps,
         "chunks": chunks,
+        "overlap": overlap,
+        "step_bytes": msg,
         "steps_per_s": steps / max(wall, 1e-9),
+        "dispatch_s": t.total("send") / max(1, stats["op_count"]),
         "staged_transfers": stats["staged_transfers"],
         "predicted_staged": plan.staged_transfers,
         "staged_per_chunk": stats["staged_transfers"] / chunks,
@@ -158,13 +181,14 @@ def _run_py(code: str, argv: list[str] = (), env_extra: dict | None = None):
 
 
 def _clustered_cell(db_fraction: float, steps: int, chunk: int,
-                    devices: int) -> dict:
+                    devices: int, overlap: bool = True) -> dict:
     """One measured clustered fan-in cell in a fresh subprocess (forcing
     host devices must precede the first jax call; fresh processes keep
     the cells' timings free of each other's compile caches)."""
     proc = _run_py(
         _CLUSTERED_CHILD,
-        argv=[str(db_fraction), str(steps), str(chunk), str(MSG)],
+        argv=[str(db_fraction), str(steps), str(chunk), str(MSG),
+              str(int(overlap))],
         env_extra={"XLA_FLAGS":
                    f"--xla_force_host_platform_device_count={devices}"})
     if proc.returncode != 0:
@@ -192,15 +216,48 @@ def _fanin_comparison(cells: list[dict]) -> dict | None:
     }
 
 
+def _fit_contention(cells: list[dict]) -> dict | None:
+    """Fit the plan's :class:`repro.insitu.plan.ContentionModel` from the
+    measured sweep and fold its per-cell throughput predictions back into
+    the cells (``predicted_steps_per_s`` — the band
+    ``tools/check_bench.py`` gates).  The serialized model is what a user
+    hands back to ``Clustered.cost_model`` to turn ``plan.explain()``
+    into a throughput prediction and the chunk autotuner on."""
+    from repro.insitu.plan import ContentionModel
+    if len({c["fan_in"] for c in cells}) < 2:
+        return None
+    t_dispatch = sum(c["dispatch_s"] for c in cells) / len(cells)
+    model = ContentionModel.fit(cells)
+    model = ContentionModel(t_base=model.t_base, k_fanin=model.k_fanin,
+                            step_bytes=model.step_bytes,
+                            t_dispatch=t_dispatch)
+    for c in cells:
+        c["predicted_steps_per_s"] = model.predict_steps_per_s(c["fan_in"])
+    return {
+        "t_base": model.t_base,
+        "k_fanin": model.k_fanin,
+        "step_bytes": model.step_bytes,
+        "t_dispatch": model.t_dispatch,
+        "fit_residual": model.residual(cells),
+    }
+
+
 def clustered_fanin(quick: bool = True, smoke: bool = False) -> dict:
     """The measured clustered fan-in contention sweep (see module doc)."""
     if smoke or quick:
-        devices, steps, chunk = 4, 48, 16
-        fractions = (0.5, 0.25)        # 2:2 (fan_in 1) and 3:1 (fan_in 3)
+        devices, steps, chunk = 6, 192, 16
+        # 3:3, 4:2, 5:1 -> fan_in 1, 2, 5 (>= 3 points fits the model)
+        fractions = (0.5, 1 / 3, 1 / 6)
     else:
-        devices, steps, chunk = 8, 128, 16
-        fractions = (0.5, 0.25, 0.125)  # 4:4, 6:2, 7:1
+        devices, steps, chunk = 8, 256, 16
+        fractions = (0.5, 0.25, 0.125)  # 4:4, 6:2, 7:1 -> fan_in 1, 3, 7
     cells = [_clustered_cell(f, steps, chunk, devices) for f in fractions]
+    # serial staging baseline at the most contended ratio: identical
+    # producer work with the two-slot pipeline OFF — the same-run pair
+    # check_bench gates the overlap win against
+    serial = _clustered_cell(fractions[-1], steps, chunk, devices,
+                             overlap=False)
+    hi = cells[-1]
     return {
         "bench": "weak_scaling",
         "api": "insitu_session",
@@ -208,6 +265,14 @@ def clustered_fanin(quick: bool = True, smoke: bool = False) -> dict:
         "steps": steps,
         "chunk": chunk,
         "cells": cells,
+        "contention_model": _fit_contention(cells),
+        "serial_baseline": serial,
+        "overlap_comparison": {
+            "fan_in": hi["fan_in"],
+            "overlap_steps_per_s": hi["steps_per_s"],
+            "serial_steps_per_s": serial["steps_per_s"],
+            "throughput_ratio": hi["steps_per_s"] / serial["steps_per_s"],
+        },
         "fanin_comparison": _fanin_comparison(cells),
     }
 
@@ -262,12 +327,21 @@ def run(quick: bool = True, json_path: str | None = None,
 
     rows = []
     for c in fanin["cells"]:
+        pred = c.get("predicted_steps_per_s")
         rows.append(Row(
             f"fig5/clustered/fanin{c['fan_in']}",
             1e6 / c["steps_per_s"],
             f"clients={c['clients']};db={c['db']};"
             f"steps_per_s={c['steps_per_s']:.1f};"
-            f"staged_per_chunk={c['staged_per_chunk']:.2f}"))
+            + (f"predicted_steps_per_s={pred:.1f};" if pred else "")
+            + f"staged_per_chunk={c['staged_per_chunk']:.2f}"))
+    ocmp = fanin.get("overlap_comparison")
+    if ocmp:
+        rows.append(Row(
+            f"fig5/clustered/overlap_vs_serial_fanin{ocmp['fan_in']}",
+            ocmp["throughput_ratio"],
+            f"overlap={ocmp['overlap_steps_per_s']:.1f};"
+            f"serial={ocmp['serial_steps_per_s']:.1f}"))
     if smoke:
         return rows
     return (measured_anchor() + structural_rows(quick) + rows

@@ -56,7 +56,29 @@ from .faults import FaultPlan
 from .store import TableSpec
 
 __all__ = ["Deployment", "Colocated", "Clustered", "split_devices",
+           "fan_in_ratio", "StagingPipeline",
            "make_colocated_1d", "make_clustered_1d", "make_clustered_2d"]
+
+
+def fan_in_ratio(n_clients: int, n_db: int) -> int:
+    """Clients per db shard — the paper's Fig.-5 contention knob.
+
+    Ceiling division: 3 clients over 2 db shards load the busiest shard
+    with 2, not 1 — the contention model cares about the *hottest* shard.
+    This is THE single source both ``Clustered.fan_in`` and the plan's
+    ``ComponentPlan.fan_in`` consult; floors at 1 when clients < shards.
+    """
+    return max(1, -(-int(n_clients) // max(1, int(n_db))))
+
+
+# jax.device_put grew buffer donation in 0.4.31; staging works (one extra
+# copy alive) without it, so feature-detect instead of pinning a version.
+try:
+    import inspect as _inspect
+    _DEVICE_PUT_DONATE = "donate" in _inspect.signature(
+        jax.device_put).parameters
+except Exception:  # pragma: no cover - signature introspection only
+    _DEVICE_PUT_DONATE = False
 
 
 def split_devices(devices=None, db_fraction: float = 0.25):
@@ -192,13 +214,22 @@ class Clustered(Deployment):
     ``slab_axis`` names a db-mesh axis to partition the slot axis over:
     the slab-sharded clustered data plane (``capacity/D`` slots per db
     shard; falls back to an unpartitioned slab when capacity does not
-    divide).
+    divide).  ``overlap`` enables the two-slot staging pipeline on the
+    fused put path: chunk N's cross-mesh reshard rides the async dispatch
+    queue while chunk N+1's collect-scan runs, and the masked insert of
+    chunk N happens one capture later (drained explicitly at capture end
+    and on fault-injected restage).
     """
 
     client_mesh: Mesh
     db_mesh: Mesh
     elem_spec: P = P()          # layout of an element across the db mesh
     slab_axis: str | None = None  # slot-partition the slab over this axis
+    overlap: bool = True        # double-buffer the fused staging hop
+    #: a fitted ``insitu.plan.ContentionModel`` (kept untyped — core must
+    #: not import the plan layer).  When set, the session's plan autotunes
+    #: the fused chunk from it and predicts producer steps/s per entry.
+    cost_model: object | None = None
 
     crosses_mesh: bool = True
     faults: FaultPlan | None = None
@@ -206,7 +237,7 @@ class Clustered(Deployment):
     def __post_init__(self):
         n_clients = int(np.prod(list(self.client_mesh.shape.values())))
         n_db = int(np.prod(list(self.db_mesh.shape.values())))
-        self.fan_in = max(1, n_clients // max(1, n_db))
+        self.fan_in = fan_in_ratio(n_clients, n_db)
         if self.slab_axis is not None:
             used = {a for entry in self.elem_spec if entry is not None
                     for a in ((entry,) if isinstance(entry, str)
@@ -270,13 +301,21 @@ class Clustered(Deployment):
         sh = NamedSharding(self.db_mesh, P(*([None] * lead), *es))
         return jax.device_put(values, sh)
 
-    def stage_chunk(self, keys, values, mask, spec: TableSpec | None = None):
+    def stage_chunk(self, keys, values, mask, spec: TableSpec | None = None,
+                    donate: bool = False):
         """ONE batched cross-mesh reshard for a whole fused-capture chunk:
         the stacked values ride with their keys and emit mask in a single
         ``jax.device_put`` — this is the clustered fused put's only
-        interconnect hop per dispatch."""
+        interconnect hop per dispatch.  ``device_put`` dispatches async;
+        the transfer overlaps whatever the host enqueues next.
+        ``donate=True`` (the overlap pipeline) releases the client-side
+        collect buffers to the transfer — they are never read again (a
+        fault-injected restage re-collects from the original carry)."""
         meta = NamedSharding(self.db_mesh, P())
         vsh = NamedSharding(self.db_mesh, P(None, *self._elem_spec_for(spec)))
+        if donate and _DEVICE_PUT_DONATE:
+            return jax.device_put((keys, values, mask), (meta, vsh, meta),
+                                  donate=True)
         return jax.device_put((keys, values, mask), (meta, vsh, meta))
 
     def stage_to_clients(self, x):
@@ -290,8 +329,47 @@ class Clustered(Deployment):
         return (f"clustered(clients={tuple(self.client_mesh.shape.items())}, "
                 f"db={tuple(self.db_mesh.shape.items())}, "
                 f"fan_in={self.fan_in}"
+                + (", overlap" if self.overlap else "")
                 + (f", slab_axis={self.slab_axis!r}"
                    if self.slab_axis else "") + ")")
+
+
+class StagingPipeline:
+    """Two-slot staging pipeline for the overlapped clustered put path.
+
+    Slot A (held here) is the *in-flight* chunk: its cross-mesh
+    ``stage_chunk`` transfer has been dispatched but its masked insert
+    has not.  Slot B is the chunk currently being collected on the
+    client mesh — it lives in the caller's hands until its own stage
+    dispatch, at which point ``swap`` retires slot A for insertion and
+    the freshly staged chunk becomes the new in-flight slot.  ``drain``
+    empties slot A without refilling it (capture end, or the
+    drain-on-restage flush after a fault-injected ``TransferDropped``).
+    Insert order is therefore exactly the collect order — the ring's
+    last-writer-wins semantics cannot observe the pipelining.
+    """
+
+    __slots__ = ("_in_flight",)
+
+    def __init__(self):
+        self._in_flight = None
+
+    @property
+    def pending(self) -> bool:
+        return self._in_flight is not None
+
+    def swap(self, staged):
+        """Retire the in-flight slot (returning it for insertion, or
+        ``None`` on the first chunk) and park ``staged`` in its place."""
+        prev = self._in_flight
+        self._in_flight = staged
+        return prev
+
+    def drain(self):
+        """Empty the in-flight slot without refilling it."""
+        prev = self._in_flight
+        self._in_flight = None
+        return prev
 
 
 def make_colocated_1d(axis: str = "data", mesh: Mesh | None = None,
@@ -307,21 +385,25 @@ def make_colocated_1d(axis: str = "data", mesh: Mesh | None = None,
 
 def make_clustered_1d(db_fraction: float = 0.25, axis: str = "data",
                       devices=None, elem_spec: P = P(),
-                      slab_axis: str | None = None,
+                      slab_axis: str | None = None, overlap: bool = True,
                       faults: FaultPlan | None = None) -> Clustered:
     """Convenience: split the visible devices into client/db 1-D meshes
-    (``split_devices``) and build the ``Clustered`` deployment over them."""
+    (``split_devices``) and build the ``Clustered`` deployment over them.
+    ``overlap=False`` restores the serial stage-then-insert put path
+    (the pre-pipeline baseline the parity tests and benches compare
+    against)."""
     client_devs, db_devs = split_devices(devices, db_fraction)
     return Clustered(
         client_mesh=Mesh(np.asarray(client_devs), (axis,)),
         db_mesh=Mesh(np.asarray(db_devs), (axis,)),
-        elem_spec=elem_spec, slab_axis=slab_axis, faults=faults)
+        elem_spec=elem_spec, slab_axis=slab_axis, overlap=overlap,
+        faults=faults)
 
 
 def make_clustered_2d(elem_spec: P, db_fraction: float = 0.5,
                       slab_axis: str = "slab", elem_axis: str = "space",
                       client_axis: str = "space", devices=None,
-                      slab_shards: int | None = None,
+                      slab_shards: int | None = None, overlap: bool = True,
                       faults: FaultPlan | None = None) -> Clustered:
     """Clustered deployment over a 2-D **(slab, element)** db mesh.
 
@@ -359,4 +441,5 @@ def make_clustered_2d(elem_spec: P, db_fraction: float = 0.5,
     return Clustered(
         client_mesh=Mesh(np.asarray(client_devs), (client_axis,)),
         db_mesh=Mesh(db_grid, (slab_axis, elem_axis)),
-        elem_spec=elem_spec, slab_axis=slab_axis, faults=faults)
+        elem_spec=elem_spec, slab_axis=slab_axis, overlap=overlap,
+        faults=faults)

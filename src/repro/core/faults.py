@@ -337,8 +337,9 @@ class FaultInjector:
 @dataclass
 class Overhead:
     """Per-component fault overhead: extra store dispatches (WAL replay
-    after a store restart), extra staged transfers (dropped/duplicated
-    chunk deliveries), verb retries, and component restarts."""
+    after a store restart, plus the drain-on-restage flush of the overlap
+    pipeline's surviving slot), extra staged transfers (dropped/
+    duplicated chunk deliveries), verb retries, and component restarts."""
 
     extra_ops: int = 0
     extra_staged: int = 0
@@ -361,7 +362,10 @@ def simulate_overhead(plan: FaultPlan, schedule, crosses_mesh: bool
 
     * producer per-verb: ``{kind, name, tier: "per_verb", table, steps,
       emit_every, ranks}``
-    * producer fused: ``{kind, name, tier, table, n_chunks}``
+    * producer fused: ``{kind, name, tier, table, n_chunks, overlap}``
+      (``overlap`` walks the two-slot staging pipeline: each chunk
+      commits one capture late, a drop flushes the surviving slot, the
+      final drain commits the last chunk)
     * trainer: ``{kind, name, tier, table, epochs, bootstrap}``
     * inference: ``{kind, name, tier, steps}``
     * serving clients: ``{kind, name, tier, table, results, requests,
@@ -423,6 +427,37 @@ def simulate_overhead(plan: FaultPlan, schedule, crosses_mesh: bool
             break
         _commit(o, table)
 
+    def _overlap_capture(o: Overhead, table: str, pending: bool) -> bool:
+        # mirrors the two-slot pipeline in Client.capture_scan: verb
+        # attempt, then THIS chunk's staging attempt (hop paid before the
+        # drop check, dup pays one more).  A drop triggers the drain-on-
+        # restage flush — the surviving in-flight slot commits in its own
+        # recovery dispatch — before the retry re-collects and re-stages.
+        # A successful stage swaps slots: the PREVIOUS chunk commits in
+        # this capture, the new chunk becomes the in-flight slot.
+        while True:
+            try:
+                inj.on_verb("capture", table)
+            except StoreUnavailable:
+                o.retries += 1
+                continue
+            try:
+                dup = inj.on_stage(table)
+            except TransferDropped:
+                o.retries += 1
+                if crosses_mesh:
+                    o.extra_staged += 1
+                if pending:
+                    o.extra_ops += 1      # the drain-on-restage dispatch
+                    _commit(o, table)
+                    pending = False
+                continue
+            if dup and crosses_mesh:
+                o.extra_staged += 1
+            if pending:
+                _commit(o, table)
+            return True
+
     def _serve_chunk(o: Overhead, table: str) -> None:
         # mirrors Client.serve_batch: verb attempt, then the injector's
         # stage hook on the results table (a drop retries the whole fused
@@ -462,9 +497,19 @@ def simulate_overhead(plan: FaultPlan, schedule, crosses_mesh: bool
                         _verb(o, "put", comp["table"])
                         _commit(o, comp["table"])
         elif kind == "producer":
-            for i in range(comp["n_chunks"]):
-                _crash_point(o, comp["name"], i)
-                _logged_capture(o, comp["table"])
+            if comp.get("overlap"):
+                pending = False
+                for i in range(comp["n_chunks"]):
+                    _crash_point(o, comp["name"], i)
+                    pending = _overlap_capture(o, comp["table"], pending)
+                if pending:
+                    # the capture-end drain: its dispatch is part of the
+                    # base plan (("drain", 1)), only its commit walks here
+                    _commit(o, comp["table"])
+            else:
+                for i in range(comp["n_chunks"]):
+                    _crash_point(o, comp["name"], i)
+                    _logged_capture(o, comp["table"])
         elif kind == "trainer":
             if comp["bootstrap"]:
                 _verb(o, "sample", comp["table"])

@@ -51,7 +51,27 @@ from .faults import (FaultInjector, FaultPlan, StoreTimeout,
                      WatermarkTimeout)
 from .telemetry import Timers, poll_backoff
 
-__all__ = ["StoreServer", "CaptureTxn"]
+__all__ = ["StoreServer", "CaptureTxn", "PendingChunk"]
+
+
+class PendingChunk:
+    """An in-flight slot of the overlap staging pipeline.
+
+    The chunk's cross-mesh ``stage_chunk`` transfer has been dispatched
+    (and its wire crossing counted), but its masked insert has not run
+    yet — ``keys``/``values``/``mask`` are the *staged* (db-placed)
+    arrays, so the deferred :meth:`StoreServer.insert_chunk` is a pure
+    db-mesh dispatch with no further interconnect traffic.
+    """
+
+    __slots__ = ("chunk_id", "keys", "values", "mask", "puts")
+
+    def __init__(self, chunk_id: tuple, keys, values, mask, puts: int):
+        self.chunk_id = chunk_id
+        self.keys = keys
+        self.values = values
+        self.mask = mask
+        self.puts = puts
 
 
 class CaptureTxn:
@@ -289,6 +309,57 @@ class StoreServer:
             if crossing:
                 self._bump_staged()
             assert chunk_id in self._acked
+
+    def stage_chunk_logged(self, table: str, chunk_id: tuple,
+                           keys, values, mask, puts: int) -> PendingChunk:
+        """First half of the overlapped exactly-once apply —
+        :meth:`apply_chunk` split at the wire: pay the crossing, consult
+        the injector, start the async cross-mesh transfer (donating the
+        client-side collect buffers), and hand back the in-flight
+        :class:`PendingChunk` for the client's two-slot pipeline.
+
+        Staged-transfer accounting is identical to the serial path and
+        counts once per *wire crossing*, at stage time: a dropped
+        transfer already paid its hop (the restage after the drain-on-
+        restage flush pays again, because the chunk crosses again), a
+        duplicated delivery pays one extra, and the deferred insert —
+        however many capture dispatches later it lands — never counts.
+        That is what keeps ``predicted == stats()`` exact with two slots
+        in flight.
+        """
+        spec = self._specs[table]
+        dep = self.deployment
+        crossing = dep is not None and dep.crosses_mesh
+        if crossing:
+            self._bump_staged()
+        # may raise TransferDropped (hop already paid, nothing in flight)
+        dup = self.faults.on_stage(table) if self.faults is not None \
+            else False
+        if crossing:
+            keys, values, mask = dep.stage_chunk(keys, values, mask, spec,
+                                                 donate=True)
+        if dup and crossing:
+            self._bump_staged()
+        return PendingChunk(chunk_id, keys, values, mask, puts)
+
+    def insert_chunk(self, table: str, txn: CaptureTxn,
+                     pending: PendingChunk) -> None:
+        """Second half of the overlapped apply: the masked insert of an
+        in-flight staged chunk, inside the caller's capture txn.
+        Deduplicated by the ack set exactly like :meth:`apply_chunk`
+        (``put_masked`` is last-writer-wins but not idempotent), and
+        WAL-logged with the staged arrays so a restart replays it
+        byte-identically."""
+        if pending.chunk_id in self._acked:
+            return
+        spec = self._specs[table]
+        txn.state = S.put_masked(spec, txn.state, pending.keys,
+                                 pending.values, pending.mask)
+        txn.puts += pending.puts
+        self._acked.add(pending.chunk_id)
+        if self.wal_enabled:
+            self._wal[table].append(("chunk", (pending.keys, pending.values,
+                                               pending.mask), pending.puts))
 
     def _after_commit(self, table: str) -> None:
         """Injected-operator actions at a commit boundary: a declared

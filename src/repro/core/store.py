@@ -104,6 +104,7 @@ __all__ = [
     "capture_emit_count",
     "capture_emit_count_multi",
     "bucket_length",
+    "MIN_BUCKET",
     "sample_and_step",
     "make_clustered_gather",
 ]
@@ -573,7 +574,15 @@ def valid_count(spec: TableSpec, state: TableState) -> jax.Array:
 # Fused producer/consumer steps (the in-situ capture fast path)
 # ---------------------------------------------------------------------------
 
-def bucket_length(length: int, min_bucket: int = 8) -> int:
+#: The data plane's bucket floor: the smallest power-of-two bucket a fused
+#: chunk pads to.  THE single source — the plan's ``default_chunk`` /
+#: autotuner derive their floors from this constant instead of re-deriving
+#: an ``8`` of their own, so predicted compile-cache hits cannot drift
+#: from actual bucketing.
+MIN_BUCKET = 8
+
+
+def bucket_length(length: int, min_bucket: int = MIN_BUCKET) -> int:
     """Round a chunk length up to the next power-of-two bucket.
 
     Chunked ``capture_scan`` drivers compile one executable per distinct

@@ -57,11 +57,13 @@ from typing import Any
 
 from ..analysis.hlo import COLLECTIVE_OPS
 from ..core import store as S
+from ..core.deployment import fan_in_ratio
 
 __all__ = [
     "PRODUCER_TIERS", "TRAINER_TIERS", "INFERENCE_TIERS", "SERVING_TIERS",
     "producer_tier", "trainer_tier", "inference_tier", "serving_tier",
-    "default_chunk", "ComponentPlan", "Plan",
+    "default_chunk", "autotune_chunk", "ContentionModel", "fan_in_ratio",
+    "ComponentPlan", "Plan",
     "producer_dispatches", "trainer_dispatches", "inference_dispatches",
     "producer_staged", "trainer_staged", "inference_staged",
     "clients_dispatches", "clients_staged",
@@ -186,8 +188,132 @@ def serving_tier(comp) -> str:
 
 
 def default_chunk(emit_every: int) -> int:
-    """The fused producer's default chunk length (steps per dispatch)."""
-    return max(8 * emit_every, 8)
+    """The fused producer's default chunk length (steps per dispatch):
+    one bucket floor's worth of emissions (``store.MIN_BUCKET`` — the
+    SAME constant the data plane's ``store.bucket_length`` pads to, so
+    the default chunk always lands exactly on a bucket boundary and the
+    plan's compile-cache prediction cannot drift from actual
+    bucketing)."""
+    return max(S.MIN_BUCKET * emit_every, S.MIN_BUCKET)
+
+
+@dataclass(frozen=True)
+class ContentionModel:
+    """The fan-in contention model: predicted producer throughput
+    (steps/s) as a function of the clients-per-shard ``fan_in`` ratio,
+    fitted from a measured dispatch-cost sweep.
+
+    The model is the paper's Fig.-5 story made quantitative: per step,
+    the clustered fused tier pays a base cost (solver compute + its
+    share of the per-chunk collect/insert dispatch overhead) plus a
+    staging term proportional to how many clients contend for the
+    busiest db shard,
+
+        t_step(fan_in) = t_base + k_fanin * fan_in
+        steps_per_s    = 1 / t_step
+
+    ``k_fanin`` is the marginal per-step cost of one more client per
+    shard (staged bytes / effective shard bandwidth); its *sign* is
+    fitted, not assumed — on emulated single-host meshes more db devices
+    can cost more than shard contention saves, and the model reports
+    what the wire measured.  ``fit`` is an ordinary least-squares line
+    through ``(fan_in, 1/steps_per_s)`` sweep cells; ``residual``
+    reports the worst relative throughput error over the cells it was
+    fitted from (the bench gate).
+    """
+
+    t_base: float               # seconds/step at fan_in -> 0
+    k_fanin: float              # marginal seconds/step per fan-in unit
+    step_bytes: float = 0.0     # staged payload bytes per producer step
+    #: fixed per-capture host overhead (seconds/dispatch) from the
+    #: measured dispatch-cost curve — the autotuner's amortization term.
+    t_dispatch: float = 0.0
+
+    @classmethod
+    def fit(cls, cells) -> "ContentionModel":
+        """Least-squares fit from sweep cells — any iterable of mappings
+        with ``fan_in`` and ``steps_per_s`` (and optionally
+        ``step_bytes``).  Needs >= 2 distinct fan-in points."""
+        pts = sorted({(float(c["fan_in"]), 1.0 / float(c["steps_per_s"]))
+                      for c in cells})
+        xs = [x for x, _ in pts]
+        ys = [y for _, y in pts]
+        if len(set(xs)) < 2:
+            raise ValueError(
+                f"contention fit needs >= 2 distinct fan_in points, got "
+                f"{sorted(set(xs))}")
+        n = float(len(xs))
+        mx, my = sum(xs) / n, sum(ys) / n
+        sxx = sum((x - mx) ** 2 for x in xs)
+        sxy = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
+        k = sxy / sxx
+        bites = [float(c.get("step_bytes", 0.0)) for c in cells]
+        return cls(t_base=my - k * mx, k_fanin=k,
+                   step_bytes=max(bites) if bites else 0.0)
+
+    def predict_steps_per_s(self, fan_in: int) -> float:
+        t = self.t_base + self.k_fanin * float(fan_in)
+        if t <= 0:
+            # an extrapolation below the fitted range hit the axis — the
+            # model has nothing honest to say there
+            raise ValueError(
+                f"contention model predicts non-positive step time "
+                f"{t:.3g}s at fan_in={fan_in} (t_base={self.t_base:.3g}, "
+                f"k_fanin={self.k_fanin:.3g}) — fit covers too narrow a "
+                f"sweep to extrapolate this far")
+        return 1.0 / t
+
+    def residual(self, cells) -> float:
+        """Worst relative throughput error of the fitted line over
+        ``cells`` (the bench gate's fit-quality number)."""
+        return max(abs(self.predict_steps_per_s(c["fan_in"])
+                       / float(c["steps_per_s"]) - 1.0) for c in cells)
+
+
+def autotune_chunk(emit_every: int, model: ContentionModel | None = None,
+                   dispatch_cost: float | None = None,
+                   steps: int | None = None,
+                   fan_in: int = 1, max_chunk: int = 512) -> int:
+    """Pick the fused producer's chunk length from the fitted cost model.
+
+    Candidates are the power-of-two bucket boundaries from the data
+    plane's floor upward (``store.bucket_length`` over ``store.
+    MIN_BUCKET`` emissions — the same bucket grid the executables compile
+    on, so the tuned chunk is always cache-exact); the winner minimizes
+    the model's predicted wall time for the whole ``steps``-step run:
+
+        ceil(steps/chunk) * (dispatch_cost + chunk * t_step(fan_in))
+        + dispatch_cost                                  # the drain
+
+    A costlier measured dispatch pushes toward longer chunks (fewer
+    captures to pay for); a longer chunk wastes bucket-padded tail steps
+    (the scan runs the full bucket, masked or not), which pulls back
+    toward the floor.  Without a fitted model this is exactly
+    :func:`default_chunk` — the static ``max(8 * emit_every, 8)`` floor
+    the autotuner replaces, kept as the un-fitted fallback.
+    """
+    if model is None:
+        return default_chunk(emit_every)
+    if dispatch_cost is None:
+        dispatch_cost = model.t_dispatch
+    try:
+        t_step = 1.0 / model.predict_steps_per_s(fan_in)
+    except ValueError:
+        # fan_in outside the fitted sweep: fall back to the static floor
+        return default_chunk(emit_every)
+    total = int(steps) if steps else max_chunk
+    floor = S.bucket_length(S.MIN_BUCKET * emit_every)
+    candidates = []
+    c = floor
+    while c <= max(floor, max_chunk):
+        candidates.append(c)
+        c *= 2
+
+    def wall(n: int) -> float:
+        n_chunks = -(-total // n)
+        return n_chunks * (dispatch_cost + n * t_step) + dispatch_cost
+
+    return min(candidates, key=wall)
 
 
 def _pred(**nonzero: bool) -> tuple[tuple[str, bool], ...]:
@@ -316,6 +442,14 @@ class ComponentPlan:
     #: exactly against ``stats()["model_swaps"]``.  0 everywhere but the
     #: continuous-batching serving tier.
     swaps: int = 0
+    #: clients per db shard for THIS component's staged traffic
+    #: (``fan_in_ratio`` — the same ceiling-division source
+    #: ``Clustered.fan_in`` uses; 1 off clustered).
+    fan_in: int = 1
+    #: the contention model's predicted throughput for this component
+    #: (producer steps/s at its ``fan_in``), resolved only when the
+    #: session's deployment carries a fitted :class:`ContentionModel`.
+    predicted_steps_per_s: float | None = None
 
     @property
     def store_dispatches(self) -> int:
@@ -358,9 +492,17 @@ class ComponentPlan:
                 out["chunk"] = self.chunk
                 out["bucketed"] = self.bucketed
                 if self.staged:
-                    # THE clustered fused claim: one hop per chunk dispatch
+                    # THE clustered fused claim: one hop per chunk capture
+                    # (the overlap pipeline's final drain dispatch stages
+                    # nothing, so it divides by captures, not dispatches)
+                    captures = dict(self.dispatches).get(
+                        "capture", self.store_dispatches)
                     out["staged_per_chunk"] = \
-                        self.staged_transfers / max(1, self.store_dispatches)
+                        self.staged_transfers / max(1, captures)
+            if self.staged:
+                out["fan_in"] = self.fan_in
+            if self.predicted_steps_per_s is not None:
+                out["predicted_steps_per_s"] = self.predicted_steps_per_s
         if self.kind == "trainer":
             d = dict(self.dispatches)
             out["dispatches_per_epoch"] = \
@@ -491,16 +633,23 @@ class Plan:
 # ---------------------------------------------------------------------------
 
 def producer_dispatches(tier: str, steps: int, emit_every: int,
-                        ranks: int, chunk: int) -> tuple[tuple[str, int], ...]:
+                        ranks: int, chunk: int, overlap: bool = False
+                        ) -> tuple[tuple[str, int], ...]:
     """Predicted store dispatches of a producer run, by cause.
 
     Per-verb: one ``put`` per rank per emitting step.  Fused: one capture
     per chunk (``ceil(steps / chunk)``) — bucketing pads executables, not
-    dispatches.
+    dispatches.  ``overlap`` (the clustered two-slot staging pipeline)
+    adds the ONE capture-end drain dispatch that inserts the final
+    in-flight chunk — every chunk's insert runs one capture late, so the
+    last one needs its own flush.
     """
     if tier == "per_verb":
         return (("put", ranks * S.capture_emit_count(steps, emit_every)),)
-    return (("capture", -(-steps // chunk)),)
+    out = (("capture", -(-steps // chunk)),)
+    if overlap and steps > 0:
+        out += (("drain", 1),)
+    return out
 
 
 def trainer_dispatches(tier: str, epochs: int, bootstrap: bool

@@ -234,7 +234,15 @@ class InSituSession:
         for comp in self.components:
             if isinstance(comp, Producer):
                 tier = P.producer_tier(comp)
-                chunk = comp.chunk or P.default_chunk(comp.emit_every)
+                # the two-slot staging pipeline only exists on the fused
+                # crossing path (per-verb puts stage per element)
+                overlap = crosses and tier != "per_verb" \
+                    and getattr(self.deployment, "overlap", False)
+                fan_in = self.deployment.fan_in if crosses else 1
+                cost_model = getattr(self.deployment, "cost_model", None)
+                chunk = comp.chunk or P.autotune_chunk(
+                    comp.emit_every, cost_model, steps=comp.steps,
+                    fan_in=fan_in)
                 if tier == "per_verb":
                     schedule.append({
                         "kind": "producer", "name": comp.name, "tier": tier,
@@ -243,7 +251,7 @@ class InSituSession:
                 else:
                     schedule.append({
                         "kind": "producer", "name": comp.name, "tier": tier,
-                        "table": comp.table,
+                        "table": comp.table, "overlap": overlap,
                         "n_chunks": -(-comp.steps // chunk)})
                 if tier == "capture_scan_sharded":
                     # the sharded chunk legitimately contains the solver's
@@ -255,14 +263,23 @@ class InSituSession:
                         and not crosses)
                 else:
                     pred = put_pred
+                predicted_sps = None
+                if cost_model is not None and tier != "per_verb":
+                    try:
+                        predicted_sps = cost_model.predict_steps_per_s(
+                            fan_in)
+                    except ValueError:
+                        pass    # fan_in outside the fitted sweep: no claim
                 entries.append(P.ComponentPlan(
                     name=comp.name, kind="producer", tier=tier,
                     table=comp.table, ranks=comp.ranks, steps=comp.steps,
                     chunk=0 if tier == "per_verb" else chunk,
                     bucketed=comp.bucket and tier != "per_verb",
+                    fan_in=fan_in,
+                    predicted_steps_per_s=predicted_sps,
                     dispatches=P.producer_dispatches(
                         tier, comp.steps, comp.emit_every, comp.ranks,
-                        chunk),
+                        chunk, overlap=overlap),
                     staged=P.producer_staged(
                         tier, comp.steps, comp.emit_every, comp.ranks,
                         chunk, crosses),
@@ -789,6 +806,10 @@ class InSituSession:
                 done += k
                 if time.perf_counter() - it0 > pol.max_step_s:
                     client.straggler_events += 1
+            # capture end: flush the overlap pipeline's in-flight chunk
+            # (the plan's ONE predicted "drain" dispatch; a no-op — and
+            # not dispatched — off the overlapped clustered path)
+            client.drain_captures(comp.table)
             client.put_metadata("sim_done", True)
             return ProducerOutput(steps=done)
         return fn

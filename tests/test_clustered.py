@@ -151,17 +151,23 @@ class TestStagedTelemetry:
 
     def test_fused_chunk_stages_once(self):
         srv = self._clustered_server()
-        Client(srv).capture_scan("t", _step, jnp.zeros(()), 10,
-                                 emit_every=2)
+        cli = Client(srv)
+        cli.capture_scan("t", _step, jnp.zeros(()), 10, emit_every=2)
         st = srv.stats()
         assert st["staged_transfers"] == 1      # ONE hop for 5 puts
-        assert st["op_count"] == 1
+        # overlap holds the (sole) chunk in the pipeline: the hop is paid
+        # but the insert waits for the drain at end-of-capture.
+        cli.drain_captures("t")
+        st = srv.stats()
+        assert st["staged_transfers"] == 1      # drain inserts, never stages
+        assert st["op_count"] == 2              # capture + drain flush
         assert srv.watermark("t") == 5 == srv.watermark_device("t")
 
     def test_fused_chunk_equals_colocated_replay(self):
         srv = self._clustered_server()
-        Client(srv).capture_scan("t", _step, jnp.zeros(()), 10,
-                                 emit_every=2)
+        cli = Client(srv)
+        cli.capture_scan("t", _step, jnp.zeros(()), 10, emit_every=2)
+        cli.drain_captures("t")
         srv2 = StoreServer()
         srv2.create_table(TableSpec("t", shape=(3,), capacity=8))
         Client(srv2).capture_scan("t", _step, jnp.zeros(()), 10,
@@ -213,17 +219,28 @@ class TestDeploymentEdges:
         clients, db = split_devices([42], db_fraction=0.5)
         assert clients == db == [42]               # degenerate shared
 
-    def test_fan_in_floor_division(self):
-        """fan_in floors at 1 when clients < db shards."""
+    def test_fan_in_ceiling_division(self):
+        """fan_in is the BUSIEST shard's client count — ceiling division
+        (the old floor quietly reported 1 for 3 clients on 2 shards),
+        flooring at 1 when clients < db shards.  The plan's
+        ``ComponentPlan.fan_in`` must agree with the deployment on every
+        non-divisible split because both call ``fan_in_ratio``."""
+        from repro.core.deployment import fan_in_ratio
+        from repro.insitu import plan as P
         def fake_mesh(n):
             return SimpleNamespace(shape={"data": n})
         dep = Clustered.__new__(Clustered)
-        for clients, db, expect in [(1, 3, 1), (3, 1, 3), (7, 2, 3),
-                                    (4, 4, 1)]:
+        dep.elem_spec = ()
+        dep.slab_axis = None
+        for clients, db, expect in [(1, 3, 1), (3, 1, 3), (3, 2, 2),
+                                    (7, 2, 4), (4, 4, 1), (5, 3, 2)]:
             dep.client_mesh = fake_mesh(clients)
             dep.db_mesh = fake_mesh(db)
             dep.__post_init__()
             assert dep.fan_in == expect, (clients, db, dep.fan_in)
+            # plan == deployment: one ceiling-division source for both
+            assert P.fan_in_ratio(clients, db) == dep.fan_in
+        assert P.fan_in_ratio is fan_in_ratio
 
     def test_deployment_star_exports_helpers(self):
         """Regression: ``make_colocated_1d`` was missing from __all__ —
@@ -301,6 +318,87 @@ class TestBackoffDeadlines:
         assert srv.wait_watermark("t", 1, timeout=5.0)
 
 
+class TestOverlapPipeline:
+    """Double-buffered staging (chunk N's reshard overlapped with chunk
+    N+1's collect-scan) must be byte-identical to serial staging across
+    {divisible, masked-tail} captures x {ring wrap, no wrap} x chaos
+    restage — same table leaves, same watermark, same staged hops; the
+    pipeline only adds drain dispatches, never data differences."""
+
+    def _run(self, overlap, *events, capacity=16, length=8, emit_every=2,
+             n_chunks=3):
+        from repro.core.faults import FaultEvent, FaultPlan, RetryPolicy
+        plan = FaultPlan(events=tuple(events),
+                         retry=RetryPolicy(interval=1e-4,
+                                           max_interval=1e-3))
+        srv = StoreServer(make_clustered_1d(overlap=overlap), faults=plan)
+        srv.create_table(TableSpec("t", shape=(3,), capacity=capacity))
+        cli = Client(srv)
+        for i in range(n_chunks):
+            cli.capture_scan("t", _step, jnp.zeros(()), length,
+                             emit_every=emit_every, t0=i * length)
+        cli.drain_captures("t")
+        return srv, cli
+
+    def _assert_parity(self, **kw):
+        ov_srv, ov_cli = self._run(True, **kw)
+        se_srv, se_cli = self._run(False, **kw)
+        assert ov_srv.watermark("t") == se_srv.watermark("t")
+        _assert_states_equal(ov_srv.checkout("t"), se_srv.checkout("t"))
+        ov, se = ov_srv.stats(), se_srv.stats()
+        # one hop per wire crossing, identically in both schedules
+        assert ov["staged_transfers"] == se["staged_transfers"]
+        return ov_srv, se_srv, ov_cli, se_cli
+
+    def test_divisible_no_wrap(self):
+        # 3 chunks x 4 puts, capacity 16: exact buckets, no ring wrap
+        ov, se, *_ = self._assert_parity(capacity=16, length=8,
+                                         emit_every=2)
+        assert ov.watermark("t") == 12
+        assert ov.stats()["staged_transfers"] == 3
+        # overlap costs exactly the end-of-capture drain flush
+        assert ov.stats()["op_count"] == se.stats()["op_count"] + 1
+
+    def test_masked_tail_no_wrap(self):
+        # length 7, emit_every 2 -> 4 live rows + a masked bucket tail
+        ov, *_ = self._assert_parity(capacity=16, length=7, emit_every=2)
+        assert ov.watermark("t") == 11
+
+    def test_divisible_ring_wrap(self):
+        # 12 puts into capacity 4: wraps twice, last writer wins
+        ov, *_ = self._assert_parity(capacity=4, length=8, emit_every=2)
+        assert ov.watermark("t") == 12
+        assert int(ov.checkout("t").count) == 12
+
+    def test_masked_tail_ring_wrap(self):
+        ov, *_ = self._assert_parity(capacity=4, length=7, emit_every=2)
+        assert ov.watermark("t") == 11
+
+    def test_chaos_restage_parity(self):
+        """A dropped transfer mid-pipeline forces the drain-on-restage
+        flush; a later duplicate is deduped by the ack set.  Both
+        schedules retry under the same chunk id and land byte-identical
+        to each other and to the fault-free run."""
+        from repro.core.faults import FaultEvent
+        events = (FaultEvent("drop_chunk", table="t", at=1),
+                  FaultEvent("dup_chunk", table="t", at=3))
+        ov, se, ov_cli, se_cli = self._assert_parity(capacity=8, length=8,
+                                                     emit_every=2,
+                                                     n_chunks=3)
+        base_wm = ov.watermark("t")
+        ov_srv, ov_cli2 = self._run(True, *events, capacity=8)
+        se_srv, se_cli2 = self._run(False, *events, capacity=8)
+        assert ov_cli2.retries == 1 == se_cli2.retries
+        assert ov_srv.stats()["faults_injected"] == 2
+        assert ov_srv.watermark("t") == se_srv.watermark("t") == base_wm
+        _assert_states_equal(ov_srv.checkout("t"), se_srv.checkout("t"))
+        _assert_states_equal(ov_srv.checkout("t"), ov.checkout("t"))
+        # drop pays its hop again on retry, dup pays one extra: +2 hops,
+        # identically in both schedules
+        assert ov_srv.stats()["staged_transfers"] == 5
+        assert se_srv.stats()["staged_transfers"] == 5
+
+
 @pytest.mark.slow
 def test_clustered_core_real_split_mesh():
     """The core clustered mechanics on a REAL 4-device split (2 clients +
@@ -341,11 +439,14 @@ def test_clustered_core_real_split_mesh():
         db_ids = sorted(d.id for d in dep.db_mesh.devices.ravel())
         assert sorted(set(devs)) == db_ids, (devs, db_ids)
 
-        # fused chunk: ONE staged hop, byte-identical to local replay
-        Client(srv).capture_scan("t", step, jnp.zeros(()), 10,
-                                 emit_every=2)
+        # fused chunk: ONE staged hop, byte-identical to local replay.
+        # Overlap parks the chunk in the two-slot pipeline; draining
+        # flushes it in one extra store op without re-staging.
+        cli = Client(srv)
+        cli.capture_scan("t", step, jnp.zeros(()), 10, emit_every=2)
+        cli.drain_captures("t")
         st = srv.stats()
-        assert st["staged_transfers"] == 1 and st["op_count"] == 1
+        assert st["staged_transfers"] == 1 and st["op_count"] == 2
         srv2 = StoreServer()
         srv2.create_table(TableSpec("t", shape=(8,), capacity=8))
         Client(srv2).capture_scan("t", step, jnp.zeros(()), 10,

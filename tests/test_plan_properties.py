@@ -553,6 +553,102 @@ def test_serving_chaos_grid(deployment):
                 f"serving chaos seed {seed} ({deployment}): {e}") from e
 
 
+class TestContentionModel:
+    """The fitted fan-in contention model and the chunk autotuner it
+    drives: exact line recovery, honest extrapolation refusal, and the
+    plan threading (``fan_in`` / ``predicted_steps_per_s`` in
+    ``explain()``, autotuned chunk replacing the static floor)."""
+
+    def _cells(self, t_base=0.01, k=0.002, fan_ins=(1, 2, 4)):
+        from repro.insitu import plan as P
+        return [{"fan_in": f, "steps_per_s": 1.0 / (t_base + k * f),
+                 "step_bytes": 128.0} for f in fan_ins], P
+
+    def test_fit_recovers_exact_line(self):
+        cells, P = self._cells()
+        m = P.ContentionModel.fit(cells)
+        assert abs(m.t_base - 0.01) < 1e-12
+        assert abs(m.k_fanin - 0.002) < 1e-12
+        assert m.step_bytes == 128.0
+        assert m.residual(cells) < 1e-9
+        for c in cells:
+            assert abs(m.predict_steps_per_s(c["fan_in"])
+                       - c["steps_per_s"]) < 1e-6
+
+    def test_fit_sign_is_measured_not_assumed(self):
+        # emulated meshes can run FASTER at higher fan_in (fewer db
+        # devices to coordinate) — the slope must come out negative
+        cells, P = self._cells(t_base=0.02, k=-0.001)
+        m = P.ContentionModel.fit(cells)
+        assert m.k_fanin < 0
+
+    def test_fit_needs_two_distinct_points(self):
+        cells, P = self._cells(fan_ins=(3, 3))
+        with pytest.raises(ValueError, match="distinct fan_in"):
+            P.ContentionModel.fit(cells)
+
+    def test_predict_refuses_axis_crossing_extrapolation(self):
+        _, P = self._cells()
+        m = P.ContentionModel(t_base=0.01, k_fanin=-0.004)
+        with pytest.raises(ValueError, match="non-positive"):
+            m.predict_steps_per_s(4)    # 0.01 - 0.016 < 0
+
+    def test_autotune_fallbacks_and_floor(self):
+        _, P = self._cells()
+        # no model: exactly the static default (the old hardcoded floor)
+        assert P.autotune_chunk(2) == P.default_chunk(2) \
+            == S.MIN_BUCKET * 2
+        # extrapolation outside the fitted sweep: same honest fallback
+        m = P.ContentionModel(t_base=0.01, k_fanin=-0.004)
+        assert P.autotune_chunk(2, m, fan_in=4) == P.default_chunk(2)
+
+    def test_autotune_amortizes_dispatch_cost(self):
+        _, P = self._cells()
+        cheap = P.ContentionModel(t_base=1e-3, k_fanin=0.0,
+                                  t_dispatch=1e-6)
+        dear = P.ContentionModel(t_base=1e-3, k_fanin=0.0,
+                                 t_dispatch=1.0)
+        lo = P.autotune_chunk(1, cheap, steps=72)
+        hi = P.autotune_chunk(1, dear, steps=72)
+        # costly dispatches push toward longer chunks (fewer captures)
+        assert lo < hi <= 512
+        # every candidate sits on the compile-cache bucket grid
+        for c in (lo, hi):
+            assert c == S.bucket_length(c)
+        # near-free dispatch: nothing to amortize, stay on the floor
+        assert lo == S.bucket_length(S.MIN_BUCKET)
+
+    def test_plan_threads_model_into_explain_and_chunk(self):
+        from repro.insitu import plan as P
+        m = P.ContentionModel(t_base=1e-3, k_fanin=0.0, t_dispatch=0.05)
+        dep = make_clustered_1d()
+        dep.cost_model = m
+        sess = InSituSession(
+            tables=[TableSpec("field", shape=(4, N), capacity=16,
+                              engine="ring")],
+            components=[Producer(_step, table="field", steps=12, ranks=1,
+                                 carry=jnp.zeros(()), emit_every=1)],
+            deployment=dep)
+        plan = sess.plan()
+        entry = plan.component("producer")
+        # chunk autotuned from the fitted model, not the static floor —
+        # 0.05s/dispatch over 12 steps amortizes into ONE chunk
+        assert entry.chunk == P.autotune_chunk(1, m, steps=12,
+                                               fan_in=dep.fan_in)
+        assert entry.chunk > P.default_chunk(1)
+        ex = entry.explain()
+        assert ex["fan_in"] == dep.fan_in == 1
+        assert ex["predicted_steps_per_s"] \
+            == pytest.approx(m.predict_steps_per_s(1))
+        # predictions stay exact when the autotuned plan actually runs
+        res = sess.run(plan=plan, sequential=True, max_wall_s=240)
+        assert res.ok
+        stats = res.server.stats()
+        assert stats["op_count"] == plan.store_dispatches
+        assert stats["staged_transfers"] == plan.staged_transfers
+        assert dict(entry.dispatches) == {"capture": 1, "drain": 1}
+
+
 class TestSlabShardedResolution:
     """Fast (non-slow) tier-rule checks for the new slab-sharded tier."""
 
@@ -733,15 +829,23 @@ class TestShardedProducerExactness:
         res = sess.run(plan=plan, sequential=True, max_wall_s=240)
         assert res.ok, {k: v.error for k, v in res.run.components.items()}
         stats = res.server.stats()
+        clustered = deployment in ("clustered", "clustered_2d")
+        # ceil(12 / 4) captures; the overlapped clustered cells pay one
+        # extra capture-end drain dispatch to flush the pipeline
+        expect_ops = 4 if clustered else 3
         assert stats["op_count"] == plan.store_dispatches \
-            == entry.store_dispatches == 3          # ceil(12 / 4)
+            == entry.store_dispatches == expect_ops
         assert stats["staged_transfers"] == plan.staged_transfers
-        if deployment in ("clustered", "clustered_2d"):
-            # ONE hop per chunk — the staged/chunk invariant
+        if clustered:
+            # ONE hop per chunk — the staged/chunk invariant; the drain
+            # inserts without re-staging, so it must not dilute the ratio
             assert entry.staged == (("chunk_stage", 3),)
+            assert dict(entry.dispatches) == {"capture": 3, "drain": 1}
             assert entry.explain()["staged_per_chunk"] == 1.0
+            assert entry.fan_in == res.server.deployment.fan_in
         else:
             assert plan.staged_transfers == 0
+            assert entry.fan_in == 1
         assert res.server.watermark("field") == 12 \
             == res.server.watermark_device("field")
 

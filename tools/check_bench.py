@@ -45,16 +45,23 @@ For the sharded-epoch bench the gates are the data-plane claims:
 
 For the weak-scaling bench the gates are the clustered data-plane claims:
 
-* **Structural** (hard): every fan-in cell performs exactly ONE
-  cross-mesh staged transfer per ``capture_scan`` chunk
-  (``staged_per_chunk == 1.0``), and the measured
+* **Structural** (hard): every fan-in cell (overlap sweep AND the
+  serial baseline) performs exactly ONE cross-mesh staged transfer per
+  ``capture_scan`` chunk (``staged_per_chunk == 1.0``), the measured
   ``staged_transfers`` / ``op_count`` equal the plan's predictions —
   the fused clustered producer must never degrade back to per-element
-  hops.
-* **Performance** (same-run band, like fig10): the highest:lowest
+  hops — and overlap cells show exactly ``chunks + 1`` dispatches (the
+  one capture-end drain; more means the two-slot pipeline is flushing
+  early).
+* **Performance** (same-run bands, like fig10): the highest:lowest
   fan-in ``throughput_ratio`` must stay above ``1 - 2*tol`` — producer
   work is identical across cells, so a collapsing ratio means the
-  fan-in path started paying per-element costs.
+  fan-in path started paying per-element costs; the overlap:serial
+  ratio at the most contended cell must stay above the same floor (the
+  pipeline must never cost throughput); and the fitted contention
+  model must both fit (``fit_residual <= 2*tol``) and predict each
+  cell's throughput within the same band — ``plan.explain()``'s
+  ``predicted_steps_per_s`` is only honest while that holds.
 
 For the serving bench the gates are the serving-plane claims:
 
@@ -190,8 +197,11 @@ def check_weak_scaling(fresh: dict, tol: float) -> list[str]:
     errors: list[str] = []
 
     # -- structural invariants (hard) -------------------------------------
-    for cell in fresh["cells"]:
+    serial = fresh.get("serial_baseline")
+    for cell in fresh["cells"] + ([serial] if serial else []):
         where = f"fig5 fan_in={cell['fan_in']}"
+        if cell.get("overlap"):
+            where += " (overlap)"
         if abs(cell["staged_per_chunk"] - 1.0) > EPS:
             errors.append(
                 f"{where}: staged transfers per chunk = "
@@ -206,19 +216,64 @@ def check_weak_scaling(fresh: dict, tol: float) -> list[str]:
             errors.append(
                 f"{where}: measured op_count {cell['op_count']} != plan "
                 f"prediction {cell['predicted_ops']}")
+        # the overlap pipeline's drain shows up as exactly one dispatch
+        # beyond the chunk count — anything more means restage churn
+        if cell.get("overlap") and cell["op_count"] != cell["chunks"] + 1:
+            errors.append(
+                f"{where}: op_count {cell['op_count']} != chunks "
+                f"{cell['chunks']} + 1 drain: the two-slot pipeline is "
+                f"flushing more than its end-of-capture drain")
 
-    # -- performance (same-run, same-hardware cell pair; absolute band) ---
+    # -- performance (same-run, same-hardware cell pairs; absolute band) --
+    floor = 1.0 - 2.0 * tol
     cmp = fresh.get("fanin_comparison")
     if cmp is None:
         errors.append("fig5: no fan-in sweep pair (fanin_comparison "
                       "missing)")
         return errors
-    floor = 1.0 - 2.0 * tol
     if cmp["throughput_ratio"] < floor:
         errors.append(
             f"fig5 fan-in {cmp['fan_in_hi']}:{cmp['fan_in_lo']} "
             f"throughput ratio {cmp['throughput_ratio']:.3f} below floor "
             f"{floor:.2f}: clustered staging is paying per-element costs")
+    ocmp = fresh.get("overlap_comparison")
+    if ocmp is None:
+        errors.append("fig5: no overlap-vs-serial pair "
+                      "(overlap_comparison missing)")
+    elif ocmp["throughput_ratio"] < floor:
+        errors.append(
+            f"fig5 overlap/serial throughput ratio "
+            f"{ocmp['throughput_ratio']:.3f} at fan_in={ocmp['fan_in']} "
+            f"below floor {floor:.2f}: the two-slot staging pipeline is "
+            f"costing throughput vs serial stage-then-insert")
+
+    # -- contention model (fit quality + per-cell prediction band) --------
+    model = fresh.get("contention_model")
+    if model is None:
+        errors.append("fig5: no fitted contention model "
+                      "(contention_model missing — sweep < 2 fan-in "
+                      "points?)")
+        return errors
+    band = 2.0 * tol
+    if model["fit_residual"] > band:
+        errors.append(
+            f"fig5: contention-model fit residual "
+            f"{model['fit_residual']:.3f} > {band:.2f}: steps/s vs "
+            f"fan-in is no longer linear enough for plan.explain() to "
+            f"predict throughput from")
+    for cell in fresh["cells"]:
+        pred = cell.get("predicted_steps_per_s")
+        if pred is None:
+            errors.append(
+                f"fig5 fan_in={cell['fan_in']}: no predicted_steps_per_s "
+                f"(model predictions not folded into the sweep)")
+            continue
+        err = abs(pred / cell["steps_per_s"] - 1.0)
+        if err > band:
+            errors.append(
+                f"fig5 fan_in={cell['fan_in']}: plan-predicted "
+                f"throughput {pred:.1f} steps/s is {err:.1%} from "
+                f"measured {cell['steps_per_s']:.1f} (band {band:.0%})")
     return errors
 
 
