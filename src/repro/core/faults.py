@@ -44,6 +44,7 @@ import random as _random
 import time
 from collections import defaultdict
 from dataclasses import dataclass, field
+from typing import Iterator
 
 __all__ = [
     "StoreError", "StoreTimeout", "WatermarkTimeout", "StoreUnavailable",
@@ -127,7 +128,7 @@ class RetryPolicy:
     jitter: float = 0.25
     seed: int = 0
 
-    def sleeps(self):
+    def sleeps(self) -> Iterator[float]:
         """Yield the bounded, jittered, deadline-clamped sleep durations
         between attempts (``max_attempts - 1`` of them at most)."""
         rng = _random.Random(self.seed)

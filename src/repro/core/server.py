@@ -146,7 +146,7 @@ class StoreServer:
 
     def create_table(self, spec: S.TableSpec,
                      deployment: Deployment | None = None,
-                     slab_sharding=None):
+                     slab_sharding=None) -> S.TableSpec:
         """Register + allocate a table.  ``slab_sharding`` explicitly
         places the slab (e.g. the slab-sharded trainer tier partitioning
         the slot axis over its data mesh via
@@ -167,7 +167,7 @@ class StoreServer:
             self._wal_base[spec.name] = 0
         return spec
 
-    def placement(self, table: str):
+    def placement(self, table: str) -> Any:
         """The slab sharding ``table`` was created with (``None`` = default
         placement) — what a recovering restart re-allocates against."""
         return self._placements[table]
@@ -267,6 +267,7 @@ class StoreServer:
         self._bump_staged()
         return dep.stage_chunk(keys, values, mask, self._specs[table])
 
+    # lint: holds-lock — runs inside the caller's capture txn (table lock)
     def apply_chunk(self, table: str, chunk_id: tuple, txn: CaptureTxn,
                     keys, values, mask, puts: int) -> None:
         """Exactly-once insert of one collected chunk (the WAL-logged form
@@ -342,6 +343,7 @@ class StoreServer:
             self._bump_staged()
         return PendingChunk(chunk_id, keys, values, mask, puts)
 
+    # lint: holds-lock — runs inside the caller's capture txn (table lock)
     def insert_chunk(self, table: str, txn: CaptureTxn,
                      pending: PendingChunk) -> None:
         """Second half of the overlapped apply: the masked insert of an
@@ -539,7 +541,12 @@ class StoreServer:
         key = jax.numpy.asarray(key, S.KEY_DTYPE)
         with self._table_locks[table]:
             self._state[table] = S.delete(spec, self._state[table], key)
+            if self.wal_enabled:
+                # Tombstones must replay too: a restart that re-runs the
+                # put log but skips deletes resurrects dead keys.
+                self._wal[table].append(("delete", (key,), 0))
         self._bump_ops()
+        self._after_commit(table)
 
     def stats(self) -> dict:
         """Telemetry snapshot: dispatched-op count, cross-mesh staged
@@ -729,9 +736,14 @@ class StoreServer:
         replay floor — commits before this point never replay again (the
         snapshot truncates the log, which is also what keeps the WAL from
         growing without bound in a long-running session)."""
-        self._recovery = self.snapshot()
-        for t in self._wal:
-            self._wal_base[t] = len(self._wal[t])
+        snap = self.snapshot()
+        # The image and the replay floor are registry state: publish them
+        # under the registry lock so a concurrent restart never sees the
+        # new snapshot paired with the old floor (or vice versa).
+        with self._lock:
+            self._recovery = snap
+            for t in self._wal:
+                self._wal_base[t] = len(self._wal[t])
 
     def _replay_entry(self, spec: S.TableSpec, state: S.TableState,
                       kind: str, payload) -> S.TableState:
@@ -741,6 +753,8 @@ class StoreServer:
             return S.put_many(spec, state, *payload)
         if kind == "put_stream":
             return S.put_stream(spec, state, *payload)
+        if kind == "delete":
+            return S.delete(spec, state, *payload)
         return S.put_masked(spec, state, *payload)       # "chunk"
 
     def _restart_and_recover(self) -> None:

@@ -70,6 +70,7 @@ __all__ = [
     "serving_dispatches", "serving_staged", "serving_swaps",
     "TRAINER_COLLECTIVE_PREDICTIONS", "COLLECTIVE_FREE",
     "trainer_collective_prediction", "sharded_producer_prediction",
+    "VERB_CAUSES", "UNPLANNED_VERBS",
 ]
 
 PRODUCER_TIERS = ("per_verb", "capture_scan", "capture_scan_multi",
@@ -78,6 +79,33 @@ TRAINER_TIERS = ("per_verb", "fused", "sharded_fused", "slab_sharded",
                  "slab_sharded_clustered")
 INFERENCE_TIERS = ("fused_registry", "three_step")
 SERVING_TIERS = ("continuous_batch", "three_step")
+
+#: Plan <-> runtime verb-parity contract, machine-checked by repro-lint's
+#: ``parity-verb`` rule: every ``op_count``-incrementing public verb on
+#: :class:`~repro.core.server.StoreServer` must appear in exactly one of
+#: these two tables, and every declared verb must still exist on the
+#: server.  ``VERB_CAUSES`` maps a verb to the dispatch-prediction cause
+#: labels (the first element of the ``(cause, count)`` pairs the
+#: ``*_dispatches`` functions emit) that account for it in a planned
+#: run; a verb listed here and missing from a component's prediction
+#: would skew ``Plan.explain()``.
+VERB_CAUSES: dict[str, tuple[str, ...]] = {
+    "put": ("put", "request", "three_step"),
+    "get": ("get", "response", "three_step"),
+    "capture": ("capture", "drain", "epoch"),
+    "sample": ("epoch", "norm_bootstrap"),
+    "sample_staged": ("epoch",),
+    "serve_batch": ("serve",),
+}
+
+#: Verbs no planned component dispatches (utility/baseline API:
+#: explicit-commit, batched convenience puts/gets, polling, deletion,
+#: occupancy probes).  They still bump ``op_count``, so exactness tests
+#: must not interleave them with a measured window.
+UNPLANNED_VERBS: tuple[str, ...] = (
+    "commit", "put_many", "put_stream", "get_many", "latest", "poll",
+    "delete", "valid_count",
+)
 
 
 def producer_tier(comp) -> str:

@@ -354,7 +354,12 @@ class InSituSession:
                     dispatches=P.serving_dispatches(tier, total,
                                                     comp.max_batch),
                     staged=P.serving_staged(tier, total, crosses),
-                    swaps=P.serving_swaps(tier)))
+                    swaps=P.serving_swaps(tier),
+                    # the drain runs entirely on the store placement —
+                    # structurally collective-free on every deployment
+                    predicted_collectives=put_pred,
+                    collectives=self._serving_collectives(comp, tier)
+                    if hlo else None))
             else:
                 raise TypeError(f"unknown component type {type(comp)!r}")
         dep = self.deployment.describe() if self.deployment is not None \
@@ -551,6 +556,53 @@ class InSituSession:
         txt = epoch_fn.lower(dummy, state, jax.random.key(0), mu,
                              mu + 1.0).compile().as_text()
         counts = count_ops(txt)
+        return tuple((op, counts.get(op, 0)) for op in COLLECTIVE_OPS)
+
+    def _serving_collectives(self, comp: ServingConsumer, tier: str):
+        """Compile one serving drain against the live table placements and
+        count its collective ops — the serving leg of the ``plan(hlo=True)``
+        tier grid (the collective-budget manifest's measured side).
+
+        The registry model is unknown at plan time (only ``model_key``
+        is declared), so the drain compiles with a shape-correct stub
+        apply; the claim covers the store plumbing — batched gather,
+        vmapped apply harness, masked scatter — which is what must stay
+        collective-free (requests, params and responses all sit on the
+        store placement).  The bound model's own collectives are the
+        trainer's claim, measured where it is compiled."""
+        from ..analysis.hlo import COLLECTIVE_OPS, count_ops
+        req_spec = self._spec(comp.table)
+        res_spec = self._spec(comp.results)
+        req_state = S.init_table(req_spec, self._table_placement(req_spec))
+        res_state = S.init_table(res_spec, self._table_placement(res_spec))
+        if tier == "three_step":
+            # unfused baseline: one get off the request table + one put
+            # into the results table per request
+            key = jnp.uint32(1)
+            get_txt = jax.jit(lambda st, k: S.get(
+                req_spec, st, k)).lower(req_state, key).compile()
+            val = jnp.zeros(res_spec.shape, res_spec.dtype)
+            put_txt = jax.jit(lambda st, k, v: S.put_impl(
+                res_spec, st, k, v)).lower(res_state, key,
+                                           val).compile()
+            counts = count_ops(get_txt.as_text())
+            for op, c in count_ops(put_txt.as_text()).items():
+                counts[op] = counts.get(op, 0) + c
+            return tuple((op, counts.get(op, 0)) for op in COLLECTIVE_OPS)
+
+        def stub_apply(params, x):
+            # depends on x so the request gather can't be dead-code
+            # eliminated out of the compiled drain
+            del params
+            return jnp.broadcast_to(
+                jnp.mean(x).astype(res_spec.dtype), res_spec.shape)
+
+        keys = jnp.zeros((comp.max_batch,), S.KEY_DTYPE)
+        mask = jnp.zeros((comp.max_batch,), bool)
+        txt = S.serve_batch.lower(req_spec, res_spec, stub_apply,
+                                  req_state, res_state, jnp.zeros(()),
+                                  keys, mask).compile()
+        counts = count_ops(txt.as_text())
         return tuple((op, counts.get(op, 0)) for op in COLLECTIVE_OPS)
 
     # -- table placement (the slab-sharded data plane) ----------------------

@@ -36,3 +36,18 @@ def run_subprocess(code: str, n_devices: int = 4, timeout: float = 420.0):
 def rng_key():
     import jax
     return jax.random.key(0)
+
+
+@pytest.fixture(autouse=True)
+def _lock_order_witness(request):
+    """Every ``@pytest.mark.chaos`` test runs under the LockTracker
+    runtime witness: all StoreServer locks are wrapped, the realised
+    lock-order graph is collected across threads, and the test fails if
+    the graph is cyclic — the dynamic twin of repro-lint's lock rules."""
+    if request.node.get_closest_marker("chaos") is None:
+        yield
+        return
+    from repro.core.locktrack import LockTracker
+    with LockTracker.instrument() as tracker:
+        yield
+    tracker.assert_acyclic()

@@ -21,6 +21,37 @@ def test_docs_exist():
     assert (REPO / "README.md").exists()
     assert (REPO / "docs" / "architecture.md").exists()
     assert (REPO / "docs" / "benchmarks.md").exists()
+    assert (REPO / "docs" / "static-analysis.md").exists()
+
+
+EXPECTED_RULE_IDS = {
+    "budget-collective", "lock-holds", "lock-leaf", "lock-mutation",
+    "lock-order", "parity-fault", "parity-verb", "trace-host",
+    "type-check",
+}
+
+
+def test_list_rules_output_is_stable_and_documented():
+    """``run_static_analysis.py --list-rules`` is a public surface: its
+    rule-id set is pinned here, and every id must appear in the rule
+    catalogue (docs/static-analysis.md)."""
+    import subprocess
+    import sys as _sys
+    proc = subprocess.run(
+        [_sys.executable, str(REPO / "tools" / "run_static_analysis.py"),
+         "--list-rules"],
+        capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    lines = [ln for ln in proc.stdout.splitlines() if ln.strip()]
+    ids = {ln.split()[0] for ln in lines}
+    assert ids == EXPECTED_RULE_IDS, ids
+    # ids are listed sorted, each with a one-line summary
+    assert [ln.split()[0] for ln in lines] == sorted(ids)
+    assert all(len(ln.split(None, 1)) == 2 for ln in lines)
+    catalogue = (REPO / "docs" / "static-analysis.md").read_text()
+    for rid in ids:
+        assert f"`{rid}`" in catalogue, \
+            f"rule {rid} missing from docs/static-analysis.md"
 
 
 def test_quickstart_entry_points_import():

@@ -1,0 +1,86 @@
+"""Edge cases of the HLO text parser (`repro.analysis.hlo`) that the
+collective-budget phase of repro-lint leans on: tuple result shapes,
+fp8 dtypes, ROOT-op lines, and scalar (empty-dim) shapes."""
+
+from repro.analysis import hlo
+
+
+class TestParseShapeBytes:
+    def test_scalar_empty_dims(self):
+        assert hlo.parse_shape_bytes("f32[]") == 4
+        assert hlo.parse_shape_bytes("pred[]") == 1
+        assert hlo.parse_shape_bytes("s64[]") == 8
+
+    def test_fp8_dtypes(self):
+        assert hlo.parse_shape_bytes("f8e4m3fn[8,2]") == 16
+        assert hlo.parse_shape_bytes("f8e5m2[4]") == 4
+        assert hlo.parse_shape_bytes("(f8e4m3fn[4], f8e5m2[4])") == 8
+
+    def test_tuple_of_mixed_dtypes(self):
+        assert hlo.parse_shape_bytes(
+            "(bf16[2,4]{1,0}, f32[8]{0}, pred[])") == 16 + 32 + 1
+
+    def test_unknown_dtype_contributes_zero(self):
+        assert hlo.parse_shape_bytes("token[]") == 0
+        assert hlo.parse_shape_bytes("(token[], f32[2])") == 8
+
+
+class TestCountOps:
+    def test_root_line_counted(self):
+        txt = ("ENTRY %e {\n"
+               "  ROOT %r = f32[4]{0} all-gather(%p), dimensions={0}\n"
+               "}\n")
+        assert hlo.count_ops(txt) == {"all-gather": 1}
+
+    def test_tuple_result_counted(self):
+        txt = ("%ar = (f32[4]{0}, f32[4]{0}) all-reduce(%a, %b), "
+               "replica_groups={}\n")
+        assert hlo.count_ops(txt) == {"all-reduce": 1}
+
+    def test_op_suffix_forms(self):
+        # dotted id, paren-immediate, and space-separated forms all match
+        txt = ("%a = f32[4] all-reduce.5(%x)\n"
+               "%b = f32[4] collective-permute(%y)\n"
+               "%c = f32[4] reduce-scatter(%z), dimensions={0}\n")
+        assert hlo.count_ops(txt) == {"all-reduce": 1,
+                                      "collective-permute": 1,
+                                      "reduce-scatter": 1}
+
+    def test_mentions_in_metadata_not_counted(self):
+        # an op name appearing outside the `= <shape> <op>` position
+        # (e.g. in a fusion's metadata string) must not count
+        txt = '%f = f32[4] fusion(%x), metadata={op_name="all-reduce"}\n'
+        assert hlo.count_ops(txt) == {}
+
+    def test_clean_module_empty(self):
+        assert hlo.count_ops("%add = f32[4] add(%a, %b)") == {}
+
+
+class TestCollectiveBytes:
+    def test_tuple_all_reduce_bytes(self):
+        txt = "%ar = (bf16[2,4]{1,0}, f32[8]{0}) all-reduce(%a, %b)\n"
+        cb = hlo.collective_bytes(txt)
+        assert cb["all-reduce"] == 16 + 32
+        assert cb["total"] == 48
+        # all-reduce rings move ~2x the result bytes per device
+        assert cb["link_bytes"] == 96
+
+    def test_scalar_root_all_gather(self):
+        txt = "ROOT %r = f32[]{} all-gather(%p)\n"
+        cb = hlo.collective_bytes(txt)
+        assert cb["all-gather"] == 4
+        assert cb["link_bytes"] == 4
+
+
+class TestAssertCollectiveFree:
+    def test_raises_naming_ops(self):
+        txt = "%ar = f32[8]{0} all-reduce(%a)\n"
+        try:
+            hlo.assert_collective_free(txt, what="fused put")
+        except AssertionError as e:
+            assert "fused put" in str(e) and "all-reduce" in str(e)
+        else:
+            raise AssertionError("expected AssertionError")
+
+    def test_passes_on_clean(self):
+        hlo.assert_collective_free("%add = f32[4] add(%a, %b)")

@@ -1,0 +1,554 @@
+"""repro-lint self-tests: every rule fires on a minimal violating
+fixture and stays silent on the repaired twin; the real tree passes
+clean; the LockTracker runtime witness builds an acyclic lock-order
+graph on a live server and catches synthetic inversions; and the real
+findings this PR fixed (unlogged delete tombstones, unlocked recovery
+bookkeeping) have regression tests."""
+
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+from lint.budgets import BudgetRow, match_cells  # noqa: E402
+from lint.engine import lint_source, lint_tree  # noqa: E402
+from lint.rules_locks import LockHoldsRule  # noqa: E402
+from lint.rules_parity import (check_fault_parity,  # noqa: E402
+                               check_verb_parity)
+
+
+def _ids(findings):
+    return sorted({f.rule for f in findings})
+
+
+def _fires(src: str, rule_id: str):
+    findings = lint_source(textwrap.dedent(src), "fixture.py")
+    assert rule_id in _ids(findings), \
+        f"expected {rule_id} to fire, got {findings}"
+    return findings
+
+
+def _silent(src: str, rule_id: str = None):
+    findings = lint_source(textwrap.dedent(src), "fixture.py")
+    if rule_id is None:
+        assert findings == [], findings
+    else:
+        assert rule_id not in _ids(findings), findings
+
+
+# -- lock-mutation ----------------------------------------------------------
+
+_LOCK_VIOLATION = """
+    import threading
+
+    class Server:
+        def __init__(self):
+            self._table_locks = {}
+            self._state = {}
+
+        def put(self, table, value):
+            self._state[table] = value
+"""
+
+_LOCK_REPAIRED = """
+    import threading
+
+    class Server:
+        def __init__(self):
+            self._table_locks = {}
+            self._state = {}
+
+        def put(self, table, value):
+            with self._table_locks[table]:
+                self._state[table] = value
+"""
+
+
+class TestLockMutation:
+    def test_fires_outside_context(self):
+        _fires(_LOCK_VIOLATION, "lock-mutation")
+
+    def test_silent_on_repaired_twin(self):
+        _silent(_LOCK_REPAIRED)
+
+    def test_mutator_method_call_fires(self):
+        _fires(_LOCK_VIOLATION.replace(
+            "self._state[table] = value",
+            "self._acked.add(value)"), "lock-mutation")
+
+    def test_registry_lock_also_guards(self):
+        _silent(_LOCK_REPAIRED.replace(
+            "with self._table_locks[table]:", "with self._lock:"))
+
+    def test_holds_lock_marker_exempts(self):
+        _silent(_LOCK_VIOLATION.replace(
+            "def put(self, table, value):",
+            "def put(self, table, value):  # lint: holds-lock"))
+
+    def test_suppression_comment(self):
+        _silent(_LOCK_VIOLATION.replace(
+            "self._state[table] = value",
+            "self._state[table] = value  # lint: disable=lock-mutation"))
+
+    def test_plain_class_out_of_scope(self):
+        _silent("""
+            class NotAServer:
+                def put(self, table, value):
+                    self._state[table] = value
+        """)
+
+
+# -- lock-order -------------------------------------------------------------
+
+_ORDER_VIOLATION = """
+    class Server:
+        def __init__(self):
+            self._table_locks = {}
+
+        def serve(self, a, b):
+            with self._table_locks[a], self._table_locks[b]:
+                pass
+"""
+
+_ORDER_REPAIRED = """
+    class Server:
+        def __init__(self):
+            self._table_locks = {}
+
+        def serve(self, a, b):
+            first, second = sorted((a, b))
+            with self._table_locks[first], self._table_locks[second]:
+                pass
+"""
+
+
+class TestLockOrder:
+    def test_fires_on_unsorted_pair(self):
+        _fires(_ORDER_VIOLATION, "lock-order")
+
+    def test_silent_on_canonical_twin(self):
+        _silent(_ORDER_REPAIRED)
+
+    def test_fires_on_swapped_sorted_names(self):
+        _fires(_ORDER_REPAIRED.replace(
+            "self._table_locks[first], self._table_locks[second]",
+            "self._table_locks[second], self._table_locks[first]"),
+            "lock-order")
+
+    def test_fires_on_nested_acquisition(self):
+        _fires("""
+            class Server:
+                def __init__(self):
+                    self._table_locks = {}
+
+                def serve(self, a, b):
+                    with self._table_locks[a]:
+                        with self._table_locks[b]:
+                            pass
+        """, "lock-order")
+
+    def test_fires_on_literal_indices(self):
+        _fires("""
+            class Server:
+                def __init__(self):
+                    self._table_locks = {}
+
+                def serve(self):
+                    with self._table_locks["req"], self._table_locks["res"]:
+                        pass
+        """, "lock-order")
+
+
+# -- lock-leaf --------------------------------------------------------------
+
+class TestLockLeaf:
+    def test_fires_on_nesting_inside_ops_lock(self):
+        _fires("""
+            class Server:
+                def bump(self):
+                    with self._ops_lock:
+                        with self._lock:
+                            self.op_count += 1
+        """, "lock-leaf")
+
+    def test_silent_on_leaf_use(self):
+        _silent("""
+            class Server:
+                def bump(self):
+                    with self._ops_lock:
+                        self.op_count += 1
+        """)
+
+
+# -- lock-holds -------------------------------------------------------------
+
+def _holds_findings(src: str):
+    import ast
+    src = textwrap.dedent(src)
+    return LockHoldsRule().check_modules(
+        [("fixture.py", src, ast.parse(src))])
+
+
+class TestLockHolds:
+    FIXTURE = """
+        class Server:
+            # lint: holds-lock
+            def apply_chunk(self, table, txn):
+                self._acked.add(table)
+
+        def caller(server, table, txn):
+            server.apply_chunk(table, txn)
+    """
+
+    def test_fires_on_unlocked_call(self):
+        findings = _holds_findings(self.FIXTURE)
+        assert _ids(findings) == ["lock-holds"]
+
+    def test_silent_inside_capture(self):
+        assert _holds_findings("""
+            class Server:
+                # lint: holds-lock
+                def apply_chunk(self, table, txn):
+                    self._acked.add(table)
+
+            def caller(server, table):
+                with server.capture(table) as txn:
+                    server.apply_chunk(table, txn)
+        """) == []
+
+
+# -- trace-host -------------------------------------------------------------
+
+_TRACE_VIOLATION = """
+    import time
+    from jax import lax
+
+    def producer(carry, xs):
+        def body(c, x):
+            t = time.perf_counter()
+            return c + t, x
+        return lax.scan(body, carry, xs)
+"""
+
+
+class TestTraceHost:
+    def test_fires_on_time_in_scan_body(self):
+        _fires(_TRACE_VIOLATION, "trace-host")
+
+    def test_silent_on_pure_twin(self):
+        _silent(_TRACE_VIOLATION.replace(
+            "            t = time.perf_counter()\n"
+            "            return c + t, x",
+            "            return c + 1.0, x"))
+
+    def test_fires_on_np_random(self):
+        _fires("""
+            import numpy as np
+            from jax import lax
+
+            def producer(carry, xs):
+                def body(c, x):
+                    return c + np.random.normal(), x
+                return lax.scan(body, carry, xs)
+        """, "trace-host")
+
+    def test_fires_on_item_host_sync(self):
+        _fires("""
+            from jax import lax
+
+            def producer(carry, xs):
+                def body(c, x):
+                    if c.item() > 0:
+                        return c, x
+                    return c, x
+                return lax.scan(body, carry, xs)
+        """, "trace-host")
+
+    def test_fires_on_float_of_traced_arg(self):
+        _fires("""
+            from jax import lax
+
+            def producer(carry, xs):
+                def body(c, x):
+                    return c + float(x), x
+                return lax.scan(body, carry, xs)
+        """, "trace-host")
+
+    def test_jax_random_is_fine(self):
+        _silent("""
+            from jax import lax, random
+
+            def producer(carry, xs):
+                def body(c, x):
+                    return c + random.normal(random.key(0)), x
+                return lax.scan(body, carry, xs)
+        """)
+
+    def test_shard_map_and_pallas_bodies_covered(self):
+        _fires("""
+            import threading
+            from jax.experimental.shard_map import shard_map
+
+            def kernel(x):
+                threading.Event()
+                return x
+
+            def run(mesh, x):
+                return shard_map(kernel, mesh=mesh)(x)
+        """, "trace-host")
+
+
+# -- parity -----------------------------------------------------------------
+
+_SERVER_FIXTURE = """
+    class StoreServer:
+        def put(self, table, key, value):
+            self._bump_ops()
+
+        def frobnicate(self, table):
+            self._bump_ops()
+"""
+
+_PLAN_FIXTURE = """
+    VERB_CAUSES = {"put": ("put",)}
+    UNPLANNED_VERBS = ()
+
+    def producer_dispatches(tier, steps):
+        return (("put", steps),)
+"""
+
+
+class TestParity:
+    def test_uncounted_verb_fires(self):
+        findings = check_verb_parity(
+            textwrap.dedent(_SERVER_FIXTURE),
+            textwrap.dedent(_PLAN_FIXTURE))
+        assert any("frobnicate" in f.message for f in findings), findings
+
+    def test_declared_twin_is_silent(self):
+        plan = _PLAN_FIXTURE.replace(
+            "UNPLANNED_VERBS = ()",
+            'UNPLANNED_VERBS = ("frobnicate",)')
+        assert check_verb_parity(
+            textwrap.dedent(_SERVER_FIXTURE),
+            textwrap.dedent(plan)) == []
+
+    def test_stale_declaration_fires(self):
+        plan = _PLAN_FIXTURE.replace(
+            "UNPLANNED_VERBS = ()",
+            'UNPLANNED_VERBS = ("frobnicate", "gone")')
+        findings = check_verb_parity(
+            textwrap.dedent(_SERVER_FIXTURE),
+            textwrap.dedent(plan))
+        assert any("gone" in f.message for f in findings), findings
+
+    def test_unknown_cause_fires(self):
+        plan = _PLAN_FIXTURE.replace(
+            '{"put": ("put",)}', '{"put": ("teleport",)}').replace(
+            "UNPLANNED_VERBS = ()",
+            'UNPLANNED_VERBS = ("frobnicate",)')
+        findings = check_verb_parity(
+            textwrap.dedent(_SERVER_FIXTURE),
+            textwrap.dedent(plan))
+        assert any("teleport" in f.message for f in findings), findings
+
+    def test_fault_walk_gap_fires(self):
+        client = """
+            class Client:
+                def put_kv(self, table, key, value):
+                    self._call_verb("put", table, lambda: None)
+
+                def sample(self, table):
+                    self._call_verb("sample", table, lambda: None)
+        """
+        faults = """
+            def simulate_overhead(plan, schedule):
+                def _verb(o, verb, table):
+                    pass
+                _verb(None, "put", None)
+        """
+        findings = check_fault_parity(textwrap.dedent(client),
+                                      textwrap.dedent(faults))
+        assert any("sample" in f.message for f in findings), findings
+        faults_fixed = faults + '    _verb(None, "sample", None)\n'
+        assert check_fault_parity(textwrap.dedent(client),
+                                  textwrap.dedent(faults_fixed)) == []
+
+
+# -- collective budgets -----------------------------------------------------
+
+class TestBudgets:
+    MANIFEST = (BudgetRow("clustered", "trainer", "sharded_fused",
+                          budget={"all-reduce": 2}),)
+
+    def test_overrun_fires(self):
+        cells = [("clustered", "trainer", "sharded_fused",
+                  (("all-reduce", 3), ("all-gather", 0)))]
+        findings = match_cells(cells, self.MANIFEST)
+        assert _ids(findings) == ["budget-collective"]
+        assert "exceeds budget 2" in findings[0].message
+
+    def test_within_budget_silent(self):
+        cells = [("clustered", "trainer", "sharded_fused",
+                  (("all-reduce", 2), ("all-gather", 0)))]
+        assert match_cells(cells, self.MANIFEST) == []
+
+    def test_unbudgeted_op_defaults_to_zero(self):
+        cells = [("clustered", "trainer", "sharded_fused",
+                  (("all-reduce", 1), ("all-gather", 1)))]
+        findings = match_cells(cells, self.MANIFEST)
+        assert findings and "all-gather" in findings[0].message
+
+    def test_missing_row_fires(self):
+        cells = [("local", "producer", "capture_scan", (("all-reduce", 0),))]
+        findings = match_cells(cells, self.MANIFEST)
+        assert any("no manifest row" in f.message for f in findings)
+
+    def test_stale_row_fires(self):
+        findings = match_cells([], self.MANIFEST)
+        assert any("not exercised" in f.message for f in findings)
+
+
+# -- the real tree ----------------------------------------------------------
+
+def test_tree_passes_clean():
+    """The AST phases run clean over src/repro and tools — the acceptance
+    bar `python tools/run_static_analysis.py` enforces in CI (the compiled
+    budget phase is exercised by the grid itself and in CI)."""
+    assert lint_tree(REPO) == []
+
+
+def test_real_server_verbs_are_declared():
+    """The live parity contract: every op_count verb on the real
+    StoreServer is declared in the real plan.py."""
+    from lint.rules_parity import extract_bump_verbs, \
+        extract_plan_declarations
+    verbs = extract_bump_verbs(
+        (REPO / "src/repro/core/server.py").read_text())
+    causes, unplanned, _ = extract_plan_declarations(
+        (REPO / "src/repro/insitu/plan.py").read_text())
+    assert verbs
+    assert verbs == set(causes) | set(unplanned)
+
+
+# -- LockTracker runtime witness --------------------------------------------
+
+class TestLockTracker:
+    def test_synthetic_cycle_detected(self):
+        from repro.core.locktrack import LockCycleError, LockTracker
+        tracker = LockTracker()
+        tracker.note_acquire("A")
+        tracker.note_acquire("B")
+        tracker.note_release("B")
+        tracker.note_release("A")
+        tracker.assert_acyclic()    # A -> B alone is fine
+        tracker.note_acquire("B")
+        tracker.note_acquire("A")   # inversion: completes the cycle
+        tracker.note_release("A")
+        tracker.note_release("B")
+        with pytest.raises(LockCycleError, match="A -> B|B -> A"):
+            tracker.assert_acyclic()
+
+    def test_live_server_graph_is_acyclic(self):
+        """Drive a real StoreServer (verbs, metadata Condition, the
+        two-lock serving drain in both argument orders, a recovery
+        replay) under the witness: the realised graph must be acyclic
+        and must contain the canonical table->ops edge."""
+        import jax.numpy as jnp
+
+        from repro.core import TableSpec
+        from repro.core import store as S
+        from repro.core.faults import FaultPlan
+        from repro.core.locktrack import LockTracker
+        from repro.core.server import StoreServer
+
+        with LockTracker.instrument() as tracker:
+            srv = StoreServer(faults=FaultPlan())
+            srv.create_table(TableSpec("a", shape=(2,), capacity=8,
+                                       engine="hash"))
+            srv.create_table(TableSpec("b", shape=(2,), capacity=8,
+                                       engine="hash"))
+            srv.put("a", S.name_key("x"), jnp.ones((2,)))
+            srv.get("a", S.name_key("x"))
+            srv.put_meta("ready", 1)
+            assert srv.get_meta("ready") == 1
+            apply_fn = lambda p, x: x  # noqa: E731
+            keys = jnp.asarray([S.name_key("x")], S.KEY_DTYPE)
+            mask = jnp.asarray([True])
+            # both argument orders must realise the SAME lock order
+            srv.serve_batch("a", "b", keys, mask, apply_fn, None)
+            srv.serve_batch("b", "a", keys, mask, apply_fn, None)
+            srv._restart_and_recover()    # replay bumps under table lock
+        tracker.assert_acyclic()
+        edges = tracker.edges()
+        assert any(k.startswith("table:") and "server._ops_lock" in v
+                   for k, v in edges.items()), edges
+        # canonical two-lock order: a before b, never b before a
+        assert "table:b" in edges.get("table:a", ())
+        assert "table:a" not in edges.get("table:b", ())
+
+    def test_instrument_restores_init(self):
+        from repro.core.locktrack import LockTracker
+        from repro.core.server import StoreServer
+        orig = StoreServer.__init__
+        with LockTracker.instrument():
+            assert StoreServer.__init__ is not orig
+        assert StoreServer.__init__ is orig
+
+
+# -- regression tests for the real findings fixed in this PR ----------------
+
+class TestFixedFindings:
+    def test_delete_is_wal_logged_and_replayed(self):
+        """The unlogged-delete recovery bug: a restart used to replay
+        the put log but skip tombstones, resurrecting deleted keys."""
+        import jax.numpy as jnp
+
+        from repro.core import TableSpec
+        from repro.core import store as S
+        from repro.core.faults import FaultPlan
+        from repro.core.server import StoreServer
+
+        srv = StoreServer(faults=FaultPlan())    # arms the WAL
+        srv.create_table(TableSpec("t", shape=(2,), capacity=8,
+                                   engine="hash"))
+        srv.put("t", S.name_key("keep"), jnp.ones((2,)))
+        srv.put("t", S.name_key("dead"), 2 * jnp.ones((2,)))
+        srv.delete("t", S.name_key("dead"))
+        assert not srv.poll("t", S.name_key("dead"))
+        srv._restart_and_recover()
+        assert srv.poll("t", S.name_key("keep"))
+        assert not srv.poll("t", S.name_key("dead")), \
+            "restart resurrected a deleted key: delete was not replayed"
+        value, found = srv.get("t", S.name_key("keep"))
+        assert bool(found)
+        assert jnp.allclose(value, jnp.ones((2,)))
+
+    def test_snapshot_truncates_replay_floor(self):
+        """Recovery-snapshot bookkeeping (now published under _lock):
+        the floor must equal the WAL length at snapshot time, so
+        pre-snapshot commits never replay twice."""
+        import jax.numpy as jnp
+
+        from repro.core import TableSpec
+        from repro.core import store as S
+        from repro.core.faults import FaultPlan
+        from repro.core.server import StoreServer
+
+        srv = StoreServer(faults=FaultPlan())
+        srv.create_table(TableSpec("t", shape=(2,), capacity=8,
+                                   engine="hash"))
+        srv.put("t", S.name_key("a"), jnp.ones((2,)))
+        srv._take_recovery_snapshot()
+        assert srv._wal_base["t"] == len(srv._wal["t"]) == 1
+        srv.put("t", S.name_key("b"), 2 * jnp.ones((2,)))
+        before = srv.op_count
+        srv._restart_and_recover()
+        # exactly ONE entry (the post-snapshot put) replayed
+        assert srv.op_count == before + 1
+        for name in ("a", "b"):
+            assert srv.poll("t", S.name_key(name))

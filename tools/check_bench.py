@@ -101,11 +101,28 @@ REPO = Path(__file__).resolve().parent.parent
 
 EPS = 1e-9
 
+#: message prefix marking a performance-band failure (as opposed to a
+#: structural-invariant failure) — drives the exit-code classes below
+PERF = "perf: "
+
+#: exit codes, one per failure class (CI and scripts key off these):
+#: 0 clean; 1 structural invariant broken; 2 performance regression
+#: only; 3 missing/unreadable bench input.  The last stdout line is
+#: always a machine-readable JSON summary.
+EXIT_OK, EXIT_STRUCTURAL, EXIT_PERF, EXIT_MISSING = 0, 1, 2, 3
+
+
+class MissingInput(Exception):
+    pass
+
 
 def _load(path: Path) -> dict:
     if not path.exists():
-        raise SystemExit(f"check_bench: missing {path}")
-    return json.loads(path.read_text())
+        raise MissingInput(f"missing {path}")
+    try:
+        return json.loads(path.read_text())
+    except ValueError as e:
+        raise MissingInput(f"unreadable {path}: {e}") from e
 
 
 def check_fused_pipeline(base: dict, fresh: dict, tol: float,
@@ -129,7 +146,7 @@ def check_fused_pipeline(base: dict, fresh: dict, tol: float,
     def perf(name: str, b: float, f: float):
         if f < (1.0 - tol) * b:
             errors.append(
-                f"{name} regressed >{tol:.0%}: {f:.2f} vs committed "
+                PERF + f"{name} regressed >{tol:.0%}: {f:.2f} vs committed "
                 f"{b:.2f}")
 
     if ratios_only:
@@ -140,7 +157,7 @@ def check_fused_pipeline(base: dict, fresh: dict, tol: float,
         s = fresh["producer"]["speedup"]
         if s < 10.0:
             errors.append(
-                f"producer fused/per-verb speedup collapsed to {s:.2f}x "
+                PERF + f"producer fused/per-verb speedup collapsed to {s:.2f}x "
                 "(< 10x): fused capture no longer amortizes dispatch")
     else:
         perf("producer fused steps/s",
@@ -183,7 +200,7 @@ def check_sharded_epoch(base: dict, fresh: dict, tol: float) -> list[str]:
     floor = 1.0 - 2.0 * tol
     if cmp["epochs_per_s_ratio"] < floor:
         errors.append(
-            f"fig10 slab/replicated epochs_per_s ratio "
+            PERF + f"fig10 slab/replicated epochs_per_s ratio "
             f"{cmp['epochs_per_s_ratio']:.3f} below floor {floor:.2f}: "
             f"the slab-sharded entry is costing real throughput")
     return errors
@@ -233,7 +250,7 @@ def check_weak_scaling(fresh: dict, tol: float) -> list[str]:
         return errors
     if cmp["throughput_ratio"] < floor:
         errors.append(
-            f"fig5 fan-in {cmp['fan_in_hi']}:{cmp['fan_in_lo']} "
+            PERF + f"fig5 fan-in {cmp['fan_in_hi']}:{cmp['fan_in_lo']} "
             f"throughput ratio {cmp['throughput_ratio']:.3f} below floor "
             f"{floor:.2f}: clustered staging is paying per-element costs")
     ocmp = fresh.get("overlap_comparison")
@@ -242,7 +259,7 @@ def check_weak_scaling(fresh: dict, tol: float) -> list[str]:
                       "(overlap_comparison missing)")
     elif ocmp["throughput_ratio"] < floor:
         errors.append(
-            f"fig5 overlap/serial throughput ratio "
+            PERF + f"fig5 overlap/serial throughput ratio "
             f"{ocmp['throughput_ratio']:.3f} at fan_in={ocmp['fan_in']} "
             f"below floor {floor:.2f}: the two-slot staging pipeline is "
             f"costing throughput vs serial stage-then-insert")
@@ -257,7 +274,7 @@ def check_weak_scaling(fresh: dict, tol: float) -> list[str]:
     band = 2.0 * tol
     if model["fit_residual"] > band:
         errors.append(
-            f"fig5: contention-model fit residual "
+            PERF + f"fig5: contention-model fit residual "
             f"{model['fit_residual']:.3f} > {band:.2f}: steps/s vs "
             f"fan-in is no longer linear enough for plan.explain() to "
             f"predict throughput from")
@@ -271,7 +288,7 @@ def check_weak_scaling(fresh: dict, tol: float) -> list[str]:
         err = abs(pred / cell["steps_per_s"] - 1.0)
         if err > band:
             errors.append(
-                f"fig5 fan_in={cell['fan_in']}: plan-predicted "
+                PERF + f"fig5 fan_in={cell['fan_in']}: plan-predicted "
                 f"throughput {pred:.1f} steps/s is {err:.1%} from "
                 f"measured {cell['steps_per_s']:.1f} (band {band:.0%})")
     return errors
@@ -343,7 +360,7 @@ def check_turbulence(fresh: dict, tol: float) -> list[str]:
     floor = 0.5 * (1.0 - 2.0 * tol)
     if cmp["throughput_ratio_per_device"] < floor:
         errors.append(
-            f"turbulence shards {cmp['shards_hi']}:{cmp['shards_lo']} "
+            PERF + f"turbulence shards {cmp['shards_hi']}:{cmp['shards_lo']} "
             f"per-device throughput ratio "
             f"{cmp['throughput_ratio_per_device']:.3f} below floor "
             f"{floor:.2f}: the sharded producer is paying per-step "
@@ -388,7 +405,7 @@ def check_serving(fresh: dict, tol: float) -> list[str]:
     floor = 1.0 - 2.0 * tol
     if cmp["throughput_ratio"] < floor:
         errors.append(
-            f"serving clients={cmp['clients']} continuous/three-step "
+            PERF + f"serving clients={cmp['clients']} continuous/three-step "
             f"throughput ratio {cmp['throughput_ratio']:.3f} below floor "
             f"{floor:.2f}: continuous batching is paying per-request "
             f"costs")
@@ -423,16 +440,35 @@ def main() -> int:
         _load(Path(args.fresh_dir) / "BENCH_serving.json"), args.tol)
     errors += check_turbulence(
         _load(Path(args.fresh_dir) / "BENCH_turbulence.json"), args.tol)
+    perf = [e[len(PERF):] for e in errors if e.startswith(PERF)]
+    structural = [e for e in errors if not e.startswith(PERF)]
     if errors:
         print("bench check FAILED:")
-        for e in errors:
-            print(" -", e)
-        return 1
-    print("bench check OK (BENCH_fused_pipeline.json + "
-          "BENCH_sharded_epoch.json + BENCH_weak_scaling.json + "
-          "BENCH_serving.json + BENCH_turbulence.json within tolerance)")
-    return 0
+        for e in structural:
+            print(" - [structural]", e)
+        for e in perf:
+            print(" - [perf]", e)
+    else:
+        print("bench check OK (BENCH_fused_pipeline.json + "
+              "BENCH_sharded_epoch.json + BENCH_weak_scaling.json + "
+              "BENCH_serving.json + BENCH_turbulence.json within tolerance)")
+    code = EXIT_STRUCTURAL if structural \
+        else (EXIT_PERF if perf else EXIT_OK)
+    _summary(code, structural=len(structural), perf=len(perf))
+    return code
+
+
+def _summary(code: int, **counts) -> None:
+    """The machine-readable last stdout line."""
+    print(json.dumps({"tool": "check_bench", "exit_code": code,
+                      "status": "ok" if code == EXIT_OK else "failed",
+                      **counts}, sort_keys=True))
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    try:
+        sys.exit(main())
+    except MissingInput as e:
+        print(f"bench check FAILED: {e}")
+        _summary(EXIT_MISSING, structural=0, perf=0, missing=str(e))
+        sys.exit(EXIT_MISSING)

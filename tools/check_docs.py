@@ -25,6 +25,13 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 
+#: exit codes, one per failure class (CI and scripts key off these):
+#: 0 clean; 1 broken markdown link; 2 missing inline repo path;
+#: 3 unresolvable dotted code reference; 4 missing doc file.  With
+#: mixed classes the smallest non-zero wins.  The last stdout line is
+#: always a machine-readable JSON summary.
+EXIT_CODES = {"ok": 0, "link": 1, "path": 2, "ref": 3, "missing": 4}
+
 #: first segments that implicitly root at ``repro.``
 _SUBPACKAGES = ("core", "ml", "sim", "parallel", "analysis", "launch",
                 "kernels", "train", "serve", "models", "configs", "data",
@@ -39,7 +46,8 @@ def doc_files() -> list[Path]:
     return [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
 
 
-def check_links(path: Path, text: str, errors: list[str]) -> None:
+def check_links(path: Path, text: str,
+                errors: list[tuple[str, str]]) -> None:
     for m in _LINK_RE.finditer(text):
         target = m.group(1)
         if target.startswith(("http://", "https://", "mailto:", "#")):
@@ -48,7 +56,7 @@ def check_links(path: Path, text: str, errors: list[str]) -> None:
         if not target:
             continue
         if not (path.parent / target).exists():
-            errors.append(f"{path.name}: broken link -> {target}")
+            errors.append(("link", f"{path.name}: broken link -> {target}"))
 
 
 def _strip_fences(text: str) -> str:
@@ -58,14 +66,16 @@ def _strip_fences(text: str) -> str:
     return re.sub(r"```.*?```", "", text, flags=re.S)
 
 
-def check_inline_code(path: Path, text: str, errors: list[str]) -> None:
+def check_inline_code(path: Path, text: str,
+                      errors: list[tuple[str, str]]) -> None:
     for m in _CODE_RE.finditer(_strip_fences(text)):
         token = m.group(1).split()[0] if m.group(1).split() else ""
         if not token or any(c in token for c in "{}<>*$\"'"):
             continue
         if "/" in token:
             if not (REPO / token).exists():
-                errors.append(f"{path.name}: missing repo path -> {token}")
+                errors.append(("path",
+                               f"{path.name}: missing repo path -> {token}"))
             continue
         if "." in token and _DOTTED_RE.match(token):
             root = token.split(".", 1)[0]
@@ -77,7 +87,8 @@ def check_inline_code(path: Path, text: str, errors: list[str]) -> None:
                 continue
             err = _resolve_dotted(dotted)
             if err:
-                errors.append(f"{path.name}: {err} (from `{token}`)")
+                errors.append(("ref", f"{path.name}: {err} "
+                               f"(from `{token}`)"))
 
 
 def _resolve_dotted(dotted: str) -> str | None:
@@ -105,21 +116,30 @@ def _resolve_dotted(dotted: str) -> str | None:
 
 
 def main() -> int:
-    errors: list[str] = []
+    import json
+    errors: list[tuple[str, str]] = []
     for path in doc_files():
         if not path.exists():
-            errors.append(f"missing doc file: {path.relative_to(REPO)}")
+            errors.append(("missing",
+                           f"missing doc file: {path.relative_to(REPO)}"))
             continue
         text = path.read_text()
         check_links(path, text, errors)
         check_inline_code(path, text, errors)
+    counts = {kind: sum(1 for k, _ in errors if k == kind)
+              for kind in ("link", "path", "ref", "missing")}
     if errors:
         print("docs check FAILED:")
-        for e in errors:
-            print(" -", e)
-        return 1
-    print(f"docs check OK ({len(doc_files())} files)")
-    return 0
+        for kind, e in errors:
+            print(f" - [{kind}]", e)
+        code = min(EXIT_CODES[k] for k, _ in errors)
+    else:
+        print(f"docs check OK ({len(doc_files())} files)")
+        code = EXIT_CODES["ok"]
+    print(json.dumps({"tool": "check_docs", "exit_code": code,
+                      "status": "ok" if code == 0 else "failed",
+                      **counts}, sort_keys=True))
+    return code
 
 
 if __name__ == "__main__":

@@ -1,0 +1,28 @@
+"""repro-lint: repo-native static analysis for the in situ framework.
+
+The paper's framework is trusted because costs are predicted and then
+measured exactly; this package proves the invariants behind those
+predictions *statically*, over the whole tree, instead of sampling them
+at runtime:
+
+- lock discipline in ``core/server.py`` (``rules_locks``)
+- trace safety of fused scan/shard_map/pallas bodies (``rules_trace``)
+- plan <-> runtime <-> fault-walk verb parity (``rules_parity``)
+- per-tier collective budgets over compiled HLO (``budgets``)
+
+Run ``python tools/run_static_analysis.py`` from the repo root, or use
+the engine programmatically::
+
+    from lint.engine import lint_tree
+    findings = lint_tree(root)
+
+Suppress a finding with a trailing ``# lint: disable=<rule-id>`` comment
+on the flagged line (or the line above it).
+"""
+
+from .engine import Finding, Rule, all_rules, lint_source, lint_tree  # noqa: F401
+
+# Rule modules register themselves on import.
+from . import rules_locks   # noqa: F401,E402
+from . import rules_trace   # noqa: F401,E402
+from . import rules_parity  # noqa: F401,E402

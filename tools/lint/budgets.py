@@ -1,0 +1,192 @@
+"""Declarative collective-budget manifest, checked against compiled HLO.
+
+Each :data:`MANIFEST` row claims, for one (deployment, component-kind,
+tier) cell of the tier grid, the MAXIMUM number of each collective op
+(``analysis/hlo.COLLECTIVE_OPS``) the compiled hot path may contain;
+ops absent from a row's budget are budgeted at zero.  The checker
+builds the repo's tiny reference sessions for every deployment in
+{local, colocated, clustered, clustered_2d}, compiles the grid with
+``plan(hlo=True)`` (which counts ops via ``analysis/hlo.count_ops``),
+and fails on
+
+- an overrun (measured count above budget),
+- a measured cell with no manifest row (unbudgeted tier), and
+- a manifest row no session exercises (stale row).
+
+This replaces ad-hoc ``assert_collective_free`` sprinkling with one
+machine-checked table: the whole data plane — fused puts, the fused
+trainer epoch, the continuous-batching drain — is budgeted at zero
+collectives on every deployment (interconnect hops are host-driven
+staged transfers, never in-program collectives; the multi-device
+DDP/halo claims live in ``predicted_collectives`` and are property-
+tested under real device meshes in the test suite).
+
+Budget grammar, by example::
+
+    BudgetRow("clustered", "trainer", "sharded_fused",
+              budget={"all-reduce": 2})   # at most 2, everything else 0
+
+Run via ``python tools/run_static_analysis.py`` (phase id
+``budget-collective``; skip with ``--no-budget``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .engine import Finding
+
+__all__ = ["BudgetRow", "MANIFEST", "DEPLOYMENTS", "match_cells",
+           "check_budgets"]
+
+MANIFEST_PATH = "tools/lint/budgets.py"
+
+DEPLOYMENTS = ("local", "colocated", "clustered", "clustered_2d")
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetRow:
+    deployment: str
+    kind: str
+    tier: str
+    #: op name -> max allowed count; ops not listed are budgeted at 0.
+    budget: dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def cell(self) -> tuple[str, str, str]:
+        return (self.deployment, self.kind, self.tier)
+
+
+def _zero_grid(kind: str, tier: str) -> tuple[BudgetRow, ...]:
+    return tuple(BudgetRow(d, kind, tier) for d in DEPLOYMENTS)
+
+
+#: The full {local, colocated, clustered, clustered_2d} x
+#: {producer, trainer, serving} grid, budgeted at ZERO collectives:
+#: the store data plane must compile collective-free everywhere.
+MANIFEST: tuple[BudgetRow, ...] = (
+    _zero_grid("producer", "capture_scan")
+    + _zero_grid("trainer", "fused")
+    + _zero_grid("serving", "continuous_batch")
+)
+
+
+def match_cells(cells, manifest: tuple[BudgetRow, ...] = MANIFEST
+                ) -> list[Finding]:
+    """Check measured cells against the manifest (pure — unit-testable).
+
+    ``cells`` is an iterable of ``(deployment, kind, tier, collectives)``
+    where ``collectives`` is the plan entry's ``((op, count), ...)``.
+    """
+    rows = {r.cell: r for r in manifest}
+    seen: set[tuple[str, str, str]] = set()
+    findings: list[Finding] = []
+    for deployment, kind, tier, collectives in cells:
+        key = (deployment, kind, tier)
+        row = rows.get(key)
+        if row is None:
+            findings.append(Finding(
+                "budget-collective", MANIFEST_PATH, 1,
+                f"cell {key} compiled with collectives "
+                f"{dict(collectives)} but has no manifest row — add a "
+                f"BudgetRow for it"))
+            continue
+        seen.add(key)
+        for op, count in collectives:
+            allowed = row.budget.get(op, 0)
+            if count > allowed:
+                findings.append(Finding(
+                    "budget-collective", MANIFEST_PATH, 1,
+                    f"cell {key}: {count} x {op} in compiled HLO "
+                    f"exceeds budget {allowed}"))
+    for key in sorted(rows.keys() - seen):
+        findings.append(Finding(
+            "budget-collective", MANIFEST_PATH, 1,
+            f"manifest row {key} was not exercised by any session "
+            f"(stale row, or the grid builder lost a cell)"))
+    return findings
+
+
+# -- the tiny reference grid (compiled only when the phase runs) ------------
+
+def _deployment(kind: str):
+    from jax.sharding import PartitionSpec as PS
+
+    from repro.core.deployment import (make_clustered_1d, make_clustered_2d,
+                                       make_colocated_1d)
+    if kind == "local":
+        return None
+    if kind == "colocated":
+        return make_colocated_1d(ndim=2)
+    if kind == "clustered":
+        return make_clustered_1d()
+    # rank-2 element spec: fits both the (4, N) field table and the
+    # (2, 4) serving tables (degenerate on one visible device)
+    return make_clustered_2d(PS(None, "space"))
+
+
+def _grid_sessions(deployment: str):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import TableSpec
+    from repro.core import store as S
+    from repro.insitu import (InSituSession, Producer, ServingClients,
+                              ServingConsumer, TrainerConsumer)
+    from repro.ml import autoencoder as ae
+    from repro.ml import trainer as tr
+    from repro.sim import flatplate as fp
+
+    fcfg = fp.FlatPlateConfig(nx=4, ny=4, nz=2)
+    n = fcfg.n_points
+    snaps = jnp.stack([fp.snapshot(fcfg, jax.random.key(0), t)
+                       for t in range(4)])
+
+    def step(carry, rank, t):
+        return carry, S.make_key(rank, t), snaps[t % 4]
+
+    tiny = ae.AEConfig(n_points=n, mode="ref", latent=4, internal=4,
+                       blocks=1, mlp_width=8, mlp_depth=2)
+    cfg = tr.TrainerConfig(ae=tiny, epochs=1, gather=4, batch_size=2,
+                           lr=1e-3, fused=True)
+    pipeline = InSituSession(
+        tables=[TableSpec("field", shape=(4, n), capacity=16,
+                          engine="ring")],
+        components=[
+            Producer(step, table="field", steps=4, carry=jnp.zeros(()),
+                     emit_every=1, chunk=2),
+            TrainerConsumer(cfg, fp.grid_coords(fcfg))],
+        deployment=_deployment(deployment))
+
+    shape = (2, 4)
+
+    def feed(c, s):
+        return jnp.full(shape, float(100 * c + s))
+
+    serving = InSituSession(
+        tables=[TableSpec("sreq", shape=shape, capacity=32, engine="ring"),
+                TableSpec("sres", shape=shape, capacity=32,
+                          engine="ring")],
+        components=[
+            ServingClients(feed, table="sreq", clients=2, requests=2,
+                           submit=True, collect=False, name="writers"),
+            ServingConsumer("m", table="sreq", results="sres", clients=2,
+                            requests=2, max_batch=4,
+                            tier="continuous_batch", name="serving")],
+        deployment=_deployment(deployment))
+    return [pipeline, serving]
+
+
+def check_budgets(manifest: tuple[BudgetRow, ...] = MANIFEST
+                  ) -> list[Finding]:
+    """Compile the tier grid and check it against the manifest."""
+    cells = []
+    for deployment in DEPLOYMENTS:
+        for sess in _grid_sessions(deployment):
+            plan = sess.plan(hlo=True)
+            for entry in plan.components:
+                if entry.collectives is None:
+                    continue
+                cells.append((deployment, entry.kind, entry.tier,
+                              entry.collectives))
+    return match_cells(cells, manifest)

@@ -1,0 +1,190 @@
+"""Rule engine for repro-lint.
+
+A :class:`Rule` is either *file-scoped* (checked against every parsed
+module independently) or *project-scoped* (checked once against the repo
+root — cross-file invariants like verb parity).  Rules register
+themselves via the :func:`register` decorator; the runner and the tests
+discover them through :func:`all_rules`.
+
+Suppression: a finding is dropped when the flagged source line, or the
+line directly above it, carries ``# lint: disable=<rule-id>`` (several
+ids may be comma-separated).  Suppressions are per-rule and per-line by
+design — there is no file-level or wildcard off switch.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+from typing import Iterable
+
+__all__ = ["Finding", "Rule", "register", "all_rules", "lint_source",
+           "lint_tree", "DEFAULT_SUBDIRS"]
+
+#: Directories (relative to the repo root) the tree walk covers.
+DEFAULT_SUBDIRS = ("src/repro", "tools")
+
+_DISABLE_RE = re.compile(r"#\s*lint:\s*disable=([\w,\- ]+)")
+
+#: Marker comment exempting a function from lexical lock-domination
+#: checks: the function's contract is that its *caller* already holds
+#: the relevant lock (see ``rules_locks``).
+HOLDS_LOCK_MARKER = "lint: holds-lock"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class Rule:
+    """Base class for lint rules.
+
+    Subclasses set ``id`` (stable kebab-case identifier used in
+    suppression comments and ``--list-rules``), ``summary`` (one line)
+    and ``scope`` (``"file"`` or ``"project"``), and override the
+    matching ``check_*`` hook.
+    """
+
+    id: str = ""
+    summary: str = ""
+    scope: str = "file"
+
+    def check_file(self, path: str, src: str,
+                   tree: ast.Module) -> list[Finding]:
+        return []
+
+    def check_project(self, root: pathlib.Path) -> list[Finding]:
+        return []
+
+
+_REGISTRY: dict[str, Rule] = {}
+
+
+def register(rule_cls: type[Rule]) -> type[Rule]:
+    rule = rule_cls()
+    if not rule.id or rule.id in _REGISTRY:
+        raise ValueError(f"rule id {rule.id!r} missing or duplicated")
+    _REGISTRY[rule.id] = rule
+    return rule_cls
+
+
+def all_rules() -> list[Rule]:
+    """Registered rules, sorted by id (the ``--list-rules`` order)."""
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+def _disabled_ids(line: str) -> set[str]:
+    m = _DISABLE_RE.search(line)
+    if not m:
+        return set()
+    return {s.strip() for s in m.group(1).split(",") if s.strip()}
+
+
+def suppressed(lines: list[str], finding: Finding) -> bool:
+    """True when the finding's line (or the one above) disables its rule."""
+    for ln in (finding.line, finding.line - 1):
+        if 1 <= ln <= len(lines) and \
+                finding.rule in _disabled_ids(lines[ln - 1]):
+            return True
+    return False
+
+
+def _filter_suppressed(findings: Iterable[Finding],
+                       source_lines: dict[str, list[str]]) -> list[Finding]:
+    out = []
+    for f in findings:
+        lines = source_lines.get(f.path)
+        if lines is None:
+            try:
+                lines = pathlib.Path(f.path).read_text().splitlines()
+            except OSError:
+                lines = []
+            source_lines[f.path] = lines
+        if not suppressed(lines, f):
+            out.append(f)
+    return out
+
+
+def lint_source(src: str, path: str = "<string>",
+                rules: Iterable[Rule] | None = None) -> list[Finding]:
+    """Run the file-scoped rules over one source string.
+
+    The entry point the fixture tests use: every rule must fire on its
+    violating fixture here and stay silent on the repaired twin.
+    """
+    tree = ast.parse(src, filename=path)
+    lines = src.splitlines()
+    findings: list[Finding] = []
+    for rule in (rules if rules is not None else all_rules()):
+        if rule.scope == "file":
+            findings.extend(rule.check_file(path, src, tree))
+    return _filter_suppressed(findings, {path: lines})
+
+
+def _walk_py(root: pathlib.Path,
+             subdirs: tuple[str, ...]) -> list[pathlib.Path]:
+    files: list[pathlib.Path] = []
+    for sub in subdirs:
+        base = root / sub
+        if base.is_file():
+            files.append(base)
+        elif base.is_dir():
+            files.extend(sorted(base.rglob("*.py")))
+    return files
+
+
+def lint_tree(root: str | pathlib.Path,
+              subdirs: tuple[str, ...] = DEFAULT_SUBDIRS,
+              rules: Iterable[Rule] | None = None) -> list[Finding]:
+    """Run every rule over the repo tree rooted at ``root``.
+
+    File rules see each module under ``subdirs``; project rules see the
+    root once.  Suppression comments are honoured for both.
+    """
+    root = pathlib.Path(root)
+    chosen = list(rules if rules is not None else all_rules())
+    source_lines: dict[str, list[str]] = {}
+    findings: list[Finding] = []
+    for path in _walk_py(root, subdirs):
+        rel = str(path.relative_to(root))
+        try:
+            src = path.read_text()
+            tree = ast.parse(src, filename=rel)
+        except (OSError, SyntaxError) as exc:
+            findings.append(Finding("parse-error", rel, 1, str(exc)))
+            continue
+        source_lines[rel] = src.splitlines()
+        for rule in chosen:
+            if rule.scope == "file":
+                for f in rule.check_file(rel, src, tree):
+                    findings.append(f)
+    for rule in chosen:
+        if rule.scope == "project":
+            findings.extend(rule.check_project(root))
+    return _filter_suppressed(findings, source_lines)
+
+
+def add_parents(tree: ast.AST) -> None:
+    """Annotate every node with a ``lint_parent`` backlink (the engine's
+    one AST extension — rules walk ancestors for with-context checks)."""
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child.lint_parent = node  # type: ignore[attr-defined]
+
+
+def ancestors(node: ast.AST) -> Iterable[ast.AST]:
+    cur = getattr(node, "lint_parent", None)
+    while cur is not None:
+        yield cur
+        cur = getattr(cur, "lint_parent", None)

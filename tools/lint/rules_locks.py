@@ -1,0 +1,359 @@
+"""Lock-discipline rules for ``core/server.py``-style classes.
+
+The store server's thread-safety contract is simple and must stay
+machine-checkable:
+
+- every mutation of the table/registry/WAL dicts happens inside a
+  ``with`` on the owning lock (``self._table_locks[...]`` for slab
+  state, ``self._lock``/``self._meta_event`` for registries and
+  metadata);
+- a method whose *caller* holds the lock (the capture-txn helpers) is
+  explicitly marked ``# lint: holds-lock`` on its ``def`` line, and its
+  call sites must sit inside a lock or capture context;
+- acquiring two table locks uses the canonical ``first, second =
+  sorted(...)`` order, in a single ``with`` statement;
+- ``_ops_lock`` (the stats counter mutex) is a leaf: nothing else is
+  acquired while holding it.
+
+The runtime twin of these rules is ``repro.core.locktrack.LockTracker``,
+which records the realised lock-order graph during the chaos suite and
+fails on cycles.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from .engine import (Finding, HOLDS_LOCK_MARKER, Rule, add_parents,
+                     ancestors, register)
+
+__all__ = ["GUARDED_ATTRS", "MUTATOR_METHODS", "LockMutationRule",
+           "LockOrderRule", "LockLeafRule", "LockHoldsRule"]
+
+#: ``self.<attr>`` collections whose mutation requires a held lock.
+GUARDED_ATTRS = frozenset({
+    "_specs", "_state", "_counts", "_placements", "_models", "_model_raw",
+    "_model_versions", "_meta", "_gathers", "_wal", "_wal_base", "_acked",
+    "_recovery", "_tables", "_watermarks",
+})
+
+#: Method names that mutate the collection they are called on.
+MUTATOR_METHODS = frozenset({
+    "append", "add", "pop", "popitem", "clear", "update", "remove",
+    "discard", "extend", "insert", "setdefault",
+})
+
+_GUARD_ATTRS = ("_lock", "_meta_event", "_ops_lock")
+
+
+def _self_attr(node: ast.AST) -> str | None:
+    """``self.<attr>`` -> attr name (else None)."""
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _root_self_attr(node: ast.AST) -> str | None:
+    """Peel Subscript/Attribute wrappers down to a rooting ``self.<attr>``.
+
+    ``self._wal[t].append`` -> ``_wal``; ``txn.state`` -> None.
+    """
+    while True:
+        direct = _self_attr(node)
+        if direct is not None:
+            return direct
+        if isinstance(node, (ast.Subscript, ast.Attribute)):
+            node = node.value
+            continue
+        return None
+
+
+def _is_table_lock_subscript(node: ast.AST) -> bool:
+    """``<obj>._table_locks[...]`` (any root object, not just self)."""
+    return (isinstance(node, ast.Subscript)
+            and isinstance(node.value, ast.Attribute)
+            and node.value.attr == "_table_locks")
+
+
+def _is_guard_expr(node: ast.AST) -> bool:
+    if _is_table_lock_subscript(node):
+        return True
+    return (isinstance(node, ast.Attribute)
+            and node.attr in _GUARD_ATTRS)
+
+
+def _with_has_guard(node: ast.With) -> bool:
+    return any(_is_guard_expr(item.context_expr) for item in node.items)
+
+
+def _under_guard(node: ast.AST) -> bool:
+    return any(isinstance(a, ast.With) and _with_has_guard(a)
+               for a in ancestors(node))
+
+
+def _has_marker(lines: list[str], func: ast.FunctionDef) -> bool:
+    for ln in (func.lineno, func.lineno - 1):
+        if 1 <= ln <= len(lines) and HOLDS_LOCK_MARKER in lines[ln - 1]:
+            return True
+    return False
+
+
+def _mutation_sites(func: ast.FunctionDef):
+    """Yield ``(node, attr)`` for every guarded-attribute mutation."""
+    for node in ast.walk(func):
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                attr = _root_self_attr(t)
+                if attr in GUARDED_ATTRS:
+                    yield node, attr
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                attr = _root_self_attr(t)
+                if attr in GUARDED_ATTRS:
+                    yield node, attr
+        elif isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in MUTATOR_METHODS:
+            attr = _root_self_attr(node.func.value)
+            if attr in GUARDED_ATTRS:
+                yield node, attr
+
+
+def _lock_classes(tree: ast.Module):
+    """Classes that own a ``self._table_locks`` map (lock discipline
+    applies to these; plain classes are out of scope)."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.Assign, ast.AnnAssign)):
+                    targets = sub.targets if isinstance(sub, ast.Assign) \
+                        else [sub.target]
+                    if any(_self_attr(t) == "_table_locks"
+                           for t in targets):
+                        yield node
+                        break
+
+
+@register
+class LockMutationRule(Rule):
+    """Guarded state mutated outside any lock context."""
+
+    id = "lock-mutation"
+    summary = ("mutation of guarded server state (tables/WAL/registry) "
+               "outside a with-lock context")
+
+    def check_file(self, path: str, src: str,
+                   tree: ast.Module) -> list[Finding]:
+        add_parents(tree)
+        lines = src.splitlines()
+        findings = []
+        for cls in _lock_classes(tree):
+            for func in [n for n in ast.walk(cls)
+                         if isinstance(n, ast.FunctionDef)]:
+                if func.name == "__init__" or _has_marker(lines, func):
+                    continue
+                for node, attr in _mutation_sites(func):
+                    if not _under_guard(node):
+                        findings.append(Finding(
+                            self.id, path, node.lineno,
+                            f"{cls.name}.{func.name} mutates self.{attr} "
+                            f"outside a lock context (wrap in `with "
+                            f"self._lock:` / `with self._table_locks"
+                            f"[...]:`, or mark the def `# {HOLDS_LOCK_MARKER}`"
+                            f" if the caller holds it)"))
+        return findings
+
+
+def _sorted_unpack_orders(func: ast.FunctionDef) -> list[tuple[str, ...]]:
+    """Name tuples bound by ``a, b = sorted(...)`` in ``func``."""
+    orders = []
+    for node in ast.walk(func):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Tuple) and \
+                isinstance(node.value, ast.Call) and \
+                isinstance(node.value.func, ast.Name) and \
+                node.value.func.id == "sorted":
+            names = tuple(e.id for e in node.targets[0].elts
+                          if isinstance(e, ast.Name))
+            if len(names) == len(node.targets[0].elts):
+                orders.append(names)
+    return orders
+
+
+@register
+class LockOrderRule(Rule):
+    """Multi-table-lock acquisition not in canonical sorted order."""
+
+    id = "lock-order"
+    summary = ("two table locks must be taken in one `with`, indexed by "
+               "names from a `first, second = sorted(...)` unpack")
+
+    def check_file(self, path: str, src: str,
+                   tree: ast.Module) -> list[Finding]:
+        add_parents(tree)
+        findings = []
+        funcs = [n for n in ast.walk(tree)
+                 if isinstance(n, ast.FunctionDef)]
+        for func in funcs:
+            orders = _sorted_unpack_orders(func)
+            for node in ast.walk(func):
+                if not isinstance(node, ast.With):
+                    continue
+                locks = [i.context_expr for i in node.items
+                         if _is_table_lock_subscript(i.context_expr)]
+                if len(locks) >= 2:
+                    findings.extend(self._check_multi(
+                        path, node, locks, orders))
+                elif len(locks) == 1 and self._nested_inside_table_lock(
+                        node):
+                    findings.append(Finding(
+                        self.id, path, node.lineno,
+                        "nested table-lock acquisition: take both locks "
+                        "in ONE `with`, ordered by `sorted(...)` "
+                        "(deadlock risk otherwise)"))
+        return findings
+
+    @staticmethod
+    def _nested_inside_table_lock(node: ast.With) -> bool:
+        return any(isinstance(a, ast.With) and
+                   any(_is_table_lock_subscript(i.context_expr)
+                       for i in a.items)
+                   for a in ancestors(node))
+
+    def _check_multi(self, path: str, node: ast.With, locks,
+                     orders) -> list[Finding]:
+        idx_names = []
+        for lock in locks:
+            sl = lock.slice
+            if not isinstance(sl, ast.Name):
+                return [Finding(
+                    self.id, path, node.lineno,
+                    "multi-lock acquisition must index by names bound "
+                    "from `first, second = sorted(...)`, not literals "
+                    "or expressions")]
+            idx_names.append(sl.id)
+        seq = tuple(idx_names)
+        for order in orders:
+            if seq == order[:len(seq)]:
+                return []
+        return [Finding(
+            self.id, path, node.lineno,
+            f"table locks acquired in order {seq} with no matching "
+            f"`{', '.join(seq)} = sorted(...)` unpack in this function "
+            f"(canonical order prevents AB/BA deadlock)")]
+
+
+@register
+class LockLeafRule(Rule):
+    """``_ops_lock`` must be a leaf in the lock-order graph."""
+
+    id = "lock-leaf"
+    summary = ("no lock may be acquired while holding `_ops_lock` "
+               "(the stats mutex is a leaf)")
+
+    def check_file(self, path: str, src: str,
+                   tree: ast.Module) -> list[Finding]:
+        findings = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.With):
+                continue
+            holds_ops = any(
+                isinstance(i.context_expr, ast.Attribute) and
+                i.context_expr.attr == "_ops_lock"
+                for i in node.items)
+            if not holds_ops:
+                continue
+            for sub in ast.walk(node):
+                if sub is node:
+                    continue
+                if isinstance(sub, ast.With):
+                    for item in sub.items:
+                        e = item.context_expr
+                        if _is_guard_expr(e) and not (
+                                isinstance(e, ast.Attribute) and
+                                e.attr == "_ops_lock"):
+                            findings.append(Finding(
+                                self.id, path, sub.lineno,
+                                "lock acquired while holding _ops_lock; "
+                                "_ops_lock must stay a leaf"))
+                if isinstance(sub, ast.Call) and \
+                        isinstance(sub.func, ast.Attribute) and \
+                        sub.func.attr == "acquire" and \
+                        _root_self_attr(sub.func.value) in (
+                            "_lock", "_meta_event", "_table_locks"):
+                    findings.append(Finding(
+                        self.id, path, sub.lineno,
+                        "lock.acquire() while holding _ops_lock; "
+                        "_ops_lock must stay a leaf"))
+        return findings
+
+
+def _marked_methods(tree: ast.Module, lines: list[str]) -> set[str]:
+    return {n.name for n in ast.walk(tree)
+            if isinstance(n, ast.FunctionDef) and _has_marker(lines, n)}
+
+
+def _call_in_lock_context(node: ast.Call) -> bool:
+    """Lexically inside a `with` on a lock or a capture txn."""
+    for a in ancestors(node):
+        if not isinstance(a, ast.With):
+            continue
+        for item in a.items:
+            e = item.context_expr
+            if _is_guard_expr(e):
+                return True
+            if isinstance(e, ast.Call) and \
+                    isinstance(e.func, ast.Attribute) and \
+                    e.func.attr == "capture":
+                return True
+    return False
+
+
+@register
+class LockHoldsRule(Rule):
+    """Calls to holds-lock-marked methods outside any lock context."""
+
+    id = "lock-holds"
+    summary = ("a `# lint: holds-lock` method may only be called inside "
+               "a with-lock or `with ...capture(...)` context")
+    scope = "project"
+
+    def check_project(self, root: pathlib.Path) -> list[Finding]:
+        modules = []
+        for sub in ("src/repro", "tools"):
+            base = root / sub
+            if base.is_dir():
+                for p in sorted(base.rglob("*.py")):
+                    try:
+                        src = p.read_text()
+                        tree = ast.parse(src)
+                    except (OSError, SyntaxError):
+                        continue
+                    modules.append((str(p.relative_to(root)), src, tree))
+        return self.check_modules(modules)
+
+    def check_modules(self, modules) -> list[Finding]:
+        marked: set[str] = set()
+        for _path, src, tree in modules:
+            marked |= _marked_methods(tree, src.splitlines())
+        if not marked:
+            return []
+        findings = []
+        for path, _src, tree in modules:
+            add_parents(tree)
+            for node in ast.walk(tree):
+                if isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in marked and \
+                        not _call_in_lock_context(node):
+                    # skip the defining `def` site itself
+                    findings.append(Finding(
+                        self.id, path, node.lineno,
+                        f"call to caller-holds-lock method "
+                        f"{node.func.attr!r} outside any lock/capture "
+                        f"context"))
+        return findings

@@ -1,0 +1,216 @@
+"""Plan <-> runtime <-> fault-walk verb-parity rules.
+
+``StoreServer.stats()["op_count"]`` is the measured side of every
+dispatch prediction, so the set of verbs that increment it is a public
+contract.  Two drift hazards are checked statically:
+
+- ``parity-verb``: every ``op_count``-incrementing public verb on
+  ``StoreServer`` must be *declared* in ``insitu/plan.py`` — either in
+  ``VERB_CAUSES`` (mapping it to the dispatch-prediction cause labels
+  that account for it) or in ``UNPLANNED_VERBS`` (utility verbs no
+  planned component issues).  A new verb cannot silently skew
+  ``Plan.explain()``; a deleted verb cannot leave a stale declaration.
+
+- ``parity-fault``: every verb routed through the client's fault
+  boundary (``Client._call_verb`` / ``inj.on_verb``) must appear in
+  ``faults.simulate_overhead``'s walk, so injected-fault overhead
+  predictions cover every retryable call site.
+
+Both rules are pure AST extraction — no imports of the checked modules.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from .engine import Finding, Rule, register
+
+__all__ = ["ParityVerbRule", "ParityFaultRule", "extract_bump_verbs",
+           "extract_plan_declarations", "extract_boundary_verbs",
+           "extract_walk_verbs"]
+
+SERVER_PATH = "src/repro/core/server.py"
+PLAN_PATH = "src/repro/insitu/plan.py"
+CLIENT_PATH = "src/repro/core/client.py"
+FAULTS_PATH = "src/repro/core/faults.py"
+
+
+def extract_bump_verbs(server_src: str) -> set[str]:
+    """Public ``StoreServer`` methods whose body calls ``self._bump_ops``."""
+    tree = ast.parse(server_src)
+    verbs: set[str] = set()
+    for cls in [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]:
+        for func in [n for n in cls.body
+                     if isinstance(n, ast.FunctionDef)]:
+            if func.name.startswith("_"):
+                continue
+            for node in ast.walk(func):
+                if isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "_bump_ops":
+                    verbs.add(func.name)
+                    break
+    return verbs
+
+
+def _string_dict(node: ast.Dict) -> dict[str, tuple[str, ...]]:
+    out: dict[str, tuple[str, ...]] = {}
+    for k, v in zip(node.keys, node.values):
+        if not (isinstance(k, ast.Constant) and isinstance(k.value, str)):
+            continue
+        vals: list[str] = []
+        if isinstance(v, (ast.Tuple, ast.List)):
+            vals = [e.value for e in v.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)]
+        out[k.value] = tuple(vals)
+    return out
+
+
+def extract_plan_declarations(
+        plan_src: str) -> tuple[dict[str, tuple[str, ...]],
+                                tuple[str, ...], set[str]]:
+    """``(VERB_CAUSES, UNPLANNED_VERBS, known_causes)`` from plan.py.
+
+    ``known_causes`` is every string literal inside a top-level function
+    named ``*_dispatches`` — the cause labels the prediction layer can
+    actually emit.
+    """
+    tree = ast.parse(plan_src)
+    verb_causes: dict[str, tuple[str, ...]] = {}
+    unplanned: tuple[str, ...] = ()
+    known: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            names = [t.id for t in targets if isinstance(t, ast.Name)]
+            if "VERB_CAUSES" in names and isinstance(node.value, ast.Dict):
+                verb_causes = _string_dict(node.value)
+            if "UNPLANNED_VERBS" in names and \
+                    isinstance(node.value, (ast.Tuple, ast.List)):
+                unplanned = tuple(
+                    e.value for e in node.value.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, str))
+        elif isinstance(node, ast.FunctionDef) and \
+                node.name.endswith("_dispatches"):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Constant) and \
+                        isinstance(sub.value, str):
+                    known.add(sub.value)
+    return verb_causes, unplanned, known
+
+
+def extract_boundary_verbs(client_src: str) -> set[str]:
+    """Verb strings the client routes through the fault boundary."""
+    tree = ast.parse(client_src)
+    verbs: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr in ("_call_verb", "on_verb") and node.args:
+            a = node.args[0]
+            if isinstance(a, ast.Constant) and isinstance(a.value, str):
+                verbs.add(a.value)
+    return verbs
+
+
+def extract_walk_verbs(faults_src: str) -> set[str]:
+    """Verb strings ``simulate_overhead``'s walk charges overhead to."""
+    tree = ast.parse(faults_src)
+    verbs: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        arg = None
+        if isinstance(node.func, ast.Name) and \
+                node.func.id == "_verb" and len(node.args) >= 2:
+            arg = node.args[1]
+        elif isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "on_verb" and node.args:
+            arg = node.args[0]
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+            verbs.add(arg.value)
+    return verbs
+
+
+def check_verb_parity(server_src: str, plan_src: str,
+                      server_path: str = SERVER_PATH,
+                      plan_path: str = PLAN_PATH) -> list[Finding]:
+    verbs = extract_bump_verbs(server_src)
+    causes, unplanned, known = extract_plan_declarations(plan_src)
+    findings = []
+    if not causes and not unplanned:
+        return [Finding("parity-verb", plan_path, 1,
+                        "plan.py declares no VERB_CAUSES/UNPLANNED_VERBS; "
+                        "the op_count verb contract is unchecked")]
+    declared = set(causes) | set(unplanned)
+    for verb in sorted(verbs - declared):
+        findings.append(Finding(
+            "parity-verb", server_path, 1,
+            f"StoreServer.{verb} increments op_count but is declared in "
+            f"neither VERB_CAUSES nor UNPLANNED_VERBS in plan.py — "
+            f"Plan.explain() would silently miscount it"))
+    for verb in sorted(declared - verbs):
+        findings.append(Finding(
+            "parity-verb", plan_path, 1,
+            f"plan.py declares verb {verb!r} but StoreServer has no such "
+            f"op_count-incrementing method (stale declaration)"))
+    for verb in sorted(set(causes) & set(unplanned)):
+        findings.append(Finding(
+            "parity-verb", plan_path, 1,
+            f"verb {verb!r} appears in both VERB_CAUSES and "
+            f"UNPLANNED_VERBS (pick one)"))
+    for verb, vc in sorted(causes.items()):
+        for cause in vc:
+            if cause not in known:
+                findings.append(Finding(
+                    "parity-verb", plan_path, 1,
+                    f"VERB_CAUSES[{verb!r}] names cause {cause!r} which "
+                    f"no *_dispatches prediction emits"))
+    return findings
+
+
+def check_fault_parity(client_src: str, faults_src: str,
+                       client_path: str = CLIENT_PATH,
+                       faults_path: str = FAULTS_PATH) -> list[Finding]:
+    boundary = extract_boundary_verbs(client_src)
+    walk = extract_walk_verbs(faults_src)
+    return [Finding(
+        "parity-fault", faults_path, 1,
+        f"client fault-boundary verb {v!r} never appears in "
+        f"simulate_overhead's walk — injected-fault overhead on it is "
+        f"unpredicted") for v in sorted(boundary - walk)]
+
+
+@register
+class ParityVerbRule(Rule):
+    id = "parity-verb"
+    summary = ("every op_count-incrementing StoreServer verb is declared "
+               "in plan.py VERB_CAUSES or UNPLANNED_VERBS (and vice versa)")
+    scope = "project"
+
+    def check_project(self, root: pathlib.Path) -> list[Finding]:
+        server = (root / SERVER_PATH)
+        plan = (root / PLAN_PATH)
+        if not server.is_file() or not plan.is_file():
+            return []
+        return check_verb_parity(server.read_text(), plan.read_text())
+
+
+@register
+class ParityFaultRule(Rule):
+    id = "parity-fault"
+    summary = ("every client fault-boundary verb appears in "
+               "faults.simulate_overhead's walk")
+    scope = "project"
+
+    def check_project(self, root: pathlib.Path) -> list[Finding]:
+        client = (root / CLIENT_PATH)
+        faults = (root / FAULTS_PATH)
+        if not client.is_file() or not faults.is_file():
+            return []
+        return check_fault_parity(client.read_text(), faults.read_text())

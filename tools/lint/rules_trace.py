@@ -1,0 +1,202 @@
+"""Trace-safety rule: fused bodies must stay pure device programs.
+
+``capture_scan[_collect][_multi]`` and ``serve_batch`` owe their
+one-dispatch guarantees to bodies that trace once and replay forever.
+A body handed to ``lax.scan`` / ``shard_map`` / ``pallas_call`` that
+calls host clocks, host RNGs, threading, or forces a host sync
+(``.item()``, ``float()``/``np.asarray`` on a traced argument) either
+breaks under jit or silently bakes a host value into the compiled
+program.  This rule finds those calls statically.
+
+Name resolution is deliberately conservative: only bodies that are
+local/module ``def``s, lambdas, or ``functools.partial`` over those are
+inspected, and ``random.*`` only counts when ``random`` resolves to the
+*stdlib* module in that file (``from jax import random`` is fine).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .engine import Finding, Rule, add_parents, register
+
+__all__ = ["TraceHostRule", "TRACE_ENTRY_POINTS", "HOST_MODULES"]
+
+#: Callable names whose FIRST positional argument is a traced body.
+TRACE_ENTRY_POINTS = frozenset({"scan", "shard_map", "pallas_call"})
+
+#: Module paths whose calls are host effects inside a traced body.
+HOST_MODULES = frozenset({"time", "random", "threading", "numpy.random"})
+
+#: Host-sync constructors: calling these on a traced body argument
+#: forces a device->host transfer at trace time.
+_SYNC_CALLS = frozenset({"float", "int", "bool"})
+_NUMPY_SYNC_ATTRS = frozenset({"asarray", "array"})
+
+
+def _imports(tree: ast.Module) -> dict[str, str]:
+    """Local name -> dotted module path for module imports."""
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """Attribute chain -> dotted string (``np.random.normal`` ...)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _resolve_module(dotted: str, imports: dict[str, str]) -> str | None:
+    """Resolve the module a call chain roots at, through import aliases."""
+    head, _, rest = dotted.partition(".")
+    base = imports.get(head)
+    if base is None:
+        return None
+    return f"{base}.{rest}" if rest else base
+
+
+def _entry_name(func: ast.AST) -> str | None:
+    """scan/shard_map/pallas_call regardless of alias depth
+    (``lax.scan``, ``jax.lax.scan``, ``pl.pallas_call``, bare name)."""
+    if isinstance(func, ast.Attribute) and func.attr in TRACE_ENTRY_POINTS:
+        return func.attr
+    if isinstance(func, ast.Name) and func.id in TRACE_ENTRY_POINTS:
+        return func.id
+    return None
+
+
+def _local_callables(tree: ast.Module) -> dict[str, ast.AST]:
+    """name -> FunctionDef/Lambda for every def and ``x = lambda`` bind."""
+    out: dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            out[node.name] = node
+        elif isinstance(node, ast.Assign) and \
+                isinstance(node.value, ast.Lambda):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out[t.id] = node.value
+    return out
+
+
+def _resolve_body(arg: ast.AST,
+                  local: dict[str, ast.AST]) -> ast.AST | None:
+    if isinstance(arg, ast.Lambda):
+        return arg
+    if isinstance(arg, ast.Name):
+        return local.get(arg.id)
+    if isinstance(arg, ast.Call):
+        # functools.partial(f, ...) / partial(f, ...)
+        fname = _dotted(arg.func) or ""
+        if fname.split(".")[-1] == "partial" and arg.args:
+            return _resolve_body(arg.args[0], local)
+    return None
+
+
+def _body_params(body: ast.AST) -> set[str]:
+    args = body.args
+    names = {a.arg for a in list(args.posonlyargs) + list(args.args)
+             + list(args.kwonlyargs)}
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    return names
+
+
+@register
+class TraceHostRule(Rule):
+    """Host effects / host syncs inside scan, shard_map, pallas bodies."""
+
+    id = "trace-host"
+    summary = ("no time./random./np.random./threading. calls, .item(), "
+               "or float()/np.asarray on traced args inside "
+               "scan/shard_map/pallas bodies")
+
+    def check_file(self, path: str, src: str,
+                   tree: ast.Module) -> list[Finding]:
+        add_parents(tree)
+        imports = _imports(tree)
+        local = _local_callables(tree)
+        findings: list[Finding] = []
+        seen_bodies: set[int] = set()
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            entry = _entry_name(node.func)
+            if entry is None or not node.args:
+                continue
+            body = _resolve_body(node.args[0], local)
+            if body is None or id(body) in seen_bodies:
+                continue
+            seen_bodies.add(id(body))
+            findings.extend(self._check_body(path, entry, body, imports))
+        return findings
+
+    def _check_body(self, path: str, entry: str, body: ast.AST,
+                    imports: dict[str, str]) -> list[Finding]:
+        params = _body_params(body)
+        findings = []
+        for node in ast.walk(body):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func)
+            if dotted is not None and "." in dotted:
+                mod = _resolve_module(dotted, imports)
+                if mod is not None:
+                    for host in HOST_MODULES:
+                        if mod == host or mod.startswith(host + "."):
+                            findings.append(Finding(
+                                self.id, path, node.lineno,
+                                f"{dotted}() inside a {entry} body is a "
+                                f"host effect; the body traces once and "
+                                f"replays on device"))
+                            break
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "item":
+                findings.append(Finding(
+                    self.id, path, node.lineno,
+                    f".item() inside a {entry} body forces a host sync"))
+            findings.extend(
+                self._check_sync(path, entry, node, params, imports))
+        return findings
+
+    def _check_sync(self, path: str, entry: str, node: ast.Call,
+                    params: set[str],
+                    imports: dict[str, str]) -> list[Finding]:
+        traced_arg = (len(node.args) >= 1 and
+                      isinstance(node.args[0], ast.Name) and
+                      node.args[0].id in params)
+        if not traced_arg:
+            return []
+        if isinstance(node.func, ast.Name) and \
+                node.func.id in _SYNC_CALLS:
+            return [Finding(
+                self.id, path, node.lineno,
+                f"{node.func.id}() on traced argument "
+                f"{node.args[0].id!r} inside a {entry} body bakes a "
+                f"host value into the compiled program")]
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _NUMPY_SYNC_ATTRS:
+            dotted = _dotted(node.func) or ""
+            mod = _resolve_module(dotted, imports)
+            if mod is not None and mod.startswith("numpy."):
+                return [Finding(
+                    self.id, path, node.lineno,
+                    f"{dotted}() on traced argument "
+                    f"{node.args[0].id!r} inside a {entry} body forces "
+                    f"a host sync")]
+        return []

@@ -1,0 +1,136 @@
+#!/usr/bin/env python
+"""repro-lint runner: static analysis + collective budgets + type check.
+
+Usage (from the repo root)::
+
+    python tools/run_static_analysis.py              # full pass
+    python tools/run_static_analysis.py --list-rules # stable rule table
+    python tools/run_static_analysis.py --no-budget  # AST rules only
+
+Phases:
+
+1. AST rules over ``src/repro`` and ``tools`` (lock discipline, trace
+   safety, verb parity) — see ``tools/lint/``.
+2. Collective-budget manifest: compiles the tiny tier grid with
+   ``plan(hlo=True)`` and checks measured collective counts against
+   ``tools/lint/budgets.py`` (skippable with ``--no-budget``; needs jax).
+3. mypy over ``core/``, ``insitu/`` and ``tools/`` per ``mypy.ini`` —
+   skipped with a note when mypy is not installed (CI installs it).
+
+Exit codes: 0 clean, 1 lint findings, 2 budget violations, 3 internal
+error, 4 type-check failures.  The last stdout line is a JSON summary
+(``{"tool": "repro-lint", ...}``) for CI aggregation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+sys.path.insert(0, str(ROOT / "src"))
+
+from lint.engine import all_rules, lint_tree  # noqa: E402
+
+#: Phases that are not AST rules but still have stable ids so they can
+#: be listed, suppressed in CI config, and documented alongside rules.
+EXTRA_PHASES = (
+    ("budget-collective",
+     "per-tier collective counts stay within the declarative manifest "
+     "(tools/lint/budgets.py), measured on compiled HLO"),
+    ("type-check",
+     "mypy passes over core/, insitu/ and tools/ per mypy.ini"),
+)
+
+
+def list_rules() -> None:
+    rows = [(r.id, r.summary) for r in all_rules()]
+    rows.extend(EXTRA_PHASES)
+    for rid, summary in sorted(rows):
+        print(f"{rid:20s} {summary}")
+
+
+def run_mypy() -> str:
+    """Run mypy when available.  Returns 'ok', 'failed' or 'skipped'."""
+    if shutil.which("mypy") is None:
+        try:
+            import mypy  # noqa: F401
+        except ImportError:
+            print("type-check: mypy not installed — skipped "
+                  "(the static-analysis CI job installs and runs it)")
+            return "skipped"
+    proc = subprocess.run(
+        [sys.executable, "-m", "mypy", "--config-file",
+         str(ROOT / "mypy.ini")],
+        cwd=ROOT, capture_output=True, text=True)
+    if proc.stdout:
+        print(proc.stdout, end="")
+    if proc.returncode != 0:
+        if proc.stderr:
+            print(proc.stderr, end="", file=sys.stderr)
+        return "failed"
+    return "ok"
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the stable rule table and exit")
+    parser.add_argument("--no-budget", action="store_true",
+                        help="skip the compiled collective-budget phase")
+    parser.add_argument("--no-mypy", action="store_true",
+                        help="skip the type-check phase")
+    parser.add_argument("--root", default=str(ROOT),
+                        help="repo root to analyse")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        list_rules()
+        return 0
+
+    root = pathlib.Path(args.root)
+    summary: dict = {"tool": "repro-lint", "status": "ok",
+                     "findings": 0, "budget_violations": 0,
+                     "type_check": "skipped"}
+
+    findings = lint_tree(root)
+    for f in findings:
+        print(f)
+    summary["findings"] = len(findings)
+
+    budget_violations = []
+    if not args.no_budget:
+        from lint.budgets import check_budgets
+        budget_violations = check_budgets()
+        for f in budget_violations:
+            print(f)
+        summary["budget_violations"] = len(budget_violations)
+
+    if not args.no_mypy:
+        summary["type_check"] = run_mypy()
+
+    code = 0
+    if findings:
+        code = 1
+    elif budget_violations:
+        code = 2
+    elif summary["type_check"] == "failed":
+        code = 4
+    summary["status"] = "ok" if code == 0 else "fail"
+    print(json.dumps(summary, sort_keys=True))
+    return code
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except Exception as exc:  # noqa: BLE001 — runner boundary
+        print(f"repro-lint internal error: {exc!r}", file=sys.stderr)
+        print(json.dumps({"tool": "repro-lint", "status": "error",
+                          "error": repr(exc)}))
+        sys.exit(3)
